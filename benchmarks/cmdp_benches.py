@@ -1,0 +1,73 @@
+"""CMDP cartpole benchmarks: paper Figures 3, 4 and Table 1.
+
+CPU-scaled: fewer rounds/episodes than the paper (which trains 500 rounds x
+1000-step batches); trends are the validation target.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from benchmarks.common import emit
+from repro.configs.base import CompressorConfig, FedConfig, SwitchConfig
+from repro.core import fedsgm
+from repro.tasks import cmdp
+
+N, ROUNDS, EPISODES, HORIZON = 6, 80, 4, 150
+
+
+def _run(cfg, rounds=ROUNDS, seed=0):
+    key = jax.random.PRNGKey(seed)
+    params = cmdp.init_params(key)
+    budgets = cmdp.client_budgets(cfg.n_clients)
+    loss_pair = cmdp.make_loss_pair(n_episodes=EPISODES, horizon=HORIZON)
+    state = fedsgm.init_state(params, cfg)
+    t0 = time.perf_counter()
+    state, hist = fedsgm.run_rounds(
+        state, lambda t, k: (jax.random.split(k, cfg.n_clients), budgets),
+        loss_pair, cfg, T=rounds)
+    us = (time.perf_counter() - t0) / rounds * 1e6
+    ev = cmdp.eval_policy(state.w, jax.random.PRNGKey(99), 10, HORIZON)
+    return us, ev
+
+
+def _cfg(**kw):
+    base = dict(n_clients=N, m=N, local_steps=1, lr=3e-4,
+                switch=SwitchConfig(mode="soft", eps=0.0, beta=1.0),
+                uplink=CompressorConfig(kind="none"),
+                downlink=CompressorConfig(kind="none"))
+    base.update(kw)
+    return FedConfig(**base)
+
+
+def fig3_fed_vs_centralized():
+    us, ev = _run(_cfg(m=max(1, int(0.7 * N)),
+                       uplink=CompressorConfig(kind="topk", ratio=0.5)))
+    emit("fig3_cmdp_federated", us,
+         f"reward={ev['reward']:.1f};cost={ev['cost']:.1f};budget=30")
+    us, ev = _run(_cfg(n_clients=1, m=1))
+    emit("fig3_cmdp_centralized", us,
+         f"reward={ev['reward']:.1f};cost={ev['cost']:.1f};budget=30")
+
+
+def fig4_participation():
+    for frac in (0.5, 1.0):
+        us, ev = _run(_cfg(m=max(1, int(frac * N))))
+        emit(f"fig4_cmdp_m{frac}", us,
+             f"reward={ev['reward']:.1f};cost={ev['cost']:.1f}")
+
+
+def table1_compression():
+    rows = [("nocomp", CompressorConfig(kind="none")),
+            ("float8", CompressorConfig(kind="quant", bits=8, block=512)),
+            ("float4", CompressorConfig(kind="quant", bits=4, block=512)),
+            ("topk0.5", CompressorConfig(kind="topk", ratio=0.5)),
+            ("topk0.25", CompressorConfig(kind="topk", ratio=0.25))]
+    for name, comp in rows:
+        us, ev = _run(_cfg(uplink=comp))
+        emit(f"table1_{name}", us,
+             f"reward={ev['reward']:.1f};cost={ev['cost']:.1f};budget=30")
+
+
+ALL = [fig3_fed_vs_centralized, fig4_participation, table1_compression]

@@ -1,0 +1,41 @@
+"""Communication-efficiency table: wire bytes per round per client for each
+compressor across the assigned architectures (the paper's core argument in
+bandwidth terms).  Analytic (message_bytes), no device allocation.
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import emit
+from repro import configs
+from repro.configs.base import CompressorConfig
+from repro.core.compression import message_bytes
+from repro.models import build
+
+COMPRESSORS = [
+    ("dense", CompressorConfig(kind="none")),
+    ("topk0.1", CompressorConfig(kind="topk", ratio=0.1)),
+    ("topk0.01", CompressorConfig(kind="topk", ratio=0.01)),
+    ("quant8", CompressorConfig(kind="quant", bits=8, block=2048)),
+    ("quant4", CompressorConfig(kind="quant", bits=4, block=2048)),
+    ("natural", CompressorConfig(kind="natural")),
+]
+
+ARCHS = ["smollm-360m", "qwen3-4b", "mamba2-130m", "deepseek-v2-236b"]
+
+
+def comm_table():
+    for arch in ARCHS:
+        cfg = configs.get_config(arch)
+        fns = build(cfg)
+        shapes = jax.eval_shape(lambda k: fns.init(k, cfg),
+                                jax.random.PRNGKey(0))
+        dense = message_bytes(shapes, CompressorConfig(kind="none"))
+        for name, comp in COMPRESSORS:
+            b = message_bytes(shapes, comp)
+            emit(f"comm_{arch}_{name}", 0.0,
+                 f"uplink_bytes={b};savings={1 - b / dense:.3f};"
+                 f"params={cfg.n_params()}")
+
+
+ALL = [comm_table]

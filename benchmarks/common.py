@@ -1,0 +1,21 @@
+"""Shared benchmark utilities.  Output contract: ``name,us_per_call,derived``
+CSV rows (one per measured configuration)."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def timed(fn, *args, warmup: int = 1, iters: int = 3):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = jax.block_until_ready(fn(*args))
+    us = (time.perf_counter() - t0) / iters * 1e6
+    return us, out
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,50 @@
+"""Fair-classification benchmark: paper Figure 7 (Appendix F.3)."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from benchmarks.common import emit
+from repro.configs.base import CompressorConfig, FedConfig, SwitchConfig
+from repro.core import baselines, fedsgm
+from repro.tasks import fair
+
+T, N, M, EPS = 200, 10, 5, 0.05
+
+
+def fig7_fair():
+    key = jax.random.PRNGKey(0)
+    (xs, ys, as_), (x, y, a) = fair.make_dataset(key, N)
+    loss_pair = fair.loss_pair_builder(dp_budget=0.0)
+    params0 = fair.init_params(key, xs.shape[-1])
+
+    for mode in ("hard", "soft"):
+        cfg = FedConfig(n_clients=N, m=M, local_steps=2, lr=0.05,
+                        switch=SwitchConfig(mode=mode, eps=EPS, beta=2 / EPS),
+                        uplink=CompressorConfig(kind="topk", ratio=0.25),
+                        downlink=CompressorConfig(kind="none"))
+        state = fedsgm.init_state(params0, cfg)
+        t0 = time.perf_counter()
+        state, hist = fedsgm.run_rounds(
+            state, lambda t, k: (xs, ys, as_), loss_pair, cfg, T=T)
+        us = (time.perf_counter() - t0) / T * 1e6
+        dp = fair.demographic_parity(state.w, x, y, a)
+        emit(f"fig7_fedsgm_{mode}", us,
+             f"bce={float(hist.f[-1]):.4f};dp={dp:.4f};eps={EPS}")
+
+    for rho in (0.1, 1.0, 10.0):
+        st = baselines.penalty_init(params0)
+        step = jax.jit(lambda s: baselines.penalty_round(
+            s, (xs, ys, as_), loss_pair, rho=rho, eps=EPS, lr=0.05,
+            local_steps=2, n_clients=N, m=M))
+        t0 = time.perf_counter()
+        for _ in range(T):
+            st, mx = step(st)
+        us = (time.perf_counter() - t0) / T * 1e6
+        dp = fair.demographic_parity(st.w, x, y, a)
+        emit(f"fig7_penalty_rho{rho}", us,
+             f"bce={float(mx['f']):.4f};dp={dp:.4f};eps={EPS}")
+
+
+ALL = [fig7_fair]

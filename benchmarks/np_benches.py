@@ -1,0 +1,131 @@
+"""NP-classification benchmarks: paper Figures 1, 2, 5, 6.
+
+Each function reproduces one figure's sweep and emits
+``name,us_per_round,derived`` rows (derived = the figure's headline metric).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs.base import CompressorConfig, FedConfig, SwitchConfig
+from repro.core import baselines, fedsgm, theory
+from repro.tasks import np_classification as npc
+
+EPS = 0.35
+T = 200
+
+
+def _setup(n=20):
+    key = jax.random.PRNGKey(0)
+    (xs, ys), test = npc.make_dataset(key, n_clients=n)
+    params = npc.init_params(key, xs.shape[-1])
+    return xs, ys, params
+
+
+def _run(cfg, xs, ys, params, T=T):
+    state = fedsgm.init_state(params, cfg)
+    t0 = time.perf_counter()
+    state, hist = fedsgm.run_rounds_scan(
+        state, (xs, ys), npc.loss_pair, cfg, T=T)
+    us = (time.perf_counter() - t0) / T * 1e6
+    wbar = fedsgm.averaged_iterate(state)
+    f, g = npc.loss_pair(wbar, (xs.reshape(-1, xs.shape[-1]), ys.reshape(-1)))
+    feas = float(np.mean(np.asarray(hist.g_hat) <= EPS))
+    return us, float(f), float(g), feas
+
+
+def _cfg(mode="hard", **kw):
+    base = dict(n_clients=20, m=10, local_steps=5, lr=0.1,
+                switch=SwitchConfig(mode=mode, eps=EPS, beta=theory.beta_min(EPS)),
+                uplink=CompressorConfig(kind="topk", ratio=0.1),
+                downlink=CompressorConfig(kind="topk", ratio=0.1))
+    base.update(kw)
+    return FedConfig(**base)
+
+
+def fig1_switching():
+    """Fig 1: hard vs soft switching progress (f, g of averaged iterate)."""
+    xs, ys, params = _setup()
+    for mode in ("hard", "soft"):
+        us, f, g, feas = _run(_cfg(mode), xs, ys, params)
+        emit(f"fig1_np_{mode}", us,
+             f"f_bar={f:.4f};g_bar={g:.4f};eps={EPS};feasible_frac={feas:.2f}")
+
+
+def fig2_local_updates():
+    """Fig 2 top: effect of E."""
+    xs, ys, params = _setup()
+    for E in (1, 5, 10):
+        us, f, g, _ = _run(_cfg(local_steps=E), xs, ys, params, T=80)
+        emit(f"fig2_E{E}", us, f"f_bar={f:.4f};g_bar={g:.4f}")
+
+
+def fig2_participation():
+    """Fig 2 middle: effect of m/n."""
+    xs, ys, params = _setup()
+    for m in (5, 10, 20):
+        us, f, g, _ = _run(_cfg(m=m), xs, ys, params, T=120)
+        emit(f"fig2_m{m}of20", us, f"f_bar={f:.4f};g_bar={g:.4f}")
+
+
+def fig2_compression():
+    """Fig 2 bottom: effect of K/d (with EF)."""
+    xs, ys, params = _setup()
+    for kd in (1.0, 0.5, 0.1):
+        kind = "none" if kd >= 1.0 else "topk"
+        us, f, g, _ = _run(
+            _cfg(uplink=CompressorConfig(kind=kind, ratio=kd),
+                 downlink=CompressorConfig(kind=kind, ratio=kd)),
+            xs, ys, params, T=150)
+        emit(f"fig2_topk{kd}", us, f"f_bar={f:.4f};g_bar={g:.4f}")
+
+
+def fig5_beta():
+    """Fig 5: soft-switching sharpness around the theoretical beta=2/eps."""
+    xs, ys, params = _setup()
+    for beta in (theory.beta_min(EPS) / 2, theory.beta_min(EPS),
+                 2 * theory.beta_min(EPS)):
+        us, f, g, feas = _run(
+            _cfg("soft", switch=SwitchConfig("soft", EPS, beta)),
+            xs, ys, params, T=150)
+        emit(f"fig5_beta{beta:.0f}", us,
+             f"f_bar={f:.4f};g_bar={g:.4f};feasible_frac={feas:.2f}")
+
+
+def fig6_penalty():
+    """Fig 6: FedSGM vs penalty-based FedAvg across rho."""
+    xs, ys, params = _setup()
+    us, f, g, _ = _run(_cfg("soft"), xs, ys, params, T=150)
+    emit("fig6_fedsgm_soft", us, f"f={f:.4f};g={g:.4f};eps={EPS}")
+    for rho in (0.1, 0.5, 5.0):
+        st = baselines.penalty_init(params)
+        step = jax.jit(lambda s: baselines.penalty_round(
+            s, (xs, ys), npc.loss_pair, rho=rho, eps=EPS, lr=0.1,
+            local_steps=5, n_clients=20, m=10))
+        t0 = time.perf_counter()
+        for _ in range(150):
+            st, _m = step(st)
+        us = (time.perf_counter() - t0) / 150 * 1e6
+        f, g = npc.loss_pair(st.w, (xs.reshape(-1, xs.shape[-1]), ys.reshape(-1)))
+        emit(f"fig6_penalty_rho{rho}", us,
+             f"f={float(f):.4f};g={float(g):.4f};eps={EPS}")
+
+
+def theory_rate():
+    """Validates the O(1/sqrt(T)) claim: gap(T) * sqrt(T) roughly constant."""
+    xs, ys, params = _setup()
+    gaps = {}
+    for Tn in (50, 200):
+        _, f, g, _ = _run(_cfg("hard"), xs, ys, params, T=Tn)
+        gaps[Tn] = max(f, g - EPS, 1e-4)
+    ratio = (gaps[50] * np.sqrt(50)) / (gaps[200] * np.sqrt(200))
+    emit("theory_rate_sqrtT", 0.0,
+         f"gap50={gaps[50]:.4f};gap200={gaps[200]:.4f};scaled_ratio={ratio:.2f}")
+
+
+ALL = [fig1_switching, fig2_local_updates, fig2_participation,
+       fig2_compression, fig5_beta, fig6_penalty, theory_rate]

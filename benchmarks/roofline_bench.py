@@ -1,0 +1,57 @@
+"""Roofline report: reads the dry-run sweep results (results/dryrun.jsonl)
+and emits one row per (arch x shape x mesh).  us_per_call is the dominant
+roofline term in microseconds (projected v5e step-time lower bound, not a
+CPU measurement).  Falls back to a live lowering of one small case when the
+sweep file is absent.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+from benchmarks.common import emit
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun.jsonl")
+
+
+def _rows():
+    seen = {}
+    if os.path.exists(RESULTS):
+        for line in open(RESULTS):
+            r = json.loads(line)
+            seen[(r["arch"], r["shape"], r["mesh"], r.get("comm", "dense"),
+                  r.get("local_steps", 1), r.get("uplink_ratio", 0.1))] = r
+    return list(seen.values())
+
+
+def roofline_table():
+    rows = _rows()
+    if not rows:
+        print("# results/dryrun.jsonl missing; running one live dry-run",
+              file=sys.stderr)
+        subprocess.run([sys.executable, "-m", "repro.launch.dryrun",
+                        "--arch", "smollm-360m", "--shape", "decode_32k",
+                        "--mesh", "single", "--append", RESULTS], check=False)
+        rows = _rows()
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        name = f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}"
+        if r.get("comm", "dense") != "dense" or r.get("local_steps", 1) != 1:
+            name += f"_{r.get('comm')}_E{r.get('local_steps')}"
+        if r["status"] == "skip":
+            emit(name, 0.0, f"skipped:{r['reason'][:60]}")
+            continue
+        if r["status"] != "ok":
+            emit(name, 0.0, f"status={r['status']}")
+            continue
+        t = r["roofline"]
+        dom_us = max(t["compute_s"], t["memory_s"], t["collective_s"]) * 1e6
+        emit(name, dom_us,
+             f"dominant={t['dominant']};compute_us={t['compute_s']*1e6:.1f};"
+             f"memory_us={t['memory_s']*1e6:.1f};"
+             f"collective_us={t['collective_s']*1e6:.1f};"
+             f"useful_flops_ratio={r.get('useful_flops_ratio', 0):.3f}")
+
+
+ALL = [roofline_table]

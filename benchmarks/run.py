@@ -1,0 +1,37 @@
+"""Benchmark harness -- one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Select suites with
+``python -m benchmarks.run [np] [cmdp] [fair] [kernels] [roofline]``.
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import cmdp_benches, comm_bench, fair_benches, \
+        kernel_benches, np_benches, roofline_bench
+
+    suites = {
+        "np": np_benches.ALL,
+        "cmdp": cmdp_benches.ALL,
+        "fair": fair_benches.ALL,
+        "kernels": kernel_benches.ALL,
+        "comm": comm_bench.ALL,
+        "roofline": roofline_bench.ALL,
+    }
+    want = [a for a in sys.argv[1:] if a in suites] or list(suites)
+    print("name,us_per_call,derived")
+    for suite in want:
+        for fn in suites[suite]:
+            try:
+                fn()
+            except Exception as e:  # noqa: BLE001
+                print(f"{suite}.{fn.__name__},0.0,ERROR:{type(e).__name__}:{e}",
+                      flush=True)
+                traceback.print_exc(file=sys.stderr)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,122 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from the sweep JSONLs.
+
+    PYTHONPATH=src python -m benchmarks.summarize [results/dryrun.jsonl]
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def load(path):
+    latest = {}
+    try:
+        for line in open(path):
+            r = json.loads(line)
+            k = (r["arch"], r["shape"], r["mesh"], r.get("comm", "dense"),
+                 r.get("local_steps", 1), r.get("uplink_ratio", 0.1),
+                 r.get("dtype", "default"), r.get("seq_shard", False))
+            latest[k] = r
+    except FileNotFoundError:
+        pass
+    return latest
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(b) < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}PB"
+
+
+def ms(s):
+    return f"{s*1e3:.2f}" if s is not None else "-"
+
+
+def dryrun_table(rows):
+    print("| arch | shape | mesh | status | bytes/device | HLO flops/dev |"
+          " collective bytes/dev |")
+    print("|---|---|---|---|---|---|---|")
+    for r in sorted(rows.values(), key=lambda r: (r["arch"], r["shape"],
+                                                  r["mesh"])):
+        if r.get("comm", "dense") != "dense" or r.get("local_steps", 1) != 1 \
+           or r.get("dtype", "default") != "default" or r.get("seq_shard"):
+            continue
+        if r["status"] == "skip":
+            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                  f"skip ({r['reason'][:48]}...) | - | - | - |")
+            continue
+        if r["status"] != "ok":
+            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                  f"**{r['status']}** | - | - | - |")
+            continue
+        mem = r["memory"]["total_per_device"]
+        cb = r["roofline"].get("collective_bytes_corrected",
+                               sum(v for k, v in r["collectives"].items()
+                                   if k not in ("count", "in_loop", "total")))
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok "
+              f"({r['compile_s']}s) | {fmt_bytes(mem)} | "
+              f"{r['cost']['flops']:.2e} | {fmt_bytes(cb)} |")
+
+
+def roofline_table(rows, mesh="single"):
+    print("| arch | shape | compute ms | memory ms | collective ms | "
+          "dominant | MODEL_FLOPS | useful/HLO |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in sorted(rows.values(), key=lambda r: (r["arch"], r["shape"])):
+        if r["mesh"] != mesh or r["status"] != "ok":
+            continue
+        if r.get("comm", "dense") != "dense" or r.get("local_steps", 1) != 1 \
+           or r.get("dtype", "default") != "default" or r.get("seq_shard"):
+            continue
+        t = r["roofline"]
+        print(f"| {r['arch']} | {r['shape']} | {ms(t['compute_s'])} | "
+              f"{ms(t['memory_s'])} | {ms(t['collective_s'])} | "
+              f"**{t['dominant']}** | {r['model_flops']:.2e} | "
+              f"{r.get('useful_flops_ratio', 0):.2f} |")
+
+
+def hillclimb_table(rows):
+    print("| arch | shape | mesh | variant | compute ms | memory ms | "
+          "collective ms | mem/device |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in sorted(rows.values(), key=lambda r: (r["arch"], r["shape"],
+                                                  r["mesh"],
+                                                  r.get("local_steps", 1))):
+        if r["status"] != "ok":
+            continue
+        var = []
+        if r.get("dtype", "default") not in ("default", None):
+            var.append(r["dtype"])
+        if r.get("seq_shard"):
+            var.append("seq-shard")
+        if r.get("comm") != "dense":
+            var.append(r.get("comm"))
+        if r.get("local_steps", 1) != 1:
+            var.append(f"E={r['local_steps']}")
+        if r.get("uplink_ratio", 0.1) != 0.1:
+            var.append(f"K/d={r['uplink_ratio']}")
+        t = r["roofline"]
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+              f"{'+'.join(var) or 'baseline'} | "
+              f"{ms(t['compute_s'])} | {ms(t['memory_s'])} | "
+              f"{ms(t['collective_s'])} | "
+              f"{fmt_bytes(r['memory']['total_per_device'])} |")
+
+
+if __name__ == "__main__":
+    path = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun.jsonl"
+    rows = load(path)
+    print(f"### Dry-run ({len(rows)} records)\n")
+    dryrun_table(rows)
+    print("\n### Roofline (single pod, 256 chips)\n")
+    roofline_table(rows)
+    print("\n### Roofline (multi-pod, 512 chips)\n")
+    roofline_table(rows, mesh="multi")
+    hc = load("results/hillclimb.jsonl")
+    if hc:
+        print("\n### Hillclimb variants\n")
+        hillclimb_table(hc)

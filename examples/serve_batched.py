@@ -1,0 +1,58 @@
+"""Batched serving demo: prefill a batch of prompts then decode tokens with
+any assigned architecture's reduced config (CPU-runnable).
+
+    PYTHONPATH=src python examples/serve_batched.py --arch gemma3-4b --steps 16
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.models import build
+
+
+def main(arch: str, batch: int, prompt_len: int, steps: int):
+    cfg = configs.get_reduced(arch)
+    fns = build(cfg)
+    key = jax.random.PRNGKey(0)
+    params = fns.init(key, cfg)
+    prompts = jax.random.randint(key, (batch, prompt_len), 0, cfg.vocab)
+    kw = {}
+    if cfg.family in ("vlm", "audio"):
+        kw["media"] = jax.random.normal(
+            key, (batch, cfg.n_media_tokens or cfg.n_audio_frames,
+                  cfg.d_media or cfg.d_model)) * 0.1
+
+    cap = prompt_len + steps
+    t0 = time.time()
+    logits, cache = jax.jit(
+        lambda p, t: fns.prefill(p, cfg, t, cap, **kw))(params, prompts)
+    print(f"[{arch}] prefill {prompts.shape} -> logits {logits.shape} "
+          f"({time.time()-t0:.2f}s inc. compile)")
+
+    decode = jax.jit(lambda p, tok, c, pos: fns.decode_step(p, cfg, tok, c, pos))
+    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    out = [tok]
+    t0 = time.time()
+    for i in range(steps):
+        logits, cache = decode(params, tok, cache, prompt_len + i)
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        out.append(tok)
+    dt = time.time() - t0
+    gen = jnp.concatenate(out, axis=1)
+    print(f"decoded {steps} steps x batch {batch}: "
+          f"{1000*dt/steps:.1f} ms/step (CPU, reduced config)")
+    print("sample tokens:", gen[0, :12].tolist())
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-4b",
+                    choices=configs.all_arch_names())
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--steps", type=int, default=16)
+    args = ap.parse_args()
+    main(args.arch, args.batch, args.prompt_len, args.steps)

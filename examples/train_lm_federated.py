@@ -1,0 +1,80 @@
+"""End-to-end driver: federated constrained LM training with FedSGM.
+
+Trains a transformer LM (reduced smollm family by default; --preset 100m for
+the ~100M-parameter config, CPU-hours) for a few hundred FedSGM rounds on
+synthetic heterogeneous token streams.  The functional constraint keeps the
+minority-domain (rare-token) perplexity under a budget while minimizing
+majority CE -- the NP-classification structure lifted to LM pretraining.
+
+    PYTHONPATH=src python examples/train_lm_federated.py --rounds 200
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+
+from repro import configs
+from repro.configs.base import CompressorConfig, FedConfig, SwitchConfig
+from repro.core import fedsgm
+from repro.data import synthetic
+from repro.models import build
+from repro.tasks import lm
+
+
+def get_cfg(preset: str):
+    if preset == "tiny":
+        return dataclasses.replace(
+            configs.get_reduced("smollm-360m"),
+            n_layers=2, d_model=128, d_ff=256, vocab=512)
+    if preset == "100m":
+        # ~100M-param smollm-family config (few hundred steps is CPU-days;
+        # provided for completeness -- the brief's end-to-end driver runs
+        # the paper's own tasks, see DESIGN.md §2)
+        return dataclasses.replace(
+            configs.get_config("smollm-360m"), n_layers=12, d_model=768,
+            d_ff=2048, n_heads=12, n_kv_heads=4, vocab=32000)
+    raise ValueError(preset)
+
+
+def main(rounds: int, preset: str, n: int = 8, seq: int = 64, b: int = 4):
+    cfg = get_cfg(preset)
+    fns = build(cfg)
+    key = jax.random.PRNGKey(0)
+    params = fns.init(key, cfg)
+    n_params = sum(p.size for p in jax.tree_util.tree_leaves(params))
+    print(f"model: {cfg.name} preset={preset} params={n_params/1e6:.2f}M")
+
+    fed = FedConfig(
+        n_clients=n, m=max(1, (3 * n) // 4), local_steps=2, lr=0.05,
+        switch=SwitchConfig(mode="soft", eps=0.0, beta=2.0),
+        uplink=CompressorConfig(kind="topk", ratio=0.1, block=2048),
+        downlink=CompressorConfig(kind="topk", ratio=0.25, block=2048),
+        comm="packed")
+    loss_pair = lm.make_loss_pair(fns.forward, cfg, budget=5.5)
+    state = fedsgm.init_state(params, fed)
+
+    def batch_fn(t, k):
+        toks, mask = synthetic.client_token_batches(
+            k, n, b, seq, cfg.vocab, hetero=1.0)
+        return lm.LMBatch(tokens=toks, minority_mask=mask)
+
+    t0 = time.time()
+    for chunk in range((rounds + 24) // 25):
+        state, hist = fedsgm.run_rounds(state, batch_fn, loss_pair, fed, T=25)
+        print(f"round {25*(chunk+1):4d}: majority CE={float(hist.f[-1]):.3f} "
+              f"minority gap g={float(hist.g_hat[-1]):+.3f} "
+              f"sigma={float(hist.sigma[-1]):.2f} "
+              f"({(time.time()-t0)/(25*(chunk+1)):.2f}s/round)")
+    info = fedsgm.round_bytes(params, fed)
+    print(f"uplink: {info['uplink']/1e3:.0f}kB/round/client "
+          f"({100*info['savings_up']:.0f}% saved); "
+          f"downlink {info['downlink']/1e3:.0f}kB")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=200)
+    ap.add_argument("--preset", default="tiny", choices=["tiny", "100m"])
+    args = ap.parse_args()
+    main(args.rounds, args.preset)

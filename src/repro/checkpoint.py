@@ -1,0 +1,90 @@
+"""Checkpointing: FedState / pytree save-restore (npz-based, no orbax in the
+container).  Leaf paths are flattened to '/'-joined keys; NamedTuple-tagged
+None leaves (x / e_up / wbar under the memory-scaled state) round-trip.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save(path: str, tree, metadata: Optional[dict] = None):
+    """Atomic checkpoint write: <path>.npz + <path>.json (metadata)."""
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    arrays = _flatten(tree)
+    # NB: np.savez appends ".npz" when the name lacks it -- keep the suffix
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".",
+                               suffix=".tmp.npz")
+    os.close(fd)
+    np.savez(tmp, **arrays)
+    os.replace(tmp, path + ".npz")
+    with open(path + ".json", "w") as f:
+        json.dump({"metadata": metadata or {}, "keys": sorted(arrays)}, f)
+
+
+def restore(path: str, like_tree):
+    """Restore into the structure of ``like_tree`` (shape/dtype checked)."""
+    data = np.load(path + ".npz")
+    flat = jax.tree_util.tree_flatten_with_path(like_tree)
+    leaves = []
+    for p, ref in flat[0]:
+        key = "/".join(str(getattr(q, "key", getattr(q, "idx", q))) for q in p)
+        arr = data[key]
+        if tuple(arr.shape) != tuple(ref.shape):
+            raise ValueError(f"checkpoint mismatch at {key}: "
+                             f"{arr.shape} vs {ref.shape}")
+        leaves.append(jnp.asarray(arr, dtype=ref.dtype))
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(like_tree), leaves)
+
+
+def latest_round(ckpt_dir: str) -> Optional[int]:
+    """Find the newest round_<t> checkpoint in a directory."""
+    if not os.path.isdir(ckpt_dir):
+        return None
+    rounds = []
+    for f in os.listdir(ckpt_dir):
+        if f.startswith("round_") and f.endswith(".npz"):
+            try:
+                rounds.append(int(f[len("round_"):-len(".npz")]))
+            except ValueError:
+                pass
+    return max(rounds) if rounds else None
+
+
+def save_round(ckpt_dir: str, t: int, state, keep: int = 3,
+               metadata: Optional[dict] = None):
+    """Save a round checkpoint and garbage-collect old ones."""
+    save(os.path.join(ckpt_dir, f"round_{t}"), state, metadata)
+    rounds = sorted(
+        int(f[len("round_"):-len(".npz")])
+        for f in os.listdir(ckpt_dir)
+        if f.startswith("round_") and f.endswith(".npz"))
+    for old in rounds[:-keep]:
+        for ext in (".npz", ".json"):
+            try:
+                os.remove(os.path.join(ckpt_dir, f"round_{old}{ext}"))
+            except OSError:
+                pass
+
+
+def restore_round(ckpt_dir: str, like_state, t: Optional[int] = None):
+    t = t if t is not None else latest_round(ckpt_dir)
+    if t is None:
+        return None, None
+    return restore(os.path.join(ckpt_dir, f"round_{t}"), like_state), t

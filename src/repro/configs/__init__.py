@@ -1,0 +1,48 @@
+"""Config registry: ``get_config(name)`` / ``get_reduced(name)``."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (INPUT_SHAPES, CompressorConfig, FedConfig,  # noqa: F401
+                                InputShape, ModelConfig, SwitchConfig, reduce_model)
+
+ARCHS = [
+    "qwen3_4b", "deepseek_v3_671b", "mamba2_130m", "minitron_4b",
+    "recurrentgemma_2b", "smollm_360m", "llama32_vision_90b", "gemma3_4b",
+    "deepseek_v2_236b", "whisper_small",
+]
+
+# canonical ids from the brief -> module names
+ALIASES = {
+    "qwen3-4b": "qwen3_4b",
+    "deepseek-v3-671b": "deepseek_v3_671b",
+    "mamba2-130m": "mamba2_130m",
+    "minitron-4b": "minitron_4b",
+    "recurrentgemma-2b": "recurrentgemma_2b",
+    "smollm-360m": "smollm_360m",
+    "llama-3.2-vision-90b": "llama32_vision_90b",
+    "gemma3-4b": "gemma3_4b",
+    "deepseek-v2-236b": "deepseek_v2_236b",
+    "whisper-small": "whisper_small",
+    # paper-native tasks
+    "np-logreg": "np_logreg",
+    "cmdp-cartpole": "cmdp_cartpole",
+    "fed100m": "fed100m",
+}
+
+
+def _module(name: str):
+    mod = ALIASES.get(name, name.replace("-", "_"))
+    return importlib.import_module(f"repro.configs.{mod}")
+
+
+def get_config(name: str) -> ModelConfig:
+    return _module(name).CONFIG
+
+
+def get_reduced(name: str) -> ModelConfig:
+    return _module(name).reduced()
+
+
+def all_arch_names():
+    return [a for a in ALIASES if a not in ("np-logreg", "cmdp-cartpole", "fed100m")]

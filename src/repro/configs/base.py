@@ -1,0 +1,260 @@
+"""Configuration dataclasses for models, federation, and input shapes.
+
+Every assigned architecture file (``configs/<id>.py``) exports:
+
+* ``CONFIG``   -- the exact full-scale :class:`ModelConfig` from the brief,
+* ``reduced()`` -- a smoke-test variant (<=2 layers, d_model<=512, <=4 experts),
+* the module registers itself in :data:`repro.configs.REGISTRY`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+
+# ---------------------------------------------------------------------------
+# Model configuration
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int = 0              # routed experts
+    n_shared: int = 0               # shared (always-on) experts
+    top_k: int = 1
+    d_expert: int = 0               # per-expert FFN hidden dim
+    capacity_factor: float = 1.25
+    router_group: int = 1024        # GShard-style routing group size (tokens)
+    balance_budget: float = 0.02    # constraint budget for g(w) = imbalance - budget
+    first_dense: int = 1            # leading layers with dense FFN (deepseek)
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    kv_lora_rank: int = 512
+    q_lora_rank: int = 0            # 0 => full-rank q projection
+    rope_head_dim: int = 64
+    nope_head_dim: int = 128
+    v_head_dim: int = 128
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 128
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    chunk: int = 256
+    n_groups: int = 1
+
+
+@dataclass(frozen=True)
+class RGLRUConfig:
+    lru_width: int = 0              # 0 => d_model
+    d_conv: int = 4
+    block_pattern: Tuple[str, ...] = ("rec", "rec", "attn")
+    window: int = 2048
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                     # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0               # 0 => d_model // n_heads
+    qk_norm: bool = False
+    tie_embeddings: bool = False
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-6
+    # sliding-window / local:global pattern (gemma3, recurrentgemma local attn)
+    window: int = 0                 # 0 => full attention
+    local_global_ratio: int = 0     # e.g. 5 => 5 local : 1 global
+    # extensions
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    ssm: Optional[SSMConfig] = None
+    rglru: Optional[RGLRUConfig] = None
+    # cross-attention (VLM): every `cross_attn_every` layers insert a cross block
+    cross_attn_every: int = 0
+    n_media_tokens: int = 0         # stub frontend: patches/frames per example
+    d_media: int = 0                # stub embedding dim (0 => d_model)
+    # encoder-decoder (whisper)
+    encoder_layers: int = 0
+    n_audio_frames: int = 0
+    max_target_len: int = 448
+    # MTP (deepseek-v3 multi-token prediction) -- extra predict depth
+    mtp_depth: int = 0
+    # serving limits
+    sub_quadratic: bool = False     # eligible for long_500k decode
+    remat: bool = True
+    # distribution
+    fsdp: bool = False              # shard params over the data axis (giants)
+    param_dtype: str = "float32"    # bf16 for giants (dry-run memory)
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    def n_params(self) -> int:
+        """Analytic parameter count (approximate; embeddings included)."""
+        d, L, V = self.d_model, self.n_layers, self.vocab
+        hd = self.resolved_head_dim
+        emb = V * d * (1 if self.tie_embeddings else 2)
+        per_layer = 0
+        if self.ssm is not None:
+            di = self.ssm.expand * d
+            per_layer = d * (2 * di) + di * self.ssm.d_conv + di * d \
+                + 2 * di * self.ssm.d_state // max(self.ssm.n_groups, 1)
+        else:
+            if self.mla is not None:
+                m = self.mla
+                qdim = self.n_heads * (m.nope_head_dim + m.rope_head_dim)
+                q = d * m.q_lora_rank + m.q_lora_rank * qdim if m.q_lora_rank else d * qdim
+                kv = d * (m.kv_lora_rank + m.rope_head_dim) \
+                    + m.kv_lora_rank * self.n_heads * (m.nope_head_dim + m.v_head_dim)
+                o = self.n_heads * m.v_head_dim * d
+                per_layer = q + kv + o
+            else:
+                per_layer = d * self.n_heads * hd + 2 * d * self.n_kv_heads * hd \
+                    + self.n_heads * hd * d
+        if self.moe is not None:
+            e = self.moe
+            dense_ff = 3 * d * e.d_expert * e.n_shared
+            routed = 3 * d * e.d_expert * e.n_experts
+            router = d * e.n_experts
+            per_layer += dense_ff + routed + router
+        elif self.ssm is None:
+            per_layer += 3 * d * self.d_ff
+        total = emb + L * per_layer
+        if self.cross_attn_every:
+            n_cross = L // self.cross_attn_every
+            total += n_cross * (4 * d * d + 3 * d * self.d_ff)
+        if self.encoder_layers:
+            total += self.encoder_layers * (4 * d * d + 2 * d * self.d_ff)
+        return total
+
+    def n_active_params(self) -> int:
+        """Per-token active params (MoE: top_k + shared experts only)."""
+        if self.moe is None:
+            return self.n_params()
+        e = self.moe
+        inactive = 3 * self.d_model * e.d_expert * (e.n_experts - e.top_k)
+        return self.n_params() - self.n_layers * inactive
+
+
+# ---------------------------------------------------------------------------
+# Federated / FedSGM configuration (Algorithm 1)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class CompressorConfig:
+    kind: str = "none"              # none | topk | randk | quant
+    ratio: float = 0.1              # topk/randk: k/d
+    bits: int = 8                   # quant: mantissa bits
+    block: int = 1024               # blockwise operators (TPU tile)
+    shards: int = 1                 # model-axis size hint: blocks are chosen
+                                    # to divide D/shards so block ops stay
+                                    # shard-local under GSPMD (§Perf A0)
+
+    @property
+    def q(self) -> float:
+        """Contraction parameter (Assumption 3).
+
+        For per-block max-abs b-bit rounding the worst case is
+        ||C(x)-x||^2 <= block/(4 L^2) ||x||^2 with L = 2^(b-1)-1 levels,
+        so q = 1 - block/(4 L^2) (clipped: low-bit wide-block quantizers are
+        not unconditionally contractive -- EF still repairs them in practice,
+        paper Table 1)."""
+        if self.kind == "none":
+            return 1.0
+        if self.kind in ("topk", "randk"):
+            return self.ratio
+        levels = 2.0 ** (self.bits - 1) - 1.0
+        return max(1.0 - self.block / (4.0 * levels * levels), 1e-3)
+
+
+@dataclass(frozen=True)
+class SwitchConfig:
+    mode: str = "hard"              # hard | soft
+    eps: float = 0.05               # constraint tolerance epsilon
+    beta: float = 40.0              # soft sharpness (theory: beta >= 2/eps)
+
+
+@dataclass(frozen=True)
+class FedConfig:
+    n_clients: int = 8
+    m: int = 8                      # participating clients per round
+    local_steps: int = 1            # E
+    lr: float = 0.1                 # eta
+    switch: SwitchConfig = field(default_factory=SwitchConfig)
+    uplink: CompressorConfig = field(default_factory=CompressorConfig)
+    downlink: CompressorConfig = field(default_factory=CompressorConfig)
+    comm: str = "dense"             # dense | packed (wire-compressed collectives)
+    proj_radius: float = 0.0        # Pi_X: L2 ball radius (0 => no projection)
+    client_axis: Optional[str] = "data"   # mesh axis carrying the client dim
+    track_wbar: bool = True         # keep the averaged-iterate accumulator
+    seed: int = 0
+
+    def replace(self, **kw) -> "FedConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                       # train | prefill | decode
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+def reduce_model(cfg: ModelConfig, **overrides) -> ModelConfig:
+    """Produce the reduced smoke-test variant of a full config."""
+    kw = dict(
+        n_layers=2,
+        d_model=min(cfg.d_model, 128),
+        n_heads=min(cfg.n_heads, 4),
+        n_kv_heads=min(cfg.n_kv_heads, 2),
+        d_ff=min(cfg.d_ff, 256),
+        vocab=min(cfg.vocab, 512),
+        head_dim=32 if cfg.head_dim else 0,
+    )
+    if cfg.moe is not None:
+        kw["moe"] = dataclasses.replace(
+            cfg.moe, n_experts=4, n_shared=min(cfg.moe.n_shared, 1),
+            top_k=2, d_expert=64, router_group=64, first_dense=1)
+    if cfg.mla is not None:
+        kw["mla"] = MLAConfig(kv_lora_rank=32, q_lora_rank=(32 if cfg.mla.q_lora_rank else 0),
+                              rope_head_dim=16, nope_head_dim=16, v_head_dim=16)
+    if cfg.ssm is not None:
+        kw["ssm"] = dataclasses.replace(cfg.ssm, d_state=16, head_dim=16, chunk=32)
+    if cfg.rglru is not None:
+        kw["rglru"] = dataclasses.replace(cfg.rglru, lru_width=0, window=32)
+    if cfg.window:
+        kw["window"] = 32
+    if cfg.encoder_layers:
+        kw["encoder_layers"] = 2
+        kw["n_audio_frames"] = 16
+    if cfg.cross_attn_every:
+        kw["cross_attn_every"] = 2
+        kw["n_media_tokens"] = 8
+    if cfg.n_media_tokens and not cfg.cross_attn_every:
+        kw["n_media_tokens"] = 8
+    kw.update(overrides)
+    return dataclasses.replace(cfg, **kw)

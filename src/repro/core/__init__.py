@@ -1,0 +1,4 @@
+"""FedSGM core: the paper's contribution as composable JAX modules."""
+from repro.core import baselines, compression, error_feedback, fedsgm, packing, switching, theory  # noqa: F401
+from repro.core.fedsgm import (FedState, RoundMetrics, averaged_iterate,  # noqa: F401
+                               init_state, round_step, run_rounds)

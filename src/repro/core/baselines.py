@@ -1,0 +1,59 @@
+"""Baselines the paper compares against.
+
+* Penalty-based FedAvg (Fig. 6/7): clients descend on f + rho * [g - eps]_+
+  with a fixed penalty weight rho -- showing the tuning instability the paper
+  criticizes (small rho => infeasible, large rho => slow).
+* Centralized SGM (n=1 special case of FedSGM; use FedConfig(n_clients=1, m=1)).
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.sgd import project_ball
+
+tree_map = jax.tree_util.tree_map
+
+
+class PenaltyState(NamedTuple):
+    w: object
+    t: jnp.ndarray
+    key: jax.Array
+
+
+def penalty_init(params, seed: int = 0) -> PenaltyState:
+    return PenaltyState(params, jnp.zeros((), jnp.int32), jax.random.PRNGKey(seed))
+
+
+def penalty_round(state: PenaltyState, batches, loss_pair: Callable,
+                  rho: float, eps: float, lr: float, local_steps: int,
+                  n_clients: int, m: int, proj_radius: float = 0.0):
+    """One penalty-FedAvg round: E local steps on f + rho [g - eps]_+."""
+    key, k_part = jax.random.split(state.key)
+    if m >= n_clients:
+        mask = jnp.ones((n_clients,), jnp.float32)
+    else:
+        mask = (jax.random.permutation(k_part, n_clients) < m).astype(jnp.float32)
+
+    def penalized(params, batch):
+        f, g = loss_pair(params, batch)
+        return f + rho * jnp.maximum(g - eps, 0.0)
+
+    grad_fn = jax.grad(penalized)
+
+    def local(batch):
+        def body(w, _):
+            return tree_map(lambda p, gr: p - lr * gr, w, grad_fn(w, batch)), None
+        w_E, _ = jax.lax.scan(body, state.w, None, length=local_steps)
+        return tree_map(lambda a, b: a - b, w_E, state.w)
+
+    updates = jax.vmap(local)(batches)
+    mexp = lambda u: mask.reshape((n_clients,) + (1,) * (u.ndim - 1))
+    mean_upd = tree_map(lambda u: jnp.sum(mexp(u) * u, 0) / m, updates)
+    w_new = project_ball(tree_map(jnp.add, state.w, mean_upd), proj_radius)
+
+    f_all, g_all = jax.vmap(lambda b: loss_pair(state.w, b))(batches)
+    metrics = {"f": jnp.mean(f_all), "g": jnp.mean(g_all)}
+    return PenaltyState(w_new, state.t + 1, key), metrics

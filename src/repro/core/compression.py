@@ -1,0 +1,140 @@
+"""Contractive compressors (Assumption 3) as pytree operators.
+
+All compressors satisfy  E||C(x) - x||^2 <= (1 - q) ||x||^2  with the q
+reported by :meth:`CompressorConfig.q`:
+
+* ``topk``  -- deterministic magnitude Top-K.  Global per-tensor in the
+  reference path; *block-wise* per VMEM tile on the TPU path (the
+  hardware-adapted variant, see DESIGN.md §3) -- both have q = k/d exactly.
+* ``randk`` -- uniformly random K coordinates (no rescale), q = k/d in
+  expectation.
+* ``quant`` -- per-block max-abs scaled symmetric b-bit rounding (the paper's
+  "rounding beyond precision" simulation of float16/8/4).
+* ``none``  -- identity.
+
+Leaf-wise operation: compressors act on each leaf of the gradient pytree
+independently; the contraction property then holds for the stacked vector.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import CompressorConfig
+
+
+def _leaf_topk(x: jnp.ndarray, ratio: float) -> jnp.ndarray:
+    flat = x.reshape(-1)
+    d = flat.shape[0]
+    k = max(1, int(round(d * ratio)))
+    if k >= d:
+        return x
+    idx = jnp.argsort(jnp.abs(flat))[d - k:]
+    out = jnp.zeros_like(flat).at[idx].set(flat[idx])
+    return out.reshape(x.shape)
+
+
+def _leaf_randk(x: jnp.ndarray, ratio: float, key: jax.Array) -> jnp.ndarray:
+    flat = x.reshape(-1)
+    d = flat.shape[0]
+    k = max(1, int(round(d * ratio)))
+    if k >= d:
+        return x
+    idx = jax.random.choice(key, d, shape=(k,), replace=False)
+    out = jnp.zeros_like(flat).at[idx].set(flat[idx])
+    return out.reshape(x.shape)
+
+
+def _leaf_quant(x: jnp.ndarray, bits: int, block: int) -> jnp.ndarray:
+    """Per-block symmetric quantization to 2^(bits-1) magnitude levels.
+
+    Blocks run along the last axis (divisor-sized, shard-local for GSPMD --
+    see core/packing.py docstring)."""
+    from repro.core.packing import choose_block
+    if x.ndim == 0:
+        return x
+    D = x.shape[-1]
+    b = choose_block(D, block)
+    blocks = x.reshape(x.shape[:-1] + (D // b, b))
+    scale = jnp.max(jnp.abs(blocks), axis=-1, keepdims=True)
+    levels = float(2 ** (bits - 1) - 1)
+    safe = jnp.where(scale > 0, scale, 1.0)
+    q = jnp.round(blocks / safe * levels) / levels * safe
+    q = jnp.where(scale > 0, q, 0.0)
+    return q.reshape(x.shape)
+
+
+def _leaf_natural(x: jnp.ndarray, key: jax.Array | None) -> jnp.ndarray:
+    """Natural compression (Horvath et al. 2022): stochastic rounding of the
+    magnitude to the nearest power of two; unbiased, variance factor 9/8."""
+    mag = jnp.abs(x)
+    safe = jnp.where(mag > 0, mag, 1.0)
+    e = jnp.floor(jnp.log2(safe))
+    lo = jnp.exp2(e)
+    p_up = (safe - lo) / lo                       # in [0,1): prob of 2^{e+1}
+    if key is None:
+        rounded = jnp.where(p_up > 0.5, 2 * lo, lo)
+    else:
+        u = jax.random.uniform(key, x.shape)
+        rounded = jnp.where(u < p_up, 2 * lo, lo)
+    return jnp.where(mag > 0, jnp.sign(x) * rounded, 0.0)
+
+
+def compress_leaf(x: jnp.ndarray, cfg: CompressorConfig, key: jax.Array | None = None) -> jnp.ndarray:
+    if cfg.kind == "none":
+        return x
+    if cfg.kind == "natural":
+        return _leaf_natural(x, key)
+    if cfg.kind == "topk":
+        if x.size > (1 << 22):
+            # giant leaves: global argsort is absurd (and overflows int32
+            # gather on >2^31 elements) -- use the TPU-native blockwise
+            # variant, same contraction q = k/block (DESIGN.md §3)
+            from repro.core import packing
+            return packing.block_topk_dense(x, cfg)
+        return _leaf_topk(x, cfg.ratio)
+    if cfg.kind == "randk":
+        assert key is not None, "randk needs a PRNG key"
+        return _leaf_randk(x, cfg.ratio, key)
+    if cfg.kind == "quant":
+        return _leaf_quant(x, cfg.bits, cfg.block)
+    raise ValueError(f"unknown compressor kind: {cfg.kind}")
+
+
+def compress(tree, cfg: CompressorConfig, key: jax.Array | None = None):
+    """Apply the compressor leaf-wise to a pytree."""
+    if cfg.kind == "none":
+        return tree
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    if cfg.kind in ("randk", "natural"):
+        keys = jax.random.split(key, len(leaves)) if key is not None \
+            else [None] * len(leaves)
+        out = [compress_leaf(l, cfg, k) for l, k in zip(leaves, keys)]
+    else:
+        out = [compress_leaf(l, cfg) for l in leaves]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def message_bytes(tree, cfg: CompressorConfig) -> int:
+    """Wire bytes for one compressed message (values fp32 + int32 indices)."""
+    sizes = [l.size for l in jax.tree_util.tree_leaves(tree)]
+    d = int(sum(sizes))
+    if cfg.kind == "none":
+        return 4 * d
+    if cfg.kind in ("topk", "randk"):
+        k = sum(max(1, int(round(s * cfg.ratio))) for s in sizes)
+        return int(8 * k)            # value + index
+    if cfg.kind == "quant":
+        nblocks = sum(-(-s // cfg.block) for s in sizes)
+        return int(d * cfg.bits / 8 + 4 * nblocks)
+    if cfg.kind == "natural":
+        return int(d * 9 / 8)      # sign + 8-bit exponent
+    raise ValueError(cfg.kind)
+
+
+def contraction_gap(x: jnp.ndarray, cx: jnp.ndarray) -> Tuple[float, float]:
+    """Return (||C(x)-x||^2, ||x||^2) for property tests."""
+    return float(jnp.sum((cx - x) ** 2)), float(jnp.sum(x ** 2))

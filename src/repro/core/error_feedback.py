@@ -1,0 +1,48 @@
+"""Error-feedback operators (uplink EF14, downlink primal EF21).
+
+Uplink (Seide et al. 2014 style, per client j):
+
+    v_j      = C_j(e_j + Delta_j)
+    e_j'     = e_j + Delta_j - v_j
+
+Downlink (primal EF21 variant, Gruntkowska et al. 2023 / Islamov et al. 2025):
+the server compresses the *difference between successive broadcast models*:
+
+    w_{t+1}  = w_t + C_0(x_{t+1} - w_t)
+
+so all clients track a common drifted model w while the server keeps the true
+center x; the residual x - w contracts geometrically for contractive C_0.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.configs.base import CompressorConfig
+from repro.core import compression, packing
+from repro.optim.sgd import tree_add, tree_sub
+
+tree_map = jax.tree_util.tree_map
+
+
+def uplink_step(e, delta, cfg: CompressorConfig, key=None, blockwise: bool = False):
+    """One EF14 uplink step.  Returns (message v, new residual e')."""
+    buf = tree_add(e, delta)
+    if cfg.kind == "none":
+        return buf, tree_map(lambda x: x * 0.0, buf)
+    if blockwise and cfg.kind == "topk":
+        v = tree_map(lambda l: packing.block_topk_dense(l, cfg), buf)
+    else:
+        v = compression.compress(buf, cfg, key)
+    return v, tree_sub(buf, v)
+
+
+def downlink_step(w, x_new, cfg: CompressorConfig, key=None, blockwise: bool = False):
+    """One primal-EF21 downlink step.  Returns broadcast model w_{t+1}."""
+    diff = tree_sub(x_new, w)
+    if cfg.kind == "none":
+        return x_new
+    if blockwise and cfg.kind == "topk":
+        delta = tree_map(lambda l: packing.block_topk_dense(l, cfg), diff)
+    else:
+        delta = compression.compress(diff, cfg, key)
+    return tree_add(w, delta)

@@ -1,0 +1,258 @@
+"""FedSGM (Algorithm 1) as a pure pytree transformation.
+
+One :func:`round_step` implements a full communication round:
+
+  1. sample S_t (m of n clients, uniform without replacement; static-shape mask),
+  2. constraint query: G_hat(w_t) = mean_{j in S_t} g_j(w_t),
+  3. switching weight sigma_t (hard indicator or soft trimmed hinge),
+  4. E local steps per client on the blended loss (1-sigma) f_j + sigma g_j
+     (sigma_t is round-constant, so grad-of-blend == blend-of-grads),
+  5. uplink EF14 compression of Delta_j = (w_t - w_{j,E}) / eta,
+  6. server step x_{t+1} = Pi_X(x_t - eta * mean_S v_j),
+  7. downlink primal-EF21 broadcast w_{t+1} = w_t + C_0(x_{t+1} - w_t).
+
+The client dimension is an explicit leading axis on ``batches`` and on the
+uplink residual state, so the same code runs the CPU simulator and -- with the
+leading axis sharded over the mesh's client axis -- the multi-pod lowering.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FedConfig
+from repro.core import error_feedback, switching
+from repro.core.compression import message_bytes
+from repro.sharding import partition
+from repro.optim import sgd
+from repro.optim.sgd import (tree_add, tree_axpy, tree_scale, tree_sub,
+                             tree_zeros_like, project_ball)
+
+tree_map = jax.tree_util.tree_map
+
+
+class FedState(NamedTuple):
+    w: object               # broadcast model w_t (all clients hold this)
+    x: object               # server center x_t (== w when downlink uncompressed)
+    e_up: object            # uplink EF residuals, leading axis [n_clients]
+    wbar_sum: object        # running weighted sum of w_t over feasible rounds
+    wbar_weight: jnp.ndarray
+    t: jnp.ndarray
+    key: jax.Array
+
+
+class RoundMetrics(NamedTuple):
+    f: jnp.ndarray          # mean client objective at w_t (participating)
+    g_hat: jnp.ndarray      # aggregated constraint estimate (participating)
+    g_full: jnp.ndarray     # constraint over all clients (eval only)
+    sigma: jnp.ndarray      # switching weight used
+    feasible: jnp.ndarray   # 1{G_hat <= eps}
+    delta_norm: jnp.ndarray
+
+
+def init_state(params, cfg: FedConfig, key: Optional[jax.Array] = None) -> FedState:
+    if key is None:
+        key = jax.random.PRNGKey(cfg.seed)
+    # Memory-scaled state (DESIGN.md §3): the uplink EF residual exists only
+    # under uplink compression; the server center x is stored separately only
+    # under downlink compression (otherwise x == w identically); the averaged
+    # iterate accumulator is optional (theory tasks, not LM dry-runs).
+    e_up = None
+    if cfg.uplink.kind != "none":
+        e_up = tree_map(
+            lambda p: jnp.zeros((cfg.n_clients,) + p.shape, p.dtype), params)
+    x = params if cfg.downlink.kind != "none" else None
+    return FedState(
+        w=params, x=x, e_up=e_up,
+        wbar_sum=tree_zeros_like(params) if cfg.track_wbar else None,
+        wbar_weight=jnp.zeros(()),
+        t=jnp.zeros((), jnp.int32),
+        key=key)
+
+
+def averaged_iterate(state: FedState):
+    """w_bar: the theorem's averaged iterate over feasible rounds."""
+    if state.wbar_sum is None:
+        return state.w
+    wgt = jnp.maximum(state.wbar_weight, 1e-12)
+    has = state.wbar_weight > 0
+    return tree_map(
+        lambda s, w: jnp.where(has, s / wgt, w), state.wbar_sum, state.w)
+
+
+def participation_mask(key: jax.Array, n: int, m: int) -> jnp.ndarray:
+    """0/1 mask with exactly m ones, uniform without replacement."""
+    if m >= n:
+        return jnp.ones((n,), jnp.float32)
+    perm = jax.random.permutation(key, n)
+    return (perm < m).astype(jnp.float32)
+
+
+def round_step(state: FedState,
+               batches,
+               loss_pair: Callable,   # (params, batch) -> (f_j, g_j) scalars
+               cfg: FedConfig) -> tuple[FedState, RoundMetrics]:
+    """One FedSGM round.  ``batches`` has leading axis [n_clients]."""
+    n, m, E, eta = cfg.n_clients, cfg.m, cfg.local_steps, cfg.lr
+    key, k_part, k_up, k_down = jax.random.split(state.key, 4)
+
+    mask = participation_mask(k_part, n, m)                     # [n]
+
+    # -- constraint query (scalar uplink per client) ------------------------
+    f_all, g_all = jax.vmap(lambda b: loss_pair(state.w, b))(batches)
+    g_hat = jnp.sum(mask * g_all) / m
+    f_part = jnp.sum(mask * f_all) / m
+    g_full = jnp.mean(g_all)
+
+    sigma = switching.switch_weight(g_hat, cfg.switch)
+
+    # -- E local steps on the blended objective -----------------------------
+    def blended(params, batch):
+        f, g = loss_pair(params, batch)
+        return (1.0 - sigma) * f + sigma * g
+
+    grad_fn = jax.grad(blended)
+
+    def local_updates(batch):
+        def body(w, _):
+            g = grad_fn(w, batch)
+            return tree_map(lambda p, gr: p - eta * gr, w, g), None
+        w_E, _ = jax.lax.scan(body, state.w, None, length=E)
+        return tree_map(lambda a, b: (a - b) / eta, state.w, w_E)  # Delta_j
+
+    deltas = jax.vmap(local_updates)(batches)                   # [n, ...]
+    deltas = partition.constrain_leading(deltas, "client")
+
+    mexp = lambda d: mask.reshape((n,) + (1,) * (d.ndim - 1))
+
+    def masked_mean(tree):
+        # dot-general over the (sharded) client axis => partial reduction
+        # stays local and only the params-sized result crosses the wire;
+        # jnp.sum over a sharded axis makes GSPMD all-gather the n-fold stack
+        # (EXPERIMENTS.md §Perf iteration A0).
+        return tree_map(
+            lambda v: jnp.tensordot(mask.astype(v.dtype), v, axes=(0, 0)) / m,
+            tree)
+
+    x_cur = state.x if state.x is not None else state.w
+    if cfg.uplink.kind != "none":
+        blockwise = cfg.comm == "packed"
+        if blockwise and cfg.uplink.kind == "topk":
+            # Beyond-paper wire path (DESIGN.md §3): the cross-client
+            # aggregation consumes only the packed (values, indices) payload
+            # -- the collective moves ~K/d of the model bytes.  Residual
+            # updates stay local (client-sharded unpack).
+            from repro.core import packing
+
+            def pack_client(e_j, d_j):
+                buf = tree_add(e_j, d_j)
+                packed = packing.pack_tree(buf, cfg.uplink)
+                e_new = tree_sub(buf, packing.unpack_tree(packed, buf, cfg.uplink))
+                return packed, e_new
+
+            packed_all, e_new = jax.vmap(pack_client)(state.e_up, deltas)
+            e_up = tree_map(lambda en, eo: jnp.where(mexp(en) > 0, en, eo),
+                            e_new, state.e_up)
+            # force the payload (not the dense tensors) across the client
+            # axis; all other dims keep their (param) layout
+            packed_repl = partition.gather_leading(packed_all)
+
+            def accum(acc, xs):
+                p_j, mask_j = xs
+                dense_j = packing.unpack_tree(p_j, state.w, cfg.uplink)
+                return tree_map(lambda a, d: a + mask_j * d, acc, dense_j), None
+
+            v_sum, _ = jax.lax.scan(
+                accum, tree_zeros_like(state.w), (packed_repl, mask))
+            v_bar = tree_map(lambda v: v / m, v_sum)
+        else:
+            # EF14, applied per client; non-participants keep their residual.
+            keys = jax.random.split(k_up, n)
+
+            def one_client(e_j, d_j, kj):
+                v, e_new = error_feedback.uplink_step(
+                    e_j, d_j, cfg.uplink, kj, blockwise=blockwise)
+                return v, e_new
+
+            v_all, e_new = jax.vmap(one_client)(state.e_up, deltas, keys)
+            v_all = partition.constrain_leading(v_all, "client")
+            e_new = partition.constrain_leading(e_new, "client")
+            e_up = tree_map(lambda en, eo, v: jnp.where(
+                mexp(en) > 0, en, eo), e_new, state.e_up, v_all)
+            v_bar = masked_mean(v_all)
+        x_new = project_ball(
+            tree_map(lambda x, v: x - eta * v, x_cur, v_bar), cfg.proj_radius)
+        w_new = error_feedback.downlink_step(
+            state.w, x_new, cfg.downlink, k_down,
+            blockwise=blockwise)
+    else:
+        e_up = state.e_up
+        d_bar = masked_mean(deltas)
+        w_new = project_ball(
+            tree_map(lambda w, d: w - eta * d, state.w, d_bar), cfg.proj_radius)
+        x_new = w_new
+    if cfg.downlink.kind == "none":
+        w_new, x_new = x_new, None
+
+    # -- averaged iterate bookkeeping (Theorems 1/2) -------------------------
+    alpha = switching.averaged_iterate_weight(g_hat, cfg.switch)
+    wbar_sum = (tree_axpy(alpha, state.w, state.wbar_sum)
+                if state.wbar_sum is not None else None)
+
+    delta_norm = sgd.tree_norm(masked_mean(deltas))
+    metrics = RoundMetrics(
+        f=f_part, g_hat=g_hat, g_full=g_full, sigma=sigma,
+        feasible=(g_hat <= cfg.switch.eps).astype(jnp.float32),
+        delta_norm=delta_norm)
+
+    new_state = FedState(
+        w=w_new, x=x_new, e_up=e_up,
+        wbar_sum=wbar_sum, wbar_weight=state.wbar_weight + alpha,
+        t=state.t + 1, key=key)
+    return new_state, metrics
+
+
+def run_rounds(state: FedState, batch_fn: Callable, loss_pair: Callable,
+               cfg: FedConfig, T: int, jit: bool = True):
+    """Drive T rounds; ``batch_fn(t, key) -> batches`` supplies per-round data.
+
+    Returns final state and stacked metrics (host-side loop so batch_fn may be
+    arbitrary python; the round itself is jitted).
+    """
+    step = jax.jit(lambda s, b: round_step(s, b, loss_pair, cfg)) if jit else \
+        (lambda s, b: round_step(s, b, loss_pair, cfg))
+    history = []
+    key = jax.random.PRNGKey(cfg.seed + 1)
+    for t in range(T):
+        key, sub = jax.random.split(key)
+        batches = batch_fn(t, sub)
+        state, metrics = step(state, batches)
+        history.append(jax.device_get(metrics))
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *history)
+    return state, stacked
+
+
+def run_rounds_scan(state: FedState, batches, loss_pair: Callable,
+                    cfg: FedConfig, T: int):
+    """Fully-jitted T rounds with fixed per-client data (lax.scan over
+    rounds) -- the fast path for the paper's full-batch NP experiments."""
+
+    @jax.jit
+    def many(state):
+        def body(s, _):
+            s, m = round_step(s, batches, loss_pair, cfg)
+            return s, m
+        return jax.lax.scan(body, state, None, length=T)
+
+    return many(state)
+
+
+def round_bytes(params, cfg: FedConfig) -> dict:
+    """Wire-bytes accounting for one round (per participating client)."""
+    up = message_bytes(params, cfg.uplink)
+    down = message_bytes(params, cfg.downlink)
+    dense = message_bytes(params, type(cfg.uplink)(kind="none"))
+    return {"uplink": up, "downlink": down, "dense": dense,
+            "savings_up": 1.0 - up / dense, "savings_down": 1.0 - down / dense}

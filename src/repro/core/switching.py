@@ -1,0 +1,37 @@
+"""Switching rules (Section 3): hard indicator and soft trimmed hinge."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import SwitchConfig
+
+
+def sigma_beta(violation: jnp.ndarray, beta: float) -> jnp.ndarray:
+    """Trimmed hinge sigma_beta(x) = Proj_[0,1](1 + beta * x).
+
+    ``violation`` is G_hat(w_t) - eps.  As beta -> inf this approaches the
+    hard switch 1{violation > 0} (for violation<=0 exactly at x=0 it returns 1,
+    matching the paper's boundary convention sigma_beta(0)=1).
+    """
+    return jnp.clip(1.0 + beta * violation, 0.0, 1.0)
+
+
+def switch_weight(g_hat: jnp.ndarray, cfg: SwitchConfig) -> jnp.ndarray:
+    """Return sigma_t in [0,1]: weight on the constraint gradient."""
+    if cfg.mode == "hard":
+        return (g_hat > cfg.eps).astype(jnp.float32)
+    if cfg.mode == "soft":
+        return sigma_beta(g_hat - cfg.eps, cfg.beta)
+    raise ValueError(f"unknown switching mode: {cfg.mode}")
+
+
+def averaged_iterate_weight(g_val: jnp.ndarray, cfg: SwitchConfig) -> jnp.ndarray:
+    """Per-round weight alpha_t (un-normalized) for the averaged iterate w_bar.
+
+    Hard: 1{G_hat <= eps} (Theorem 1).  Soft: [1 - sigma_beta(g - eps)] * 1{g < eps}
+    (Theorem 2).
+    """
+    if cfg.mode == "hard":
+        return (g_val <= cfg.eps).astype(jnp.float32)
+    w = 1.0 - sigma_beta(g_val - cfg.eps, cfg.beta)
+    return w * (g_val < cfg.eps).astype(jnp.float32)

@@ -1,0 +1,62 @@
+"""Theory helpers: the paper's prescribed step sizes, thresholds and rates.
+
+These are used (a) by tests that validate EXPERIMENTS.md against the paper's
+own claims and (b) by examples that want the theoretically justified
+hyper-parameters instead of tuned ones.
+"""
+from __future__ import annotations
+
+import math
+
+
+def gamma_full(E: int, q: float, q0: float) -> float:
+    """Theorem 1 / 6 (full participation, bidirectional EF compression).
+
+    Gamma = 2 E^2 + 2E sqrt(1-q)/q + 4E sqrt(10 (1-q0)) / (q0 q).
+    Gamma -> 2E^2 with no compression; the brief's Gamma(q,q0)=1 normalization
+    corresponds to dividing by the uncompressed value.
+    """
+    base = 2.0 * E * E
+    comp = 2.0 * E * math.sqrt(max(1.0 - q, 0.0)) / q \
+        + 4.0 * E * math.sqrt(10.0 * max(1.0 - q0, 0.0)) / (q0 * q)
+    return base + comp
+
+
+def gamma_partial(E: int, q: float, q0: float, n: int, m: int) -> float:
+    """Theorem 7 (partial participation, deterministic compressors)."""
+    r = n / m
+    return (2.0 * E * E
+            + 16.0 * E * r * math.sqrt(10.0 * (1.0 - q) * (1.0 - q0)) / (q0 * q * q)
+            + 8.0 * E * math.sqrt(10.0 * (1.0 - q0)) / (q0 * q)
+            + 20.0 * E / (q * q)
+            + r * 4.0 * E * math.sqrt(10.0 * (1.0 - q)) / (q * q))
+
+
+def eta_star(D: float, G: float, E: int, T: int, gamma: float) -> float:
+    """eta = sqrt(D^2 / (2 G^2 E T Gamma))."""
+    return math.sqrt(D * D / (2.0 * G * G * E * T * gamma))
+
+
+def eps_star_full(D: float, G: float, E: int, T: int, gamma: float) -> float:
+    """eps = sqrt(2 D^2 G^2 Gamma / (E T))."""
+    return math.sqrt(2.0 * D * D * G * G * gamma / (E * T))
+
+
+def eps_star_partial(D: float, G: float, E: int, T: int, gamma: float,
+                     n: int, m: int, q: float, sigma: float, delta: float) -> float:
+    """Theorem 7 threshold (adds sampling-concentration terms)."""
+    base = eps_star_full(D, G, E, T, gamma)
+    t1 = (n / m) * 2.0 * D * G * math.sqrt(max(1.0 - q, 0.0)) / (q * T)
+    t2 = 4.0 * G * D / math.sqrt(m * T) * math.sqrt(2.0 * math.log(3.0 / delta))
+    t3 = 2.0 * sigma * math.sqrt(2.0 / m * math.log(6.0 * T / delta))
+    return base + t1 + t2 + t3
+
+
+def rate_bound(D: float, G: float, E: int, T: int, gamma: float) -> float:
+    """Predicted bound on max{f(w_bar)-f*, g(w_bar)}: O(DG sqrt(Gamma / (E T)))."""
+    return eps_star_full(D, G, E, T, gamma)
+
+
+def beta_min(eps: float) -> float:
+    """Soft switching sharpness lower bound (Theorem 2): beta >= 2/eps."""
+    return 2.0 / eps

@@ -1,0 +1,123 @@
+"""Synthetic data generators (offline container; statistically matched).
+
+* ``breast_cancer_like`` -- 2-class Gaussian tabular data matching the UCI
+  breast-cancer shape (569 x 30) and imbalance (~63%/37%).
+* ``adult_like`` -- tabular with a binary protected attribute for the fair
+  classification experiment.
+* ``token_stream`` -- zipf-distributed LM tokens with induction patterns and a
+  rare-token "minority domain" used as the LM constraint slice.
+* ``partition_*`` -- IID and Dirichlet-heterogeneous client splits.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def breast_cancer_like(key, n: int = 569, d: int = 30,
+                       sep: float = 0.35, flip: float = 0.08
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """2-class Gaussians with overlap + label noise; label 1 is the minority.
+
+    The overlap makes the NP trade-off real: pushing majority loss down
+    pushes minority loss up, so the constraint g(w) <= eps actively binds
+    and the switching dynamics (paper Fig. 1/2) are visible."""
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    n1 = int(0.37 * n)
+    n0 = n - n1
+    mu = jax.random.normal(k1, (d,)) * sep
+    x0 = jax.random.normal(k2, (n0, d)) - mu
+    x1 = jax.random.normal(k3, (n1, d)) * 1.3 + mu
+    x = jnp.concatenate([x0, x1])
+    y = jnp.concatenate([jnp.zeros(n0), jnp.ones(n1)])
+    flips = jax.random.uniform(k4, (n,)) < flip
+    y = jnp.where(flips, 1.0 - y, y)
+    perm = jax.random.permutation(jax.random.fold_in(key, 7), n)
+    return x[perm], y[perm]
+
+
+def adult_like(key, n: int = 2000, d: int = 24):
+    """Tabular data with protected attribute a in {0,1}; income-like label."""
+    ka, kx, kn = jax.random.split(key, 3)
+    a = (jax.random.uniform(ka, (n,)) < 0.33).astype(jnp.float32)
+    base = jax.random.normal(kx, (n, d))
+    w_true = jnp.linspace(1.0, -1.0, d)
+    logits = base @ w_true + 0.8 * a - 0.3
+    y = (logits + 0.5 * jax.random.normal(kn, (n,)) > 0).astype(jnp.float32)
+    x = jnp.concatenate([base, a[:, None]], axis=-1)
+    return x, y, a
+
+
+def partition_iid(key, x, y, n_clients: int):
+    """Equal-size IID split; returns arrays with leading [n_clients] axis."""
+    n = x.shape[0]
+    per = n // n_clients
+    perm = jax.random.permutation(key, n)[: per * n_clients]
+    xs = x[perm].reshape(n_clients, per, -1)
+    ys = y[perm].reshape(n_clients, per)
+    return xs, ys
+
+
+def partition_dirichlet(key, x, y, n_clients: int, alpha: float = 2.0):
+    """Label-Dirichlet heterogeneous split (numpy; equal sizes via resample)."""
+    x_np, y_np = np.asarray(x), np.asarray(y)
+    n = x_np.shape[0]
+    per = n // n_clients
+    rng = np.random.default_rng(int(jax.device_get(jax.random.randint(key, (), 0, 2**31 - 1))))
+    classes = np.unique(y_np)
+    props = rng.dirichlet([alpha] * n_clients, size=len(classes))
+    xs, ys = [], []
+    for c_idx in range(n_clients):
+        pool = []
+        for ci, c in enumerate(classes):
+            idx = np.where(y_np == c)[0]
+            take = max(1, int(props[ci, c_idx] * len(idx)))
+            pool.append(rng.choice(idx, size=take, replace=True))
+        pool = np.concatenate(pool)
+        sel = rng.choice(pool, size=per, replace=True)
+        xs.append(x_np[sel])
+        ys.append(y_np[sel])
+    return jnp.asarray(np.stack(xs)), jnp.asarray(np.stack(ys))
+
+
+# ---------------------------------------------------------------------------
+# LM token streams
+# ---------------------------------------------------------------------------
+
+def token_stream(key, batch: int, seq_len: int, vocab: int,
+                 minority_frac: float = 0.125, zipf_a: float = 1.2):
+    """Zipf tokens + copied-induction spans; last `minority_frac` of each
+    sequence is drawn from the rare half of the vocabulary (the constraint
+    slice for the LM NP-style task)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    ranks = jnp.arange(1, vocab + 1, dtype=jnp.float32)
+    probs = ranks ** (-zipf_a)
+    probs = probs / probs.sum()
+    toks = jax.random.choice(k1, vocab, shape=(batch, seq_len), p=probs)
+    # induction: copy a prefix span to make the data learnable
+    span = max(1, seq_len // 8)
+    toks = toks.at[:, span:2 * span].set(toks[:, :span])
+    # minority tail: rare tokens (upper half of vocab)
+    m = max(1, int(seq_len * minority_frac))
+    rare = jax.random.randint(k2, (batch, m), vocab // 2, vocab)
+    toks = toks.at[:, -m:].set(rare)
+    mask_minority = jnp.zeros((batch, seq_len), jnp.float32).at[:, -m:].set(1.0)
+    return toks, mask_minority
+
+
+def client_token_batches(key, n_clients: int, batch_per_client: int,
+                         seq_len: int, vocab: int, hetero: float = 0.0):
+    """Per-client token batches with optional distribution shift."""
+    keys = jax.random.split(key, n_clients)
+    zipfs = 1.2 + hetero * jnp.linspace(-0.3, 0.3, n_clients)
+
+    toks, masks = [], []
+    for j in range(n_clients):
+        t, m = token_stream(keys[j], batch_per_client, seq_len, vocab,
+                            zipf_a=float(zipfs[j]))
+        toks.append(t)
+        masks.append(m)
+    return jnp.stack(toks), jnp.stack(masks)

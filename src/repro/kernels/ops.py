@@ -1,0 +1,53 @@
+"""Jit'd high-level wrappers around the Pallas kernels: arbitrary-shape
+arrays in, padded/blocked kernels underneath, pytree variants for FedSGM.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.quantize_ef import quantize_ef
+from repro.kernels.switch_blend import switch_blend
+from repro.kernels.topk_block import block_topk
+
+
+def _to_blocks(x: jnp.ndarray, block: int):
+    flat = x.reshape(-1)
+    d = flat.shape[0]
+    b = min(block, d)
+    pad = (-d) % b
+    return jnp.pad(flat, (0, pad)).reshape(-1, b), d
+
+
+def topk_compress(x: jnp.ndarray, ratio: float, block: int = 1024,
+                  interpret: bool | None = None) -> jnp.ndarray:
+    """Dense block-topk compression of an arbitrary-shape array."""
+    blocks, d = _to_blocks(x, block)
+    nb, b = blocks.shape
+    k = max(1, int(round(b * ratio)))
+    if k >= b:
+        return x
+    vals, idx = block_topk(blocks, k, interpret=interpret)
+    dense = jnp.zeros_like(blocks)
+    dense = jax.vmap(lambda dst, i, v: dst.at[i].set(v))(dense, idx, vals)
+    return dense.reshape(-1)[:d].reshape(x.shape)
+
+
+def quantize_ef_apply(e: jnp.ndarray, delta: jnp.ndarray, bits: int,
+                      block: int = 1024, interpret: bool | None = None):
+    """Fused EF14 quantization for arbitrary-shape arrays."""
+    eb, d = _to_blocks(e, block)
+    db, _ = _to_blocks(delta, block)
+    v, e_new = quantize_ef(eb, db, bits, interpret=interpret)
+    unb = lambda t: t.reshape(-1)[:d].reshape(e.shape)
+    return unb(v), unb(e_new)
+
+
+def switch_blend_tree(gf_tree, gg_tree, sigma, block: int = 4096,
+                      interpret: bool | None = None):
+    """Fused soft-switch blend over a gradient pytree."""
+    return jax.tree_util.tree_map(
+        lambda a, b: switch_blend(a.reshape(-1), b.reshape(-1), sigma,
+                                  block=block, interpret=interpret
+                                  ).reshape(a.shape),
+        gf_tree, gg_tree)

@@ -1,0 +1,49 @@
+"""Pallas TPU kernel: fused EF14 quantization step.
+
+    v  = Q_b(e + delta)          (per-block max-abs scaled b-bit rounding)
+    e' = (e + delta) - v
+
+Fusing the residual update with the quantizer saves one full HBM round-trip
+of the (e + delta) buffer per round -- the compression path's dominant memory
+term.  Blocks are VMEM tiles; the scale reduction and the rounding happen in
+one pass over the resident block.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(e_ref, d_ref, v_ref, enew_ref, *, bits: int):
+    buf = e_ref[0, :] + d_ref[0, :]
+    scale = jnp.max(jnp.abs(buf))
+    levels = jnp.asarray(float(2 ** (bits - 1) - 1), buf.dtype)
+    safe = jnp.where(scale > 0, scale, 1.0)
+    q = jnp.round(buf / safe * levels) / levels * safe
+    v = jnp.where(scale > 0, q, 0.0)
+    v_ref[0, :] = v
+    enew_ref[0, :] = buf - v
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "interpret"))
+def quantize_ef(e: jnp.ndarray, delta: jnp.ndarray, bits: int,
+                interpret: bool | None = None):
+    """e, delta [nblocks, block] -> (v, e_new), both [nblocks, block]."""
+    nblocks, block = e.shape
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    kern = functools.partial(_kernel, bits=bits)
+    return pl.pallas_call(
+        kern,
+        grid=(nblocks,),
+        in_specs=[pl.BlockSpec((1, block), lambda i: (i, 0)),
+                  pl.BlockSpec((1, block), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((1, block), lambda i: (i, 0)),
+                   pl.BlockSpec((1, block), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((nblocks, block), e.dtype),
+                   jax.ShapeDtypeStruct((nblocks, block), e.dtype)],
+        interpret=interpret,
+    )(e, delta)

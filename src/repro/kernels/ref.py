@@ -1,0 +1,31 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose reference)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def block_topk_ref(x: jnp.ndarray, k: int):
+    """x [nblocks, block] -> (values [nblocks,k], indices [nblocks,k])."""
+    _, idx = jax.lax.top_k(jnp.abs(x), k)
+    vals = jnp.take_along_axis(x, idx, axis=-1)
+    return vals, idx.astype(jnp.int32)
+
+
+def quantize_ef_ref(e: jnp.ndarray, delta: jnp.ndarray, bits: int):
+    """EF14 step with per-block max-abs b-bit quantization.
+
+    e, delta [nblocks, block] -> (v, e_new) with v = Q(e+delta),
+    e_new = (e+delta) - v."""
+    buf = e + delta
+    scale = jnp.max(jnp.abs(buf), axis=-1, keepdims=True)
+    levels = float(2 ** (bits - 1) - 1)
+    safe = jnp.where(scale > 0, scale, 1.0)
+    v = jnp.round(buf / safe * levels) / levels * safe
+    v = jnp.where(scale > 0, v, 0.0)
+    return v, buf - v
+
+
+def switch_blend_ref(gf: jnp.ndarray, gg: jnp.ndarray, sigma: jnp.ndarray):
+    """nu = (1 - sigma) * gf + sigma * gg (sigma scalar)."""
+    return (1.0 - sigma) * gf + sigma * gg

@@ -1,0 +1,58 @@
+"""Pallas TPU kernel: block-wise magnitude top-k (the TPU-native Top-K).
+
+One grid step selects the k largest-|x| entries of one VMEM-resident block
+via k rounds of masked argmax (k << block, so this is k cheap VPU reductions
+instead of a full sort; global Top-K over R^d does not map to the TPU memory
+hierarchy -- DESIGN.md §3).  Emits the packed (values, indices) payload used
+by the wire-compressed collective path (core/packing.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, vals_ref, idx_ref, *, k: int, block: int):
+    x = x_ref[0, :]                               # [block] in VMEM
+    absx = jnp.abs(x)
+    iota_b = jax.lax.iota(jnp.int32, block)
+    iota_k = jax.lax.iota(jnp.int32, k)
+
+    def body(t, carry):
+        absm, vals, idxs = carry
+        m = jnp.max(absm)
+        j = jnp.argmax(absm).astype(jnp.int32)
+        xv = jnp.sum(jnp.where(iota_b == j, x, 0.0))      # TPU-safe gather
+        vals = jnp.where(iota_k == t, xv, vals)
+        idxs = jnp.where(iota_k == t, j, idxs)
+        absm = jnp.where(iota_b == j, -jnp.inf, absm)
+        del m
+        return absm, vals, idxs
+
+    _, vals, idxs = jax.lax.fori_loop(
+        0, k, body,
+        (absx, jnp.zeros((k,), x.dtype), jnp.zeros((k,), jnp.int32)))
+    vals_ref[0, :] = vals
+    idx_ref[0, :] = idxs
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def block_topk(x: jnp.ndarray, k: int, interpret: bool | None = None):
+    """x [nblocks, block] -> (values [nblocks,k], indices int32 [nblocks,k])."""
+    nblocks, block = x.shape
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    kern = functools.partial(_kernel, k=k, block=block)
+    return pl.pallas_call(
+        kern,
+        grid=(nblocks,),
+        in_specs=[pl.BlockSpec((1, block), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((1, k), lambda i: (i, 0)),
+                   pl.BlockSpec((1, k), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((nblocks, k), x.dtype),
+                   jax.ShapeDtypeStruct((nblocks, k), jnp.int32)],
+        interpret=interpret,
+    )(x)

@@ -1,0 +1,332 @@
+"""Build (step_fn, abstract inputs) for every (arch × input-shape × mesh)
+combination -- the single source of truth used by dryrun.py, train.py and
+serve.py.
+
+Inputs are jax.ShapeDtypeStruct stand-ins carrying NamedShardings (no device
+allocation), per the dry-run contract.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.configs.base import (CompressorConfig, FedConfig, InputShape,
+                                ModelConfig, SwitchConfig)
+from repro.core import fedsgm
+from repro.models import build
+from repro.sharding import partition
+from repro.tasks import lm
+
+GIANTS = {"deepseek-v3-671b", "deepseek-v2-236b", "llama-3.2-vision-90b"}
+
+
+class Case(NamedTuple):
+    fn: object          # (state, batches) -> ... | serve fn
+    args: tuple         # abstract args (ShapeDtypeStruct pytrees w/ shardings)
+    meta: dict
+
+
+def _sds(shape, dtype, spec, mesh):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=NamedSharding(mesh, spec))
+
+
+def _abstract_with_spec(shapes_tree, specs_tree, mesh, dtype_map=None):
+    def one(sds, spec):
+        dt = sds.dtype
+        if dtype_map is not None:
+            dt = dtype_map(sds)
+        return jax.ShapeDtypeStruct(sds.shape, dt,
+                                    sharding=NamedSharding(mesh, spec))
+    return jax.tree_util.tree_map(one, shapes_tree, specs_tree,
+                                  is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def _strip_axis(spec: P, axis: str) -> P:
+    out = []
+    for e in spec:
+        if e == axis:
+            out.append(None)
+        elif isinstance(e, tuple):
+            kept = tuple(a for a in e if a != axis)
+            out.append(kept if kept else None)
+        else:
+            out.append(e)
+    return P(*out)
+
+
+def _client_prefix(spec: P, client_axis: Optional[str]) -> P:
+    base = _strip_axis(spec, client_axis) if client_axis else spec
+    return P(client_axis, *base)
+
+
+def fed_config_for(cfg: ModelConfig, mesh: Mesh, local_steps: int = 1,
+                   comm: str = "dense", uplink_ratio: float = 0.1,
+                   partial: bool = True) -> FedConfig:
+    """Default FedSGM policy per architecture class (DESIGN.md §5)."""
+    axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    shards = axes.get("model", 1)   # shard-local compression blocks (§Perf A0)
+    if cfg.name in GIANTS:
+        n = axes.get("pod", 1)
+        return FedConfig(
+            n_clients=n, m=n, local_steps=1, lr=1e-3,
+            switch=SwitchConfig(mode="soft", eps=0.05, beta=40.0),
+            uplink=CompressorConfig(kind="topk", ratio=uplink_ratio,
+                                    block=2048, shards=shards),
+            downlink=CompressorConfig(kind="none"),
+            comm=comm, client_axis="pod" if "pod" in axes else None,
+            track_wbar=False)
+    n = axes.get("data", 1)
+    m = max(1, int(0.75 * n)) if partial else n
+    return FedConfig(
+        n_clients=n, m=m, local_steps=local_steps, lr=1e-3,
+        switch=SwitchConfig(mode="soft", eps=0.05, beta=40.0),
+        uplink=CompressorConfig(kind="topk", ratio=uplink_ratio,
+                                block=2048, shards=shards),
+        downlink=CompressorConfig(kind="topk", ratio=uplink_ratio,
+                                  block=2048, shards=shards),
+        comm=comm, client_axis="data", track_wbar=False)
+
+
+def _activate(cfg: ModelConfig, mesh: Mesh, kind: str, fed: Optional[FedConfig]):
+    logical = {}
+    multi = "pod" in mesh.axis_names
+    if kind == "train":
+        ca = fed.client_axis
+        logical["client"] = ca
+        if ca == "data":
+            logical["batch"] = None        # per-client batch dim, inside vmap
+        elif ca == "pod":
+            logical["batch"] = "data"
+        if cfg.moe is not None:
+            # expert axis must not collide with the client axis
+            logical["experts"] = "data" if ca != "data" else "model"
+            logical["cap"] = "model" if logical["experts"] == "data" else "data"
+    else:
+        logical["batch"] = ("pod", "data") if multi else "data"
+        if cfg.moe is not None:
+            logical["experts"] = "data"
+            logical["cap"] = "model"
+    partition.activate_mesh(mesh, logical=logical,
+                            client_axis=fed.client_axis if fed else None)
+
+
+def _param_dtype_map(cfg: ModelConfig):
+    target = jnp.dtype(cfg.param_dtype)
+
+    def f(sds):
+        return target if sds.dtype == jnp.float32 else sds.dtype
+    return f
+
+
+def _param_specs(cfg: ModelConfig, fns, mesh: Mesh):
+    shapes = jax.eval_shape(lambda k: fns.init(k, cfg), jax.random.PRNGKey(0))
+    specs = partition.make_specs(shapes, fns.param_rules)
+    return shapes, specs
+
+
+# ---------------------------------------------------------------------------
+# Training case: one FedSGM round
+# ---------------------------------------------------------------------------
+
+def build_train_case(cfg: ModelConfig, shape: InputShape, mesh: Mesh,
+                     fed: Optional[FedConfig] = None, comm: str = "dense",
+                     local_steps: int = 1, dtype: Optional[str] = None,
+                     seq_shard: bool = False,
+                     uplink_ratio: float = 0.1) -> Case:
+    if dtype:
+        cfg = dataclasses.replace(cfg, param_dtype=dtype)
+    fns = build(cfg)
+    fed = fed or fed_config_for(cfg, mesh, local_steps=local_steps, comm=comm,
+                                uplink_ratio=uplink_ratio)
+    _activate(cfg, mesh, "train", fed)
+    if seq_shard:
+        # sequence parallelism for the residual stream (hillclimb knob):
+        # activations shard over 'model' between layers; attention/MLP
+        # re-gather as needed (memory term down, collective term up)
+        partition._LOGICAL["seq"] = "model"
+    p_shapes, p_specs = _param_specs(cfg, fns, mesh)
+    dmap = _param_dtype_map(cfg)
+    n = fed.n_clients
+    ca = fed.client_axis
+
+    params_sds = _abstract_with_spec(p_shapes, p_specs, mesh, dmap)
+    e_specs = jax.tree_util.tree_map(
+        lambda s: _client_prefix(s, ca), p_specs,
+        is_leaf=lambda x: isinstance(x, P))
+    e_sds = jax.tree_util.tree_map(
+        lambda sds, spec: jax.ShapeDtypeStruct(
+            (n,) + sds.shape, dmap(sds), sharding=NamedSharding(mesh, spec)),
+        p_shapes, e_specs,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    repl = NamedSharding(mesh, P())
+    state_sds = fedsgm.FedState(
+        w=params_sds,
+        x=params_sds if fed.downlink.kind != "none" else None,
+        e_up=e_sds if fed.uplink.kind != "none" else None,
+        wbar_sum=params_sds if fed.track_wbar else None,
+        wbar_weight=jax.ShapeDtypeStruct((), jnp.float32, sharding=repl),
+        t=jax.ShapeDtypeStruct((), jnp.int32, sharding=repl),
+        key=jax.ShapeDtypeStruct((2,), jnp.uint32, sharding=repl))
+
+    b_per = shape.global_batch // n
+    batch_spec = P(ca, "data" if ca != "data" else None, None)
+    tokens = _sds((n, b_per, shape.seq_len), jnp.int32, batch_spec, mesh)
+    mmask = _sds((n, b_per, shape.seq_len), jnp.float32, batch_spec, mesh)
+    media = None
+    if cfg.family in ("vlm", "audio"):
+        M = cfg.n_media_tokens or cfg.n_audio_frames
+        dm = cfg.d_media or cfg.d_model
+        media = _sds((n, b_per, M, dm), jnp.dtype(cfg.param_dtype),
+                     P(ca, "data" if ca != "data" else None, None, None), mesh)
+    batches = lm.LMBatch(tokens=tokens, minority_mask=mmask, media=media)
+
+    loss_pair = lm.make_loss_pair(
+        fns.forward, cfg, budget=(cfg.moe.balance_budget if cfg.moe else 4.0),
+        aux_constraint=cfg.moe is not None)
+
+    def step(state, b):
+        return fedsgm.round_step(state, b, loss_pair, fed)
+
+    return Case(step, (state_sds, batches),
+                dict(kind="train", fed=fed, arch=cfg.name, shape=shape.name))
+
+
+# ---------------------------------------------------------------------------
+# Serving cases
+# ---------------------------------------------------------------------------
+
+def _serve_media_sds(cfg: ModelConfig, B: int, mesh: Mesh, batch_spec_leading):
+    M = cfg.n_media_tokens or cfg.n_audio_frames
+    dm = cfg.d_media or cfg.d_model
+    return _sds((B, M, dm), jnp.dtype(cfg.param_dtype),
+                P(batch_spec_leading, None, None), mesh)
+
+
+def build_prefill_case(cfg: ModelConfig, shape: InputShape, mesh: Mesh) -> Case:
+    fns = build(cfg)
+    _activate(cfg, mesh, "serve", None)
+    p_shapes, p_specs = _param_specs(cfg, fns, mesh)
+    params_sds = _abstract_with_spec(p_shapes, p_specs, mesh,
+                                     _param_dtype_map(cfg))
+    multi = "pod" in mesh.axis_names
+    baxis = ("pod", "data") if multi else "data"
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.family == "audio":
+        S = min(S, cfg.max_target_len * 64)  # whisper decoder positions wrap
+    tokens = _sds((B, S), jnp.int32, P(baxis, None), mesh)
+    args = [params_sds, tokens]
+    kw = {}
+    if cfg.family in ("vlm", "audio"):
+        kw["media"] = _serve_media_sds(cfg, B, mesh, baxis)
+
+    def fn(params, toks, media=None):
+        extra = {"media": media} if media is not None else {}
+        return fns.prefill(params, cfg, toks, shape.seq_len, **extra)
+
+    if kw:
+        args.append(kw["media"])
+        return Case(lambda p, t, m: fn(p, t, m), tuple(args),
+                    dict(kind="prefill", arch=cfg.name, shape=shape.name))
+    return Case(lambda p, t: fn(p, t), tuple(args),
+                dict(kind="prefill", arch=cfg.name, shape=shape.name))
+
+
+def _cache_specs(cache_shapes, B: int, cache_len: int, mesh: Mesh):
+    axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    model = axes.get("model", 1)
+    multi = "pod" in axes
+    baxis = ("pod", "data") if multi else "data"
+    bsz = int(np.prod([axes.get(a, 1) for a in (baxis if isinstance(baxis, tuple) else (baxis,))]))
+
+    def spec_for(sds):
+        dims = [None] * len(sds.shape)
+        used_model = False
+        for i, d in enumerate(sds.shape):
+            if d == B and B > 1 and dims.count(baxis) == 0 and B % bsz == 0:
+                dims[i] = baxis
+            elif d == cache_len and not used_model and d % model == 0:
+                dims[i] = "model"
+                used_model = True
+        if not used_model and len(sds.shape) >= 3:
+            last = sds.shape[-1]
+            if last >= 512 and last % model == 0 and dims[-1] is None:
+                dims[-1] = "model"
+        return NamedSharding(mesh, P(*dims))
+
+    return jax.tree_util.tree_map(
+        lambda sds: jax.ShapeDtypeStruct(sds.shape, sds.dtype,
+                                         sharding=spec_for(sds)),
+        cache_shapes,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def build_decode_case(cfg: ModelConfig, shape: InputShape, mesh: Mesh) -> Case:
+    fns = build(cfg)
+    _activate(cfg, mesh, "serve", None)
+    p_shapes, p_specs = _param_specs(cfg, fns, mesh)
+    params_sds = _abstract_with_spec(p_shapes, p_specs, mesh,
+                                     _param_dtype_map(cfg))
+    multi = "pod" in mesh.axis_names
+    baxis = ("pod", "data") if multi else "data"
+    B, S = shape.global_batch, shape.seq_len
+
+    kw = {}
+    if cfg.family in ("vlm", "audio"):
+        kw["media"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_media_tokens or cfg.n_audio_frames,
+             cfg.d_media or cfg.d_model), jnp.dtype(cfg.param_dtype))
+
+    def make_cache(params, media=None):
+        extra = {}
+        if media is not None:
+            extra["media"] = media
+        try:
+            return fns.init_decode_cache(cfg, B, S, params=params, **extra)
+        except TypeError:
+            return fns.init_decode_cache(cfg, B, S, **extra)
+
+    if kw:
+        cache_shapes = jax.eval_shape(make_cache, params_sds, kw["media"])
+    else:
+        cache_shapes = jax.eval_shape(make_cache, params_sds)
+    cache_sds = _cache_specs(cache_shapes, B, S, mesh)
+
+    token = _sds((B, 1), jnp.int32, P(baxis if B > 1 else None, None), mesh)
+    pos = jax.ShapeDtypeStruct((), jnp.int32,
+                               sharding=NamedSharding(mesh, P()))
+
+    def fn(params, tok, cache, p):
+        return fns.decode_step(params, cfg, tok, cache, p)
+
+    return Case(fn, (params_sds, token, cache_sds, pos),
+                dict(kind="decode", arch=cfg.name, shape=shape.name))
+
+
+def build_case(arch: str, shape_name: str, mesh: Mesh, **kw) -> Case:
+    cfg = configs.get_config(arch)
+    shape = configs.INPUT_SHAPES[shape_name]
+    if shape.kind == "train":
+        return build_train_case(cfg, shape, mesh, **kw)
+    dtype = kw.get("dtype")
+    if dtype:
+        cfg = dataclasses.replace(cfg, param_dtype=dtype)
+    if shape.kind == "prefill":
+        return build_prefill_case(cfg, shape, mesh)
+    return build_decode_case(cfg, shape, mesh)
+
+
+def skip_reason(arch: str, shape_name: str) -> Optional[str]:
+    """Brief-mandated skips (recorded in DESIGN.md / EXPERIMENTS.md)."""
+    cfg = configs.get_config(arch)
+    if shape_name == "long_500k" and not cfg.sub_quadratic:
+        return ("pure full-attention arch: long_500k requires sub-quadratic "
+                "attention (DESIGN.md §5)")
+    if cfg.family == "audio" and shape_name == "long_500k":
+        return "whisper operating range is 448-token targets"
+    return None

@@ -1,0 +1,102 @@
+"""Training launcher: run FedSGM rounds for any assigned architecture.
+
+On real hardware this drives the production mesh; on CPU it runs the reduced
+config (``--reduced``, default when only one device is present).
+
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-360m --reduced \
+        --rounds 20 --seq 64 --batch 2
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+
+from repro import configs
+from repro.configs.base import CompressorConfig, FedConfig, SwitchConfig
+from repro.core import fedsgm
+from repro.data import synthetic
+from repro.models import build
+from repro.sharding import partition
+from repro.tasks import lm
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--reduced", action="store_true", default=None)
+    ap.add_argument("--rounds", type=int, default=20)
+    ap.add_argument("--clients", type=int, default=4)
+    ap.add_argument("--participating", type=int, default=0)
+    ap.add_argument("--local-steps", type=int, default=1)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=2, help="per-client batch")
+    ap.add_argument("--lr", type=float, default=0.03)
+    ap.add_argument("--uplink", default="topk", choices=["none", "topk", "quant"])
+    ap.add_argument("--ratio", type=float, default=0.1)
+    ap.add_argument("--comm", default="dense", choices=["dense", "packed"])
+    ap.add_argument("--switch", default="soft", choices=["hard", "soft"])
+    ap.add_argument("--multi-pod", action="store_true",
+                    help="use the production mesh (needs devices)")
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="save/restore round checkpoints here")
+    args = ap.parse_args()
+
+    reduced = args.reduced
+    if reduced is None:
+        reduced = jax.device_count() == 1
+    cfg = configs.get_reduced(args.arch) if reduced else configs.get_config(args.arch)
+
+    if args.multi_pod:
+        from repro.launch.mesh import make_production_mesh
+        mesh = make_production_mesh(multi_pod=True)
+        partition.activate_mesh(mesh)
+
+    fns = build(cfg)
+    key = jax.random.PRNGKey(0)
+    params = fns.init(key, cfg)
+    n = args.clients
+    fed = FedConfig(
+        n_clients=n, m=args.participating or n, local_steps=args.local_steps,
+        lr=args.lr,
+        switch=SwitchConfig(mode=args.switch, eps=0.0, beta=2.0),
+        uplink=CompressorConfig(kind=args.uplink, ratio=args.ratio),
+        downlink=CompressorConfig(kind="none"),
+        comm=args.comm)
+    loss_pair = lm.make_loss_pair(fns.forward, cfg, budget=6.0,
+                                  aux_constraint=cfg.moe is not None)
+    state = fedsgm.init_state(params, fed)
+    start_round = 0
+    if args.ckpt_dir:
+        from repro import checkpoint
+        restored, t0 = checkpoint.restore_round(args.ckpt_dir, state)
+        if restored is not None:
+            state, start_round = restored, t0
+            print(f"restored checkpoint at round {t0}")
+
+    def batch_fn(t, k):
+        toks, mask = synthetic.client_token_batches(
+            k, n, args.batch, args.seq, cfg.vocab, hetero=0.5)
+        media = None
+        if cfg.family in ("vlm", "audio"):
+            M = cfg.n_media_tokens or cfg.n_audio_frames
+            media = jax.random.normal(
+                k, (n, args.batch, M, cfg.d_media or cfg.d_model)) * 0.02
+        return lm.LMBatch(tokens=toks, minority_mask=mask, media=media)
+
+    t0 = time.time()
+    for chunk in range(max(args.rounds // 10, 1)):
+        state, hist = fedsgm.run_rounds(state, batch_fn, loss_pair, fed, T=10)
+        done = start_round + 10 * (chunk + 1)
+        print(f"round {done:4d}: f={float(hist.f[-1]):.4f} "
+              f"g={float(hist.g_hat[-1]):+.4f} sigma={float(hist.sigma[-1]):.2f} "
+              f"({(time.time()-t0)/(done-start_round):.2f}s/round)")
+        if args.ckpt_dir:
+            from repro import checkpoint
+            checkpoint.save_round(args.ckpt_dir, done, state,
+                                  metadata={"arch": cfg.name})
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Model registry: dispatch on ModelConfig.family."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+from repro.configs.base import ModelConfig
+
+
+class ModelFns(NamedTuple):
+    init: object
+    forward: object          # (params, cfg, tokens, [media=]) -> logits [| (logits, aux)]
+    prefill: object          # (params, cfg, tokens, cache_len, [media=]) -> (logits, cache)
+    decode_step: object      # (params, cfg, token, cache, pos) -> (logits, cache)
+    init_decode_cache: object
+    param_rules: object      # list[(regex, logical-axes tuple)]
+
+
+def build(cfg: ModelConfig) -> ModelFns:
+    if cfg.family in ("dense", "vlm"):
+        from repro.models import transformer as m
+        from repro.models.rules import dense_rules as rules
+    elif cfg.family == "moe":
+        from repro.models import moe_transformer as m
+        from repro.models.rules import moe_rules as rules
+    elif cfg.family == "ssm":
+        from repro.models import mamba2 as m
+        from repro.models.rules import ssm_rules as rules
+    elif cfg.family == "hybrid":
+        from repro.models import griffin as m
+        from repro.models.rules import hybrid_rules as rules
+    elif cfg.family == "audio":
+        from repro.models import whisper as m
+        from repro.models.rules import audio_rules as rules
+    else:
+        raise ValueError(f"unknown family {cfg.family}")
+    return ModelFns(
+        init=m.init, forward=m.forward, prefill=m.prefill,
+        decode_step=m.decode_step, init_decode_cache=m.init_decode_cache,
+        param_rules=rules(cfg))

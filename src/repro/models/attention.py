@@ -1,0 +1,178 @@
+"""Attention: GQA/MQA with RoPE, optional qk-norm, sliding windows, cross
+attention, and a preallocated KV cache for serving (prefill + decode).
+
+Softmax over a length-sharded KV cache is GSPMD-correct (the reduction
+lowers to a collective), so decode works with ``kv_len -> model`` sharding;
+see DESIGN.md §6.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.sharding.partition import shard_act
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray   # [B, S_cap, KV, hd]
+    v: jnp.ndarray   # [B, S_cap, KV, hd]
+
+
+def init_attn(key, d: int, n_heads: int, n_kv: int, head_dim: int,
+              qk_norm: bool = False, dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": common.dense_init(ks[0], (d, n_heads * head_dim), dtype=dtype),
+        "wk": common.dense_init(ks[1], (d, n_kv * head_dim), dtype=dtype),
+        "wv": common.dense_init(ks[2], (d, n_kv * head_dim), dtype=dtype),
+        "wo": common.dense_init(ks[3], (n_heads * head_dim, d), dtype=dtype),
+    }
+    if qk_norm:
+        p["q_norm"] = jnp.zeros((head_dim,), dtype)
+        p["k_norm"] = jnp.zeros((head_dim,), dtype)
+    return p
+
+
+def _project_qkv(p, x, n_heads, n_kv, head_dim, positions, theta,
+                 qk_norm: bool, norm_eps: float):
+    B, S, _ = x.shape
+    q = (x @ p["wq"]).reshape(B, S, n_heads, head_dim)
+    k = (x @ p["wk"]).reshape(B, S, n_kv, head_dim)
+    v = (x @ p["wv"]).reshape(B, S, n_kv, head_dim)
+    if qk_norm:
+        q = common.rms_norm(q, p["q_norm"], norm_eps)
+        k = common.rms_norm(k, p["k_norm"], norm_eps)
+    q = common.apply_rope(q, positions, theta)
+    k = common.apply_rope(k, positions, theta)
+    return q, k, v
+
+
+def attend(q, k, v, bias):
+    """q [B,Sq,H,hd]; k,v [B,Skv,KV,hd]; bias broadcastable [B,KV,R,Sq,Skv]."""
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    R = H // KV
+    qg = q.reshape(B, Sq, KV, R, hd)
+    scale = 1.0 / jnp.sqrt(hd).astype(q.dtype)
+    scores = jnp.einsum("bqkrh,bskh->bkrqs", qg * scale, k)
+    scores = scores.astype(jnp.float32) + bias
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkrqs,bskh->bqkrh", probs, v)
+    return out.reshape(B, Sq, H * hd)
+
+
+def causal_bias(q_pos, kv_pos, window: int = 0, kv_valid=None):
+    """Additive bias [*,Sq,Skv]: 0 allowed / -inf blocked."""
+    allowed = kv_pos[None, :] <= q_pos[:, None]
+    if window:
+        allowed &= kv_pos[None, :] > (q_pos[:, None] - window)
+    if kv_valid is not None:
+        allowed &= kv_valid[None, :]
+    return jnp.where(allowed, 0.0, -1e30)[None, None, None]
+
+
+def self_attention(p, x, *, n_heads, n_kv, head_dim, positions, theta,
+                   window: int = 0, qk_norm: bool = False, norm_eps: float = 1e-6):
+    """Full-sequence causal (training / scoring)."""
+    q, k, v = _project_qkv(p, x, n_heads, n_kv, head_dim, positions, theta,
+                           qk_norm, norm_eps)
+    q = shard_act(q, "batch", None, "heads", None)
+    k = shard_act(k, "batch", None, "kv_heads", None)
+    bias = causal_bias(positions, positions, window)
+    out = attend(q, k, v, bias)
+    return out @ p["wo"]
+
+
+def prefill_attention(p, x, *, n_heads, n_kv, head_dim, positions, theta,
+                      cache_len: int, window: int = 0, qk_norm: bool = False,
+                      norm_eps: float = 1e-6):
+    """Causal attention + build a KV cache with capacity cache_len >= S."""
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(p, x, n_heads, n_kv, head_dim, positions, theta,
+                           qk_norm, norm_eps)
+    bias = causal_bias(positions, positions, window)
+    out = attend(q, k, v, bias) @ p["wo"]
+    pad = cache_len - S
+    kc = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    vc = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = shard_act(kc, "batch", "kv_len", None, None)
+    vc = shard_act(vc, "batch", "kv_len", None, None)
+    return out, KVCache(kc, vc)
+
+
+def decode_attention(p, x, cache: KVCache, pos, *, n_heads, n_kv, head_dim,
+                     theta, window: int = 0, qk_norm: bool = False,
+                     norm_eps: float = 1e-6, write_pos=None, kv_valid=None,
+                     rope_pos=None):
+    """One-token decode: write kv at ``write_pos`` (default ``pos``), attend
+    over the cache.  ``kv_valid`` overrides the default slot-validity mask
+    (used by ring buffers for sliding-window layers); RoPE uses the true
+    position ``rope_pos`` (default ``pos``)."""
+    B = x.shape[0]
+    rp = pos if rope_pos is None else rope_pos
+    positions = jnp.full((1,), rp, jnp.int32)
+    q, k, v = _project_qkv(p, x, n_heads, n_kv, head_dim, positions, theta,
+                           qk_norm, norm_eps)
+    wp = pos if write_pos is None else write_pos
+    kc = jax.lax.dynamic_update_slice(cache.k, k, (0, wp, 0, 0))
+    vc = jax.lax.dynamic_update_slice(cache.v, v, (0, wp, 0, 0))
+    kc = shard_act(kc, "batch", "kv_len", None, None)
+    vc = shard_act(vc, "batch", "kv_len", None, None)
+    kv_pos = jnp.arange(kc.shape[1])
+    if kv_valid is None:
+        kv_valid = kv_pos <= pos
+    allowed = kv_valid
+    if window:
+        allowed = allowed & (kv_pos > pos - window)
+    bias = jnp.where(allowed, 0.0, -1e30)[None, None, None, None]
+    out = attend(q, kc, vc, bias)
+    return out @ p["wo"], KVCache(kc, vc)
+
+
+# ---------------------------------------------------------------------------
+# Cross attention (VLM media tokens / whisper encoder states)
+# ---------------------------------------------------------------------------
+
+def init_cross_attn(key, d: int, d_kv_in: int, n_heads: int, n_kv: int,
+                    head_dim: int, dtype=jnp.float32):
+    ks = jax.random.split(key, 5)
+    return {
+        "wq": common.dense_init(ks[0], (d, n_heads * head_dim), dtype=dtype),
+        "wk": common.dense_init(ks[1], (d_kv_in, n_kv * head_dim), dtype=dtype),
+        "wv": common.dense_init(ks[2], (d_kv_in, n_kv * head_dim), dtype=dtype),
+        "wo": common.dense_init(ks[3], (n_heads * head_dim, d), dtype=dtype),
+        "gate": jnp.zeros((), dtype),
+    }
+
+
+def cross_kv(p, media, n_kv, head_dim):
+    B, M, _ = media.shape
+    k = (media @ p["wk"]).reshape(B, M, n_kv, head_dim)
+    v = (media @ p["wv"]).reshape(B, M, n_kv, head_dim)
+    return KVCache(k, v)
+
+
+def cross_attention(p, x, kv: KVCache, *, n_heads, head_dim, gated: bool = True):
+    B, S, _ = x.shape
+    q = (x @ p["wq"]).reshape(B, S, n_heads, head_dim)
+    bias = jnp.zeros((1, 1, 1, 1, kv.k.shape[1]), jnp.float32)
+    out = attend(q, kv.k, kv.v, bias) @ p["wo"]
+    if gated:
+        out = jnp.tanh(p["gate"]) * out
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Bidirectional MHA (whisper encoder)
+# ---------------------------------------------------------------------------
+
+def bidir_attention(p, x, *, n_heads, n_kv, head_dim):
+    B, S, _ = x.shape
+    q = (x @ p["wq"]).reshape(B, S, n_heads, head_dim)
+    k = (x @ p["wk"]).reshape(B, S, n_kv, head_dim)
+    v = (x @ p["wv"]).reshape(B, S, n_kv, head_dim)
+    bias = jnp.zeros((1, 1, 1, 1, S), jnp.float32)
+    return attend(q, k, v, bias) @ p["wo"]

@@ -1,0 +1,250 @@
+"""Griffin / RecurrentGemma (arXiv:2402.19427): RG-LRU recurrent blocks mixed
+with local (sliding-window) MQA attention in a 1:2 attn:recurrent pattern.
+
+The RG-LRU diagonal recurrence h_t = a_t h_{t-1} + sqrt(1-a_t^2)(i_t*x_t) is
+evaluated with jax.lax.associative_scan over time (train/prefill) and as an
+O(1) state update in decode -- hence this arch runs long_500k.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention, common
+from repro.sharding.partition import shard_act
+
+_C = 8.0  # RG-LRU gate sharpness constant
+
+
+def block_kinds(cfg: ModelConfig):
+    pat = cfg.rglru.block_pattern
+    return [pat[i % len(pat)] for i in range(cfg.n_layers)]
+
+
+def _lru_width(cfg: ModelConfig) -> int:
+    return cfg.rglru.lru_width or cfg.d_model
+
+
+def _init_layer(key, cfg: ModelConfig, kind: str):
+    d = cfg.d_model
+    W = _lru_width(cfg)
+    ks = jax.random.split(key, 10)
+    p = {"ln1": jnp.zeros((d,)), "ln2": jnp.zeros((d,))}
+    if kind == "rec":
+        p["lru"] = {
+            "w_x": common.dense_init(ks[0], (d, W)),
+            "w_gate": common.dense_init(ks[1], (d, W)),
+            "conv_w": jax.random.normal(ks[2], (cfg.rglru.d_conv, W)) * 0.1,
+            "conv_b": jnp.zeros((W,)),
+            "w_a": common.dense_init(ks[3], (W, W)),
+            "b_a": jnp.zeros((W,)),
+            "w_i": common.dense_init(ks[4], (W, W)),
+            "b_i": jnp.zeros((W,)),
+            "lam": jnp.linspace(2.0, 5.0, W),
+            "w_y": common.dense_init(ks[5], (W, d)),
+        }
+    else:
+        p["attn"] = attention.init_attn(
+            ks[0], d, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim)
+    p["mlp"] = {
+        "w_gate": common.dense_init(ks[6], (d, cfg.d_ff)),
+        "w_up": common.dense_init(ks[7], (d, cfg.d_ff)),
+        "w_down": common.dense_init(ks[8], (cfg.d_ff, d)),
+    }
+    return p
+
+
+def _split_blocks(cfg: ModelConfig):
+    P = len(cfg.rglru.block_pattern)
+    n_full = cfg.n_layers // P
+    rest = cfg.n_layers - n_full * P
+    return P, n_full, rest
+
+
+def init(key, cfg: ModelConfig):
+    pat = cfg.rglru.block_pattern
+    P, n_full, rest = _split_blocks(cfg)
+    keys = jax.random.split(key, P + rest + 2)
+    params = {
+        "embed": common.embed_init(keys[0], cfg.vocab, cfg.d_model),
+        "ln_f": jnp.zeros((cfg.d_model,)),
+        "blocks": [
+            common.stack_layers(keys[1 + p], n_full,
+                                lambda k, p=p: _init_layer(k, cfg, pat[p]))
+            for p in range(P)] if n_full else [],
+        "rest": [
+            _init_layer(keys[1 + P + i], cfg, pat[i % P])
+            for i in range(rest)],
+    }
+    return params
+
+
+def _rglru_scan(a, b, h0=None):
+    """h_t = a_t h_{t-1} + b_t via associative scan over axis=1."""
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def _rec_block(lp, x, conv_cache=None, state=None, decode: bool = False):
+    """Returns (y, new_conv_cache, new_state)."""
+    p = lp["lru"]
+    gate = jax.nn.gelu(x @ p["w_gate"])
+    u_raw = x @ p["w_x"]
+    K = p["conv_w"].shape[0]
+    if decode:
+        win = jnp.concatenate([conv_cache, u_raw], axis=1)
+        u = jnp.sum(win * p["conv_w"], axis=1, keepdims=True) + p["conv_b"]
+        new_conv = win[:, 1:]
+    else:
+        xp = jnp.pad(u_raw, ((0, 0), (K - 1, 0), (0, 0)))
+        u = sum(xp[:, i: i + x.shape[1]] * p["conv_w"][i] for i in range(K)) + p["conv_b"]
+        new_conv = jnp.pad(u_raw, ((0, 0), (max(K - 1 - x.shape[1], 0), 0),
+                                   (0, 0)))[:, -(K - 1):]
+    r = jax.nn.sigmoid(u @ p["w_a"] + p["b_a"])
+    i = jax.nn.sigmoid(u @ p["w_i"] + p["b_i"])
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-9)) * (i * u)
+    if decode:
+        h = a[:, 0] * state + b[:, 0]
+        new_state = h
+        h = h[:, None]
+    else:
+        h = _rglru_scan(a, b, h0=state)
+        new_state = h[:, -1]
+    y = (gate * h) @ p["w_y"]
+    return y, new_conv, new_state
+
+
+def _apply_layer(lp, cfg: ModelConfig, h, kind: str, *, positions=None,
+                 mode="train", cache=None, pos=None, cache_len=0):
+    """Returns (h, new_cache)."""
+    hn = common.rms_norm(h, lp["ln1"], cfg.norm_eps)
+    kw = dict(n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+              head_dim=cfg.resolved_head_dim, theta=cfg.rope_theta,
+              norm_eps=cfg.norm_eps)
+    new_cache = None
+    if kind == "rec":
+        if mode == "decode":
+            y, conv, state = _rec_block(lp, hn, conv_cache=cache["conv"],
+                                        state=cache["state"], decode=True)
+        else:
+            y, conv, state = _rec_block(lp, hn)
+        if mode != "train":
+            new_cache = {"conv": conv, "state": state}
+    else:
+        if mode == "train":
+            y = attention.self_attention(lp["attn"], hn, positions=positions,
+                                         window=cfg.rglru.window, **kw)
+        elif mode == "prefill":
+            clen = max(min(cache_len, cfg.rglru.window + 1), hn.shape[1])
+            y, new_cache = attention.prefill_attention(
+                lp["attn"], hn, positions=positions, cache_len=clen,
+                window=cfg.rglru.window, **kw)
+        else:
+            cap = cache.k.shape[1]
+            kv_pos = jnp.arange(cap)
+            valid = (kv_pos <= pos) | (pos >= cap)
+            y, new_cache = attention.decode_attention(
+                lp["attn"], hn, cache, pos, write_pos=pos % cap,
+                kv_valid=valid, rope_pos=pos, **kw)
+    h = h + y
+    h = h + common.swiglu(common.rms_norm(h, lp["ln2"], cfg.norm_eps),
+                          lp["mlp"]["w_gate"], lp["mlp"]["w_up"],
+                          lp["mlp"]["w_down"])
+    return h, new_cache
+
+
+def _run_stack(params, cfg: ModelConfig, h, *, positions=None, mode="train",
+               caches=None, pos=None, cache_len=0):
+    pat = cfg.rglru.block_pattern
+    P, n_full, rest = _split_blocks(cfg)
+    new_caches = {"blocks": [None] * P, "rest": []}
+    if n_full:
+        def body(h, xs):
+            lps, cs = xs
+            new_cs = []
+            for p in range(P):
+                c = cs[p] if cs is not None else None
+                h, nc = _apply_layer(lps[p], cfg, h, pat[p],
+                                     positions=positions, mode=mode,
+                                     cache=c, pos=pos, cache_len=cache_len)
+                new_cs.append(nc)
+            return h, tuple(new_cs)
+        if mode == "train" and cfg.remat:
+            body = jax.checkpoint(body)
+        xs = (tuple(params["blocks"]),
+              tuple(caches["blocks"]) if caches else None)
+        h, blk = jax.lax.scan(body, h, xs)
+        new_caches["blocks"] = list(blk)
+    for i, lp in enumerate(params["rest"]):
+        c = caches["rest"][i] if caches else None
+        h, nc = _apply_layer(lp, cfg, h, pat[i % P], positions=positions,
+                             mode=mode, cache=c, pos=pos, cache_len=cache_len)
+        new_caches["rest"].append(nc)
+    return h, new_caches
+
+
+def forward(params, cfg: ModelConfig, tokens):
+    B, S = tokens.shape
+    h = params["embed"][tokens] * jnp.sqrt(float(cfg.d_model))
+    h = shard_act(h, "batch", None, None)
+    h, _ = _run_stack(params, cfg, h, positions=jnp.arange(S), mode="train")
+    hf = common.rms_norm(h, params["ln_f"], cfg.norm_eps)
+    return shard_act(hf @ params["embed"].T, "batch", None, "vocab")
+
+
+class ServeCache(NamedTuple):
+    layers: object      # {"blocks": [per-pos stacked cache], "rest": [...]}
+
+
+def init_decode_cache(cfg: ModelConfig, batch: int, cache_len: int, params=None):
+    W = _lru_width(cfg)
+    K = cfg.rglru.d_conv
+    hd = cfg.resolved_head_dim
+    win_cap = min(cache_len, cfg.rglru.window + 1)
+    pat = cfg.rglru.block_pattern
+    P, n_full, rest = _split_blocks(cfg)
+
+    def one(kind, stacked_n=0):
+        if kind == "rec":
+            c = {"conv": jnp.zeros((batch, K - 1, W)),
+                 "state": jnp.zeros((batch, W))}
+        else:
+            shape = (batch, win_cap, cfg.n_kv_heads, hd)
+            c = attention.KVCache(jnp.zeros(shape), jnp.zeros(shape))
+        if stacked_n:
+            c = jax.tree_util.tree_map(
+                lambda x: jnp.broadcast_to(x, (stacked_n,) + x.shape), c)
+        return c
+
+    return ServeCache({
+        "blocks": [one(pat[p], n_full) for p in range(P)] if n_full else [],
+        "rest": [one(pat[i % P]) for i in range(rest)]})
+
+
+def prefill(params, cfg: ModelConfig, tokens, cache_len: int):
+    B, S = tokens.shape
+    h = params["embed"][tokens] * jnp.sqrt(float(cfg.d_model))
+    h, caches = _run_stack(params, cfg, h, positions=jnp.arange(S),
+                           mode="prefill", cache_len=cache_len)
+    hf = common.rms_norm(h[:, -1:], params["ln_f"], cfg.norm_eps)
+    return hf @ params["embed"].T, ServeCache(caches)
+
+
+def decode_step(params, cfg: ModelConfig, token, cache: ServeCache, pos):
+    h = params["embed"][token] * jnp.sqrt(float(cfg.d_model))
+    h, new_caches = _run_stack(params, cfg, h, mode="decode",
+                               caches=cache.layers, pos=pos)
+    hf = common.rms_norm(h, params["ln_f"], cfg.norm_eps)
+    return hf @ params["embed"].T, ServeCache(new_caches)

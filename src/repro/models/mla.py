@@ -1,0 +1,125 @@
+"""Multi-head Latent Attention (DeepSeek V2/V3, arXiv:2405.04434 §2.1).
+
+KV is compressed into a small latent c_kv (kv_lora_rank) plus a single shared
+RoPE key head; per-head keys/values are expanded from the latent.  Decode uses
+the *absorbed* formulation (queries projected into latent space) so the cache
+is only [S, kv_lora + rope_dim] per token -- MLA's whole point.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MLAConfig
+from repro.models import common
+from repro.sharding.partition import shard_act
+
+
+class MLACache(NamedTuple):
+    c_kv: jnp.ndarray    # [B, S_cap, kv_lora]
+    k_rope: jnp.ndarray  # [B, S_cap, rope_dim]
+
+
+def init(key, d: int, n_heads: int, m: MLAConfig):
+    ks = jax.random.split(key, 6)
+    qdim = n_heads * (m.nope_head_dim + m.rope_head_dim)
+    p = {}
+    if m.q_lora_rank:
+        p["wq_a"] = common.dense_init(ks[0], (d, m.q_lora_rank))
+        p["q_norm"] = jnp.zeros((m.q_lora_rank,))
+        p["wq_b"] = common.dense_init(ks[1], (m.q_lora_rank, qdim))
+    else:
+        p["wq"] = common.dense_init(ks[0], (d, qdim))
+    p["wkv_a"] = common.dense_init(ks[2], (d, m.kv_lora_rank + m.rope_head_dim))
+    p["kv_norm"] = jnp.zeros((m.kv_lora_rank,))
+    p["wk_b"] = common.dense_init(ks[3], (m.kv_lora_rank, n_heads * m.nope_head_dim))
+    p["wv_b"] = common.dense_init(ks[4], (m.kv_lora_rank, n_heads * m.v_head_dim))
+    p["wo"] = common.dense_init(ks[5], (n_heads * m.v_head_dim, d))
+    return p
+
+
+def _queries(p, x, n_heads: int, m: MLAConfig, positions, theta, eps):
+    B, S, _ = x.shape
+    if "wq_a" in p:
+        q = common.rms_norm(x @ p["wq_a"], p["q_norm"], eps) @ p["wq_b"]
+    else:
+        q = x @ p["wq"]
+    q = q.reshape(B, S, n_heads, m.nope_head_dim + m.rope_head_dim)
+    q_nope, q_rope = q[..., : m.nope_head_dim], q[..., m.nope_head_dim:]
+    q_rope = common.apply_rope(q_rope, positions, theta)
+    return q_nope, q_rope
+
+
+def _latents(p, x, m: MLAConfig, positions, theta, eps):
+    kv = x @ p["wkv_a"]
+    c_kv = common.rms_norm(kv[..., : m.kv_lora_rank], p["kv_norm"], eps)
+    k_rope = kv[..., m.kv_lora_rank:][:, :, None, :]      # single shared head
+    k_rope = common.apply_rope(k_rope, positions, theta)[:, :, 0]
+    return c_kv, k_rope
+
+
+def _scores_expanded(p, q_nope, q_rope, c_kv, k_rope, n_heads, m: MLAConfig):
+    B, S = c_kv.shape[:2]
+    k_nope = (c_kv @ p["wk_b"]).reshape(B, S, n_heads, m.nope_head_dim)
+    scale = 1.0 / jnp.sqrt(float(m.nope_head_dim + m.rope_head_dim))
+    s = jnp.einsum("bqhn,bshn->bhqs", q_nope, k_nope)
+    s = s + jnp.einsum("bqhr,bsr->bhqs", q_rope, k_rope)
+    return s * scale
+
+
+def attention(p, x, positions, theta, n_heads: int, m: MLAConfig, eps=1e-6):
+    """Full-sequence causal MLA (training / prefill compute)."""
+    B, S, d = x.shape
+    q_nope, q_rope = _queries(p, x, n_heads, m, positions, theta, eps)
+    c_kv, k_rope = _latents(p, x, m, positions, theta, eps)
+    q_nope = shard_act(q_nope, "batch", None, "heads", None)
+    scores = _scores_expanded(p, q_nope, q_rope, c_kv, k_rope, n_heads, m)
+    bias = jnp.where(positions[None, :] <= positions[:, None], 0.0, -1e30)
+    probs = jax.nn.softmax(scores.astype(jnp.float32) + bias, -1).astype(x.dtype)
+    v = (c_kv @ p["wv_b"]).reshape(B, S, n_heads, m.v_head_dim)
+    out = jnp.einsum("bhqs,bshv->bqhv", probs, v)
+    return out.reshape(B, S, -1) @ p["wo"]
+
+
+def prefill(p, x, positions, theta, n_heads: int, m: MLAConfig,
+            cache_len: int, eps=1e-6):
+    B, S, _ = x.shape
+    out = attention(p, x, positions, theta, n_heads, m, eps)
+    c_kv, k_rope = _latents(p, x, m, positions, theta, eps)
+    pad = cache_len - S
+    cache = MLACache(
+        shard_act(jnp.pad(c_kv, ((0, 0), (0, pad), (0, 0))), "batch", "kv_len", None),
+        shard_act(jnp.pad(k_rope, ((0, 0), (0, pad), (0, 0))), "batch", "kv_len", None))
+    return out, cache
+
+
+def init_cache(batch: int, cache_len: int, m: MLAConfig, dtype=jnp.float32):
+    return MLACache(jnp.zeros((batch, cache_len, m.kv_lora_rank), dtype),
+                    jnp.zeros((batch, cache_len, m.rope_head_dim), dtype))
+
+
+def decode(p, x, cache: MLACache, pos, theta, n_heads: int, m: MLAConfig, eps=1e-6):
+    """Absorbed one-token decode over the latent cache."""
+    B = x.shape[0]
+    positions = jnp.full((1,), pos, jnp.int32)
+    q_nope, q_rope = _queries(p, x, n_heads, m, positions, theta, eps)
+    c_new, kr_new = _latents(p, x, m, positions, theta, eps)
+    c_kv = jax.lax.dynamic_update_slice(cache.c_kv, c_new, (0, pos, 0))
+    k_rope = jax.lax.dynamic_update_slice(cache.k_rope, kr_new, (0, pos, 0))
+    c_kv = shard_act(c_kv, "batch", "kv_len", None)
+    k_rope = shard_act(k_rope, "batch", "kv_len", None)
+
+    wk = p["wk_b"].reshape(m.kv_lora_rank, n_heads, m.nope_head_dim)
+    q_c = jnp.einsum("bqhn,chn->bqhc", q_nope, wk)        # absorbed query
+    scale = 1.0 / jnp.sqrt(float(m.nope_head_dim + m.rope_head_dim))
+    s = jnp.einsum("bqhc,bsc->bhqs", q_c, c_kv)
+    s = s + jnp.einsum("bqhr,bsr->bhqs", q_rope, k_rope)
+    kv_pos = jnp.arange(c_kv.shape[1])
+    bias = jnp.where(kv_pos <= pos, 0.0, -1e30)[None, None, None]
+    probs = jax.nn.softmax(s.astype(jnp.float32) * scale + bias, -1).astype(x.dtype)
+    ctx = jnp.einsum("bhqs,bsc->bqhc", probs, c_kv)
+    wv = p["wv_b"].reshape(m.kv_lora_rank, n_heads, m.v_head_dim)
+    out = jnp.einsum("bqhc,chv->bqhv", ctx, wv)
+    return out.reshape(B, 1, -1) @ p["wo"], MLACache(c_kv, k_rope)

@@ -1,0 +1,101 @@
+"""Mixture-of-Experts FFN: shared + routed experts, GShard-style group-limited
+capacity routing via scatter dispatch (memory-light; no [T,E,C] one-hot
+einsum -- see DESIGN.md §5), expert-parallel over the ``experts`` logical axis.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.models import common
+from repro.sharding.partition import shard_act
+
+
+def init(key, d: int, mcfg: MoEConfig):
+    ks = jax.random.split(key, 7)
+    E, de = mcfg.n_experts, mcfg.d_expert
+    p = {
+        "router": common.dense_init(ks[0], (d, E)),
+        "experts": {
+            "w_gate": common.dense_init(ks[1], (E, d, de), in_axis=1),
+            "w_up": common.dense_init(ks[2], (E, d, de), in_axis=1),
+            "w_down": common.dense_init(ks[3], (E, de, d), in_axis=1),
+        },
+    }
+    if mcfg.n_shared:
+        ds = de * mcfg.n_shared
+        p["shared"] = {
+            "w_gate": common.dense_init(ks[4], (d, ds)),
+            "w_up": common.dense_init(ks[5], (d, ds)),
+            "w_down": common.dense_init(ks[6], (ds, d)),
+        }
+    return p
+
+
+def _route_group(x_g, idx_g, gate_g, E: int, C: int):
+    """Scatter tokens of one group into [E, C, d] expert slots.
+
+    x_g [G, d]; idx_g/gate_g [G, k].  Returns (expert_in, slot, keep)."""
+    G, k = idx_g.shape
+    flat = idx_g.reshape(-1)                              # token-major [G*k]
+    onehot = jax.nn.one_hot(flat, E, dtype=jnp.int32)
+    before = jnp.cumsum(onehot, axis=0) - onehot
+    pos = jnp.sum(onehot * before, axis=-1)               # position within expert
+    keep = pos < C
+    slot = jnp.where(keep, flat * C + pos, E * C)         # overflow -> dump row
+    tok = jnp.repeat(jnp.arange(G), k)
+    buf = jnp.zeros((E * C + 1, x_g.shape[-1]), x_g.dtype)
+    buf = buf.at[slot].add(x_g[tok] * keep[:, None].astype(x_g.dtype))
+    return buf[: E * C].reshape(E, C, -1), slot, keep
+
+
+def moe_ffn(p, x, mcfg: MoEConfig):
+    """x [T, d] -> (y [T, d], aux load-imbalance scalar; 0 == uniform)."""
+    T, d = x.shape
+    E, k = mcfg.n_experts, mcfg.top_k
+    G = min(mcfg.router_group, T)
+    ngroups = -(-T // G)                      # ceil; pad tokens route too but
+    pad = ngroups * G - T                     # carry zero activations
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad, d), x.dtype)])
+    xg = x.reshape(ngroups, G, d)
+
+    logits = xg @ p["router"]                             # [ng, G, E]
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gates, idx = jax.lax.top_k(probs, k)
+    gates = (gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)).astype(x.dtype)
+
+    C = max(1, int(round(G * k / E * mcfg.capacity_factor)))
+    expert_in, slot, keep = jax.vmap(
+        lambda a, b, c: _route_group(a, b, c, E, C))(xg, idx, gates)
+
+    # [ng, E, C, d] -> [E, ng*C, d], expert-parallel
+    ei = expert_in.transpose(1, 0, 2, 3).reshape(E, ngroups * C, d)
+    ei = shard_act(ei, "experts", "cap", None)
+    w = p["experts"]
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", ei, w["w_gate"]))
+    h = h * jnp.einsum("ecd,edf->ecf", ei, w["w_up"])
+    h = shard_act(h, "experts", None, "ffn")
+    eo = jnp.einsum("ecf,efd->ecd", h, w["w_down"])
+    eo = shard_act(eo, "experts", "cap", None)
+    eo = eo.reshape(E, ngroups, C, d).transpose(1, 0, 2, 3)  # [ng, E, C, d]
+
+    def combine(out_e, slot_g, gate_g, keep_g):
+        padded = jnp.concatenate(
+            [out_e.reshape(E * C, d), jnp.zeros((1, d), out_e.dtype)])
+        y = padded[slot_g] * gate_g.reshape(-1)[:, None] \
+            * keep_g[:, None].astype(out_e.dtype)
+        return y.reshape(G, -1, d).sum(1)
+
+    y = jax.vmap(combine)(eo, slot, gates, keep).reshape(-1, d)[:T]
+
+    if mcfg.n_shared:
+        s = p["shared"]
+        y = y + common.swiglu(x[:T], s["w_gate"], s["w_up"], s["w_down"])
+
+    # load-balance: aux = E * sum_e (f_e/k) p_e ; ==1 at uniform routing
+    f_e = jnp.mean(jax.nn.one_hot(idx, E).sum(2).reshape(-1, E), axis=0)  # [E]
+    p_e = jnp.mean(probs.reshape(-1, E), axis=0)
+    aux = E * jnp.sum((f_e / k) * p_e) - 1.0
+    return y, aux

@@ -1,0 +1,179 @@
+"""DeepSeek-style decoder: MLA attention + MoE FFN (shared + routed experts),
+first ``first_dense`` layers with dense FFN, optional MTP head (v3).
+
+forward returns (logits, aux) where aux is the mean router load-imbalance --
+the natural functional constraint g(w) for FedSGM on MoE (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common, mla, moe
+from repro.sharding.partition import shard_act
+
+
+def _init_layer(key, cfg: ModelConfig, dense_ffn: bool):
+    d = cfg.d_model
+    k1, k2 = jax.random.split(key)
+    p = {"ln1": jnp.zeros((d,)), "ln2": jnp.zeros((d,)),
+         "mla": mla.init(k1, d, cfg.n_heads, cfg.mla)}
+    if dense_ffn:
+        ks = jax.random.split(k2, 3)
+        dff = cfg.moe.d_expert * (cfg.moe.n_shared + cfg.moe.top_k)
+        p["mlp"] = {"w_gate": common.dense_init(ks[0], (d, dff)),
+                    "w_up": common.dense_init(ks[1], (d, dff)),
+                    "w_down": common.dense_init(ks[2], (dff, d))}
+    else:
+        p["moe"] = moe.init(k2, d, cfg.moe)
+    return p
+
+
+def init(key, cfg: ModelConfig):
+    nd = cfg.moe.first_dense
+    keys = jax.random.split(key, 5)
+    params = {
+        "embed": common.embed_init(keys[0], cfg.vocab, cfg.d_model),
+        "ln_f": jnp.zeros((cfg.d_model,)),
+        "lm_head": common.dense_init(keys[1], (cfg.d_model, cfg.vocab)),
+        "dense_layers": [
+            _init_layer(k, cfg, True)
+            for k in jax.random.split(keys[2], nd)],
+        "moe_layers": common.stack_layers(
+            keys[3], cfg.n_layers - nd, lambda k: _init_layer(k, cfg, False)),
+    }
+    if cfg.mtp_depth:
+        k1, k2 = jax.random.split(keys[4])
+        params["mtp"] = {
+            "combine": common.dense_init(k1, (2 * cfg.d_model, cfg.d_model)),
+            "ln": jnp.zeros((cfg.d_model,)),
+            "layer": _init_layer(k2, cfg, True),
+        }
+    return params
+
+
+def _layer_fwd(lp, cfg: ModelConfig, h, positions):
+    a = mla.attention(lp["mla"], common.rms_norm(h, lp["ln1"], cfg.norm_eps),
+                      positions, cfg.rope_theta, cfg.n_heads, cfg.mla,
+                      cfg.norm_eps)
+    h = h + a
+    hn = common.rms_norm(h, lp["ln2"], cfg.norm_eps)
+    if "mlp" in lp:
+        out = common.swiglu(hn, lp["mlp"]["w_gate"], lp["mlp"]["w_up"],
+                            lp["mlp"]["w_down"])
+        aux = jnp.zeros(())
+    else:
+        B, S, d = hn.shape
+        out, aux = moe.moe_ffn(lp["moe"], hn.reshape(B * S, d), cfg.moe)
+        out = out.reshape(B, S, d)
+    return h + out, aux
+
+
+def forward(params, cfg: ModelConfig, tokens):
+    B, S = tokens.shape
+    h = params["embed"][tokens] * jnp.sqrt(float(cfg.d_model))
+    h = shard_act(h, "batch", None, None)
+    positions = jnp.arange(S)
+    aux_sum = jnp.zeros(())
+    for lp in params["dense_layers"]:
+        h, _ = _layer_fwd(lp, cfg, h, positions)
+
+    def body(carry, lp):
+        h, aux = carry
+        h, a = _layer_fwd(lp, cfg, h, positions)
+        return (h, aux + a), None
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    (h, aux_sum), _ = jax.lax.scan(body_fn, (h, aux_sum), params["moe_layers"])
+    n_moe = cfg.n_layers - cfg.moe.first_dense
+    aux = aux_sum / max(n_moe, 1)
+    logits = common.rms_norm(h, params["ln_f"], cfg.norm_eps) @ params["lm_head"]
+    logits = shard_act(logits, "batch", None, "vocab")
+    if cfg.mtp_depth and "mtp" in params:
+        # MTP: predict t+2 from [h_t ; emb(tok_{t+1})] through one extra layer
+        emb_next = params["embed"][tokens[:, 1:]] * jnp.sqrt(float(cfg.d_model))
+        comb = jnp.concatenate([h[:, :-1], emb_next], axis=-1) @ params["mtp"]["combine"]
+        comb = common.rms_norm(comb, params["mtp"]["ln"], cfg.norm_eps)
+        comb, _ = _layer_fwd(params["mtp"]["layer"], cfg, comb, positions[:-1])
+        mtp_logits = comb @ params["lm_head"]
+        return logits, aux, mtp_logits
+    return logits, aux
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+class ServeCache(NamedTuple):
+    dense: object            # list of MLACache
+    moe: object              # stacked MLACache
+
+
+def prefill(params, cfg: ModelConfig, tokens, cache_len: int):
+    B, S = tokens.shape
+    h = params["embed"][tokens] * jnp.sqrt(float(cfg.d_model))
+    h = shard_act(h, "batch", None, None)
+    positions = jnp.arange(S)
+    dense_caches = []
+    for lp in params["dense_layers"]:
+        a, c = mla.prefill(lp["mla"], common.rms_norm(h, lp["ln1"], cfg.norm_eps),
+                           positions, cfg.rope_theta, cfg.n_heads, cfg.mla,
+                           cache_len, cfg.norm_eps)
+        h = h + a
+        hn = common.rms_norm(h, lp["ln2"], cfg.norm_eps)
+        h = h + common.swiglu(hn, lp["mlp"]["w_gate"], lp["mlp"]["w_up"],
+                              lp["mlp"]["w_down"])
+        dense_caches.append(c)
+
+    def body(h, lp):
+        a, c = mla.prefill(lp["mla"], common.rms_norm(h, lp["ln1"], cfg.norm_eps),
+                           positions, cfg.rope_theta, cfg.n_heads, cfg.mla,
+                           cache_len, cfg.norm_eps)
+        h = h + a
+        hn = common.rms_norm(h, lp["ln2"], cfg.norm_eps)
+        B_, S_, d = hn.shape
+        out, _ = moe.moe_ffn(lp["moe"], hn.reshape(B_ * S_, d), cfg.moe)
+        return h + out.reshape(B_, S_, d), c
+    h, moe_caches = jax.lax.scan(body, h, params["moe_layers"])
+    logits = common.rms_norm(h[:, -1:], params["ln_f"], cfg.norm_eps) @ params["lm_head"]
+    return logits, ServeCache(dense_caches, moe_caches)
+
+
+def init_decode_cache(cfg: ModelConfig, batch: int, cache_len: int, params=None):
+    one = mla.init_cache(batch, cache_len, cfg.mla,
+                         dtype=jnp.dtype(cfg.param_dtype))
+    nd = cfg.moe.first_dense
+    stacked = jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x, (cfg.n_layers - nd,) + x.shape), one)
+    return ServeCache([one for _ in range(nd)], stacked)
+
+
+def decode_step(params, cfg: ModelConfig, token, cache: ServeCache, pos):
+    B = token.shape[0]
+    h = params["embed"][token] * jnp.sqrt(float(cfg.d_model))
+    new_dense = []
+    for lp, c in zip(params["dense_layers"], cache.dense):
+        a, cn = mla.decode(lp["mla"], common.rms_norm(h, lp["ln1"], cfg.norm_eps),
+                           c, pos, cfg.rope_theta, cfg.n_heads, cfg.mla,
+                           cfg.norm_eps)
+        h = h + a
+        hn = common.rms_norm(h, lp["ln2"], cfg.norm_eps)
+        h = h + common.swiglu(hn, lp["mlp"]["w_gate"], lp["mlp"]["w_up"],
+                              lp["mlp"]["w_down"])
+        new_dense.append(cn)
+
+    def body(h, xs):
+        lp, c = xs
+        a, cn = mla.decode(lp["mla"], common.rms_norm(h, lp["ln1"], cfg.norm_eps),
+                           c, pos, cfg.rope_theta, cfg.n_heads, cfg.mla,
+                           cfg.norm_eps)
+        h = h + a
+        hn = common.rms_norm(h, lp["ln2"], cfg.norm_eps)
+        B_, S_, d = hn.shape
+        out, _ = moe.moe_ffn(lp["moe"], hn.reshape(B_ * S_, d), cfg.moe)
+        return h + out.reshape(B_, S_, d), cn
+    h, new_moe = jax.lax.scan(body, h, (params["moe_layers"], cache.moe))
+    logits = common.rms_norm(h, params["ln_f"], cfg.norm_eps) @ params["lm_head"]
+    return logits, ServeCache(new_dense, new_moe)

@@ -1,0 +1,167 @@
+"""Whisper-small backbone (arXiv:2212.04356): encoder-decoder transformer.
+
+The mel-spectrogram + conv frontend is a STUB per the brief: ``forward`` /
+``prefill`` consume precomputed frame embeddings [B, n_frames, d] supplied by
+``input_specs()``.  Learned positional embeddings, pre-LN MHA, GELU MLPs.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention, common
+from repro.sharding.partition import shard_act
+
+
+def _init_block(key, cfg: ModelConfig, cross: bool):
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    p = {
+        "ln1": jnp.zeros((d,)),
+        "attn": attention.init_attn(ks[0], d, cfg.n_heads, cfg.n_kv_heads,
+                                    cfg.resolved_head_dim),
+        "ln_mlp": jnp.zeros((d,)),
+        "mlp": {
+            "w_in": common.dense_init(ks[1], (d, cfg.d_ff)),
+            "b_in": jnp.zeros((cfg.d_ff,)),
+            "w_out": common.dense_init(ks[2], (cfg.d_ff, d)),
+            "b_out": jnp.zeros((d,)),
+        },
+    }
+    if cross:
+        p["ln_x"] = jnp.zeros((d,))
+        p["xattn"] = attention.init_cross_attn(
+            ks[3], d, d, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim)
+    return p
+
+
+def init(key, cfg: ModelConfig):
+    keys = jax.random.split(key, 6)
+    return {
+        "embed": common.embed_init(keys[0], cfg.vocab, cfg.d_model),
+        "pos_emb_dec": common.embed_init(keys[1], cfg.max_target_len, cfg.d_model),
+        "pos_emb_enc": common.embed_init(keys[2], cfg.n_audio_frames, cfg.d_model),
+        "encoder": common.stack_layers(
+            keys[3], cfg.encoder_layers, lambda k: _init_block(k, cfg, cross=False)),
+        "decoder": common.stack_layers(
+            keys[4], cfg.n_layers, lambda k: _init_block(k, cfg, cross=True)),
+        "ln_enc": jnp.zeros((cfg.d_model,)),
+        "ln_f": jnp.zeros((cfg.d_model,)),
+    }
+
+
+def _mlp(p, x):
+    return common.gelu_mlp(x, p["w_in"], p["b_in"], p["w_out"], p["b_out"])
+
+
+def encode(params, cfg: ModelConfig, frames):
+    """frames [B, n_frames, d] (stub frontend output)."""
+    S = frames.shape[1]
+    h = frames + params["pos_emb_enc"][:S]
+    h = shard_act(h, "batch", None, None)
+    kw = dict(n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+              head_dim=cfg.resolved_head_dim)
+
+    def body(h, lp):
+        h = h + attention.bidir_attention(
+            lp["attn"], common.rms_norm(h, lp["ln1"], cfg.norm_eps), **kw)
+        h = h + _mlp(lp["mlp"], common.rms_norm(h, lp["ln_mlp"], cfg.norm_eps))
+        return h, None
+    h, _ = jax.lax.scan(body, h, params["encoder"])
+    return common.rms_norm(h, params["ln_enc"], cfg.norm_eps)
+
+
+def _decoder_pass(params, cfg: ModelConfig, tokens, enc, positions,
+                  caches=None, pos=None):
+    """Shared decoder stack; caches None => full-seq causal (training)."""
+    B, S = tokens.shape
+    h = params["embed"][tokens] + params["pos_emb_dec"][positions]
+    h = shard_act(h, "batch", None, None)
+    hd = cfg.resolved_head_dim
+    kw = dict(n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=hd,
+              theta=cfg.rope_theta, norm_eps=cfg.norm_eps)
+
+    def body(h, xs):
+        if caches is None:
+            lp = xs
+            a = attention.self_attention(
+                lp["attn"], common.rms_norm(h, lp["ln1"], cfg.norm_eps),
+                positions=positions, **kw)
+            new_c = None
+        else:
+            lp, c = xs
+            a, new_c = attention.decode_attention(
+                lp["attn"], common.rms_norm(h, lp["ln1"], cfg.norm_eps),
+                c, pos, **kw)
+        h = h + a
+        xkv = attention.cross_kv(lp["xattn"], enc, cfg.n_kv_heads, hd)
+        h = h + attention.cross_attention(
+            lp["xattn"], common.rms_norm(h, lp["ln_x"], cfg.norm_eps), xkv,
+            n_heads=cfg.n_heads, head_dim=hd, gated=False)
+        h = h + _mlp(lp["mlp"], common.rms_norm(h, lp["ln_mlp"], cfg.norm_eps))
+        return h, new_c
+
+    xs = params["decoder"] if caches is None else (params["decoder"], caches)
+    h, new_caches = jax.lax.scan(body, h, xs)
+    h = common.rms_norm(h, params["ln_f"], cfg.norm_eps)
+    logits = shard_act(h @ params["embed"].T, "batch", None, "vocab")
+    return logits, new_caches
+
+
+def forward(params, cfg: ModelConfig, tokens, media=None):
+    """Training: media = stub frames [B, n_frames, d]."""
+    enc = encode(params, cfg, media)
+    positions = jnp.arange(tokens.shape[1]) % cfg.max_target_len
+    logits, _ = _decoder_pass(params, cfg, tokens, enc, positions)
+    return logits
+
+
+class ServeCache(NamedTuple):
+    self_kv: object       # stacked KVCache [L, ...]
+    enc: jnp.ndarray      # encoder states [B, n_frames, d]
+
+
+def init_decode_cache(cfg: ModelConfig, batch: int, cache_len: int,
+                      media=None, params=None):
+    hd = cfg.resolved_head_dim
+    shape = (cfg.n_layers, batch, cache_len, cfg.n_kv_heads, hd)
+    enc = (encode(params, cfg, media) if (media is not None and params is not None)
+           else jnp.zeros((batch, cfg.n_audio_frames, cfg.d_model)))
+    return ServeCache(
+        attention.KVCache(jnp.zeros(shape), jnp.zeros(shape)), enc)
+
+
+def prefill(params, cfg: ModelConfig, tokens, cache_len: int, media=None):
+    enc = encode(params, cfg, media)
+    B, S = tokens.shape
+    h = params["embed"][tokens] + params["pos_emb_dec"][jnp.arange(S) % cfg.max_target_len]
+    hd = cfg.resolved_head_dim
+    positions = jnp.arange(S)
+    kw = dict(n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=hd,
+              positions=positions, theta=cfg.rope_theta, norm_eps=cfg.norm_eps)
+
+    def body(h, lp):
+        a, kv = attention.prefill_attention(
+            lp["attn"], common.rms_norm(h, lp["ln1"], cfg.norm_eps),
+            cache_len=max(cache_len, S), **kw)
+        h = h + a
+        xkv = attention.cross_kv(lp["xattn"], enc, cfg.n_kv_heads, hd)
+        h = h + attention.cross_attention(
+            lp["xattn"], common.rms_norm(h, lp["ln_x"], cfg.norm_eps), xkv,
+            n_heads=cfg.n_heads, head_dim=hd, gated=False)
+        h = h + _mlp(lp["mlp"], common.rms_norm(h, lp["ln_mlp"], cfg.norm_eps))
+        return h, kv
+    h, caches = jax.lax.scan(body, h, params["decoder"])
+    hf = common.rms_norm(h[:, -1:], params["ln_f"], cfg.norm_eps)
+    return hf @ params["embed"].T, ServeCache(caches, enc)
+
+
+def decode_step(params, cfg: ModelConfig, token, cache: ServeCache, pos):
+    positions = jnp.full((1,), pos % cfg.max_target_len, jnp.int32)
+    logits, new_kv = _decoder_pass(
+        params, cfg, token, cache.enc, positions,
+        caches=cache.self_kv, pos=pos)
+    return logits, ServeCache(new_kv, cache.enc)

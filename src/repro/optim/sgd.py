@@ -1,0 +1,109 @@
+"""Minimal from-scratch optimizers + pytree arithmetic + projection Pi_X."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+tree_map = jax.tree_util.tree_map
+
+
+def tree_add(a, b):
+    return tree_map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    return tree_map(jnp.subtract, a, b)
+
+
+def tree_scale(a, s):
+    return tree_map(lambda x: x * s, a)
+
+
+def tree_axpy(s, x, y):
+    """y + s * x."""
+    return tree_map(lambda xi, yi: yi + s * xi, x, y)
+
+
+def tree_blend(s, a, b):
+    """(1 - s) * a + s * b."""
+    return tree_map(lambda ai, bi: (1.0 - s) * ai + s * bi, a, b)
+
+
+def tree_zeros_like(a):
+    return tree_map(jnp.zeros_like, a)
+
+
+def tree_norm(a) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(l.astype(jnp.float32))) for l in jax.tree_util.tree_leaves(a)]
+    return jnp.sqrt(sum(leaves))
+
+
+def tree_dot(a, b) -> jnp.ndarray:
+    parts = jax.tree_util.tree_leaves(
+        tree_map(lambda x, y: jnp.sum(x.astype(jnp.float32) * y.astype(jnp.float32)), a, b))
+    return sum(parts)
+
+
+def tree_size(a) -> int:
+    return int(sum(l.size for l in jax.tree_util.tree_leaves(a)))
+
+
+def project_ball(params, radius: float):
+    """Euclidean projection of the stacked parameter vector onto ||w|| <= R."""
+    if not radius:
+        return params
+    nrm = tree_norm(params)
+    scale = jnp.minimum(1.0, radius / jnp.maximum(nrm, 1e-12))
+    return tree_scale(params, scale)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    nrm = tree_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(nrm, 1e-12))
+    return tree_scale(grads, scale)
+
+
+# ---------------------------------------------------------------------------
+# Optimizers (server-side or centralized baselines)
+# ---------------------------------------------------------------------------
+
+class SGDState(NamedTuple):
+    momentum: object
+
+
+def sgd_init(params, momentum: float = 0.0) -> SGDState:
+    return SGDState(tree_zeros_like(params) if momentum else None)
+
+
+def sgd_step(params, grads, state: SGDState, lr: float, momentum: float = 0.0):
+    if momentum:
+        buf = tree_map(lambda m, g: momentum * m + g, state.momentum, grads)
+        params = tree_map(lambda p, m: p - lr * m, params, buf)
+        return params, SGDState(buf)
+    return tree_map(lambda p, g: p - lr * g, params, grads), state
+
+
+class AdamState(NamedTuple):
+    mu: object
+    nu: object
+    t: jnp.ndarray
+
+
+def adam_init(params) -> AdamState:
+    return AdamState(tree_zeros_like(params), tree_zeros_like(params), jnp.zeros((), jnp.int32))
+
+
+def adam_step(params, grads, state: AdamState, lr: float,
+              b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8):
+    t = state.t + 1
+    mu = tree_map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
+    nu = tree_map(lambda v, g: b2 * v + (1 - b2) * g * g, state.nu, grads)
+    tf = t.astype(jnp.float32)
+    c1 = 1.0 - b1 ** tf
+    c2 = 1.0 - b2 ** tf
+    params = tree_map(
+        lambda p, m, v: p - lr * (m / c1) / (jnp.sqrt(v / c2) + eps),
+        params, mu, nu)
+    return params, AdamState(mu, nu, t)

@@ -1,0 +1,192 @@
+"""Logical-axis sharding: path-rules -> PartitionSpec pytrees + activation
+constraints that no-op when no mesh is active (CPU simulator / smoke tests).
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_ACTIVE_MESH: Optional[Mesh] = None
+_LOGICAL: dict = {}
+
+
+DEFAULT_LOGICAL = {
+    # logical name -> mesh axis (or tuple) -- None means replicate
+    "batch": "data",
+    "client": "data",
+    "heads": "model",
+    "kv_heads": "model",
+    "ffn": "model",
+    "vocab": "model",
+    "experts": "data",
+    "cap": "model",
+    "kv_len": "model",
+    "blocks": "model",      # packed-payload block dim (core/fedsgm packed path)
+    "embed": None,
+    "seq": None,
+    "fsdp": "data",
+    "pod": "pod",
+}
+
+
+def activate_mesh(mesh: Optional[Mesh], logical: Optional[dict] = None,
+                  client_axis: Optional[str] = None):
+    """Install the mesh + logical-axis table used by :func:`shard_act`.
+
+    When ``client_axis`` is given, the "client"/"batch" logical axes are
+    remapped so client-sharded leading dims land on that axis.
+    """
+    global _ACTIVE_MESH, _LOGICAL
+    _ACTIVE_MESH = mesh
+    table = dict(DEFAULT_LOGICAL)
+    if logical:
+        table.update(logical)
+    if mesh is not None:
+        names = set(mesh.axis_names)
+        if client_axis:
+            table["client"] = client_axis
+        # drop logical axes that point at axes absent from this mesh
+        for k, v in list(table.items()):
+            axes = v if isinstance(v, tuple) else (v,)
+            if any(a is not None and a not in names for a in axes):
+                table[k] = None
+    _LOGICAL = table
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _ACTIVE_MESH
+
+
+def resolve(*logical_names) -> P:
+    """Translate logical dim names (or None) into a PartitionSpec."""
+    out = []
+    for nm in logical_names:
+        if nm is None:
+            out.append(None)
+        else:
+            out.append(_LOGICAL.get(nm))
+    return P(*out)
+
+
+def shard_act(x, *logical_names):
+    """with_sharding_constraint by logical names; identity without a mesh.
+
+    Under vmap/scan the constraint rank may not match the traced value; in
+    that case (or on non-divisible dims) the offending axes are dropped.
+    """
+    if _ACTIVE_MESH is None:
+        return x
+    names = logical_names
+    if len(names) != x.ndim:
+        if len(names) < x.ndim:
+            names = (None,) * (x.ndim - len(names)) + tuple(names)
+        else:
+            names = names[-x.ndim:]
+    spec = check_divisible(resolve(*names), x.shape)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(_ACTIVE_MESH, spec))
+
+
+def sharding_for(*logical_names) -> Optional[NamedSharding]:
+    if _ACTIVE_MESH is None:
+        return None
+    return NamedSharding(_ACTIVE_MESH, resolve(*logical_names))
+
+
+def gather_leading(tree):
+    """Force the leading axis of every leaf replicated (an all-gather across
+    whatever axis it was sharded on) while leaving other dims UNCONSTRAINED.
+    Used by the packed-payload aggregation: only the small (values, indices)
+    arrays cross the client axis (§Perf C)."""
+    if _ACTIVE_MESH is None:
+        return tree
+    U = P.UNCONSTRAINED
+
+    def one(x):
+        if x.ndim == 0:
+            return x
+        spec = P(None, *([U] * (x.ndim - 1)))
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(_ACTIVE_MESH, spec))
+    return jax.tree_util.tree_map(one, tree)
+
+
+def constrain_leading(tree, logical_name: str):
+    """Pin the leading axis of every leaf to ``logical_name``'s mesh axis,
+    leaving all other dims UNCONSTRAINED (GSPMD keeps their layout).  Used to
+    stop the per-client delta/EF stacks from being replicated (§Perf A0)."""
+    if _ACTIVE_MESH is None:
+        return tree
+    axis = _LOGICAL.get(logical_name)
+    if axis is None:
+        return tree
+    U = P.UNCONSTRAINED
+
+    def one(x):
+        if x.ndim == 0 or x.shape[0] % _axis_size(axis):
+            return x
+        spec = P(axis, *([U] * (x.ndim - 1)))
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(_ACTIVE_MESH, spec))
+    return jax.tree_util.tree_map(one, tree)
+
+
+# ---------------------------------------------------------------------------
+# Parameter spec assignment by path rules
+# ---------------------------------------------------------------------------
+
+def _axis_size(axis) -> int:
+    if _ACTIVE_MESH is None:
+        return 1
+    sizes = dict(zip(_ACTIVE_MESH.axis_names, _ACTIVE_MESH.devices.shape))
+    if isinstance(axis, tuple):
+        n = 1
+        for a in axis:
+            n *= sizes.get(a, 1)
+        return n
+    return sizes.get(axis, 1)
+
+
+def check_divisible(spec: P, shape) -> P:
+    """Drop spec entries whose mesh-axis size does not divide the dim."""
+    out = []
+    for i, entry in enumerate(spec):
+        if entry is None or i >= len(shape):
+            out.append(entry)
+            continue
+        out.append(entry if shape[i] % _axis_size(entry) == 0 else None)
+    return P(*out)
+
+
+def make_specs(params, rules, default=P()):
+    """Build a PartitionSpec pytree for ``params``.
+
+    ``rules`` is a list of (regex_on_path, spec_of_logical_names) tried in
+    order; paths are '/'-joined dict keys.  Logical names are resolved via the
+    active logical table at call time (so call after activate_mesh).  Entries
+    whose mesh-axis size does not divide the tensor dim fall back to
+    replication (e.g. vocab 50280 on a 16-way model axis).
+    """
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    treedef = jax.tree_util.tree_structure(params)
+    specs = []
+    for path, leaf in flat:
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        spec = default
+        for pat, logical in rules:
+            if re.search(pat, name):
+                logical = logical[-leaf.ndim:] if len(logical) > leaf.ndim else \
+                    (None,) * (leaf.ndim - len(logical)) + tuple(logical)
+                spec = check_divisible(resolve(*logical), leaf.shape)
+                break
+        specs.append(spec)
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def named_shardings(spec_tree, mesh: Mesh):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,168 @@
+"""Constrained MDP: continuous-action Cartpole with safety costs (Section 4).
+
+Pure-JAX environment (lax.scan rollouts), Gaussian-policy MLP + value
+baseline.  Each client j has its own safety budget d_j in [25, 35]:
+
+    f_j(w) = -E[sum_t r_t]          g_j(w) = E[sum_t c_t] - d_j
+
+Cost: 1 per step when the cart is inside a prohibited zone or |theta| > 6 deg
+(Xu et al. 2021).  The paper optimizes policies with TRPO; we use an
+advantage-actor-critic policy gradient (GAE-free, returns-to-go baseline) --
+deviation recorded in DESIGN.md §2.  loss_pair uses the value/gradient
+splice  stop_grad(true_value) + (surrogate - stop_grad(surrogate))  so the
+switching rule sees exact constraint values while gradients are REINFORCE.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+# -- dynamics constants (OpenAI gym cartpole, continuous force) -------------
+GRAVITY, M_CART, M_POLE = 9.8, 1.0, 0.1
+LENGTH, FORCE_MAG, TAU = 0.5, 10.0, 0.02
+M_TOTAL = M_CART + M_POLE
+PM_L = M_POLE * LENGTH
+THETA_FAIL = 12 * 3.14159 / 180
+THETA_COST = 6 * 3.14159 / 180
+X_FAIL = 2.4
+ZONES = jnp.array([[-2.4, -2.2], [-1.3, -1.1], [-0.1, 0.1],
+                   [1.1, 1.3], [2.2, 2.4]])
+
+
+def env_step(state, force):
+    x, xd, th, thd = state
+    cos, sin = jnp.cos(th), jnp.sin(th)
+    temp = (force + PM_L * thd ** 2 * sin) / M_TOTAL
+    th_acc = (GRAVITY * sin - cos * temp) / \
+        (LENGTH * (4.0 / 3.0 - M_POLE * cos ** 2 / M_TOTAL))
+    x_acc = temp - PM_L * th_acc * cos / M_TOTAL
+    x = x + TAU * xd
+    xd = xd + TAU * x_acc
+    th = th + TAU * thd
+    thd = thd + TAU * th_acc
+    return jnp.stack([x, xd, th, thd])
+
+
+def step_cost(state):
+    x, _, th, _ = state
+    in_zone = jnp.any((x >= ZONES[:, 0]) & (x <= ZONES[:, 1]))
+    return (in_zone | (jnp.abs(th) > THETA_COST)).astype(jnp.float32)
+
+
+def terminated(state):
+    x, _, th, _ = state
+    return (jnp.abs(x) > X_FAIL) | (jnp.abs(th) > THETA_FAIL)
+
+
+# -- Gaussian policy + value MLPs --------------------------------------------
+
+def init_params(key, hidden: int = 64):
+    ks = jax.random.split(key, 6)
+    def lin(k, i, o):
+        return {"w": jax.random.normal(k, (i, o)) / jnp.sqrt(i), "b": jnp.zeros(o)}
+    return {
+        "pi": {"l1": lin(ks[0], 4, hidden), "l2": lin(ks[1], hidden, hidden),
+               "mu": lin(ks[2], hidden, 1), "log_std": jnp.zeros(())},
+        "v": {"l1": lin(ks[3], 4, hidden), "l2": lin(ks[4], hidden, hidden),
+              "out": lin(ks[5], hidden, 1)},
+    }
+
+
+def _mlp2(p, x, out_key):
+    h = jnp.tanh(x @ p["l1"]["w"] + p["l1"]["b"])
+    h = jnp.tanh(h @ p["l2"]["w"] + p["l2"]["b"])
+    return h @ p[out_key]["w"] + p[out_key]["b"]
+
+
+def policy_dist(params, obs):
+    mu = _mlp2(params["pi"], obs, "mu")[..., 0]
+    return mu, jnp.exp(params["pi"]["log_std"])
+
+
+def value(params, obs):
+    return _mlp2(params["v"], obs, "out")[..., 0]
+
+
+def log_prob(mu, std, a):
+    return -0.5 * ((a - mu) / std) ** 2 - jnp.log(std) - 0.919
+
+
+class Trajectory(NamedTuple):
+    obs: jnp.ndarray        # [E, T, 4]
+    actions: jnp.ndarray    # [E, T]
+    rewards: jnp.ndarray    # [E, T]
+    costs: jnp.ndarray      # [E, T]
+    alive: jnp.ndarray      # [E, T]
+
+
+def rollout(params, key, n_episodes: int, horizon: int = 200) -> Trajectory:
+    """Vectorized on-policy rollout (actions sampled, stop-grad)."""
+    k_init, k_act = jax.random.split(key)
+    s0 = jax.random.uniform(k_init, (n_episodes, 4), minval=-0.05, maxval=0.05)
+    noise = jax.random.normal(k_act, (horizon, n_episodes))
+
+    def body(carry, eps):
+        s, alive = carry
+        mu, std = policy_dist(params, s)
+        a = jax.lax.stop_gradient(mu + std * eps)
+        s_new = jax.vmap(env_step)(s, FORCE_MAG * jnp.tanh(a))
+        r = alive
+        c = jax.vmap(step_cost)(s) * alive
+        alive_new = alive * (1.0 - jax.vmap(terminated)(s_new).astype(jnp.float32))
+        return (s_new, alive_new), (s, a, r, c, alive)
+
+    (_, _), (obs, acts, rews, costs, alive) = jax.lax.scan(
+        body, (s0, jnp.ones(n_episodes)), noise)
+    tr = lambda t: jnp.swapaxes(t, 0, 1)
+    return Trajectory(tr(obs), tr(acts), tr(rews), tr(costs), tr(alive))
+
+
+def returns_to_go(x, gamma: float = 1.0):
+    def body(carry, xt):
+        carry = xt + gamma * carry
+        return carry, carry
+    _, out = jax.lax.scan(body, jnp.zeros(x.shape[0]), x.T[::-1])
+    return out[::-1].T
+
+
+def make_loss_pair(n_episodes: int = 5, horizon: int = 200,
+                   gamma: float = 1.0, vf_coef: float = 0.25):
+    """loss_pair(params, batch=(key, budget)) -> (f, g) for FedSGM."""
+
+    def loss_pair(params, batch):
+        key, budget = batch
+        traj = rollout(params, key, n_episodes, horizon)
+        mu, std = policy_dist(params, traj.obs)
+        logp = log_prob(mu, std, traj.actions) * traj.alive
+
+        r_ret = returns_to_go(traj.rewards.reshape(n_episodes, -1), gamma)
+        c_ret = returns_to_go(traj.costs.reshape(n_episodes, -1), gamma)
+        v = value(params, traj.obs)
+        adv_r = jax.lax.stop_gradient(r_ret - v)
+        adv_c = jax.lax.stop_gradient(c_ret - c_ret.mean())
+
+        ep_reward = traj.rewards.sum(-1).mean()
+        ep_cost = traj.costs.sum(-1).mean()
+
+        sur_f = -(logp * adv_r).sum(-1).mean() \
+            + vf_coef * ((v - r_ret) ** 2 * traj.alive).mean()
+        sur_g = (logp * adv_c).sum(-1).mean()
+
+        # value/gradient splice: exact values, REINFORCE gradients
+        f = jax.lax.stop_gradient(-ep_reward) + sur_f - jax.lax.stop_gradient(sur_f)
+        g = jax.lax.stop_gradient(ep_cost - budget) + sur_g - jax.lax.stop_gradient(sur_g)
+        return f, g
+
+    return loss_pair
+
+
+def client_budgets(n_clients: int, lo: float = 25.0, hi: float = 35.0):
+    return jnp.linspace(lo, hi, n_clients)
+
+
+def eval_policy(params, key, n_episodes: int = 10, horizon: int = 200):
+    traj = rollout(params, key, n_episodes, horizon)
+    return {"reward": float(traj.rewards.sum(-1).mean()),
+            "cost": float(traj.costs.sum(-1).mean())}

@@ -1,0 +1,159 @@
+"""Compressor unit + hypothesis property tests (Assumption 3 contractivity)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import CompressorConfig
+from repro.core import compression, packing
+
+
+def _rand(key, shape):
+    return jax.random.normal(key, shape)
+
+
+class TestTopK:
+    def test_exact_k(self, key):
+        x = _rand(key, (100,))
+        cfg = CompressorConfig(kind="topk", ratio=0.1)
+        cx = compression.compress_leaf(x, cfg)
+        assert int(jnp.sum(cx != 0)) == 10
+        # kept entries are the largest-magnitude ones
+        kept = jnp.abs(cx[cx != 0])
+        dropped = jnp.abs(x[cx == 0])
+        assert float(kept.min()) >= float(dropped.max())
+
+    def test_contractive_deterministic(self, key):
+        """Top-K satisfies ||C(x)-x||^2 <= (1-q)||x||^2 with q=K/d exactly."""
+        for seed in range(5):
+            x = _rand(jax.random.fold_in(key, seed), (256,))
+            cfg = CompressorConfig(kind="topk", ratio=0.25)
+            cx = compression.compress_leaf(x, cfg)
+            gap, nrm = compression.contraction_gap(x, cx)
+            assert gap <= (1 - cfg.q) * nrm + 1e-6
+
+    @settings(max_examples=25, deadline=None)
+    @given(d=st.integers(4, 300), ratio=st.floats(0.05, 0.9),
+           seed=st.integers(0, 2**16))
+    def test_contractive_property(self, d, ratio, seed):
+        x = _rand(jax.random.PRNGKey(seed), (d,))
+        cfg = CompressorConfig(kind="topk", ratio=ratio)
+        cx = compression.compress_leaf(x, cfg)
+        gap, nrm = compression.contraction_gap(x, cx)
+        k = max(1, int(round(d * ratio)))
+        assert gap <= (1 - k / d) * nrm + 1e-5 * (nrm + 1)
+
+
+class TestRandK:
+    @settings(max_examples=15, deadline=None)
+    @given(d=st.integers(8, 200), seed=st.integers(0, 2**16))
+    def test_contractive_in_expectation(self, d, seed):
+        """E||C(x)-x||^2 = (1-k/d)||x||^2 over compressor randomness."""
+        key = jax.random.PRNGKey(seed)
+        x = _rand(key, (d,))
+        cfg = CompressorConfig(kind="randk", ratio=0.5)
+        gaps, nrm = [], float(jnp.sum(x**2))
+        for i in range(30):
+            cx = compression.compress_leaf(x, cfg, jax.random.fold_in(key, i))
+            gaps.append(compression.contraction_gap(x, cx)[0])
+        k = max(1, int(round(d * 0.5)))
+        expect = (1 - k / d) * nrm
+        assert np.mean(gaps) <= expect * 1.35 + 1e-6
+
+
+class TestQuant:
+    @settings(max_examples=20, deadline=None)
+    @given(d=st.integers(4, 500), bits=st.integers(2, 8),
+           seed=st.integers(0, 2**16))
+    def test_contractive(self, d, bits, seed):
+        """Worst-case bound gap <= block/(4 L^2) ||x||^2 (see Config.q)."""
+        x = _rand(jax.random.PRNGKey(seed), (d,))
+        cfg = CompressorConfig(kind="quant", bits=bits, block=64)
+        cx = compression.compress_leaf(x, cfg)
+        gap, nrm = compression.contraction_gap(x, cx)
+        levels = 2.0 ** (bits - 1) - 1.0
+        bound = min(cfg.block, d) / (4.0 * levels * levels)
+        assert gap <= bound * nrm + 1e-6
+
+    def test_high_bits_near_lossless(self, key):
+        x = _rand(key, (128,))
+        cfg = CompressorConfig(kind="quant", bits=16, block=128)
+        cx = compression.compress_leaf(x, cfg)
+        np.testing.assert_allclose(np.asarray(cx), np.asarray(x), atol=1e-3)
+
+
+class TestPacking:
+    @settings(max_examples=20, deadline=None)
+    @given(d=st.integers(4, 600), block=st.sampled_from([16, 64, 128]),
+           ratio=st.floats(0.05, 0.8), seed=st.integers(0, 2**16))
+    def test_pack_unpack_roundtrip(self, d, block, ratio, seed):
+        """unpack(pack(x)) == blockwise-dense-topk(x)."""
+        x = _rand(jax.random.PRNGKey(seed), (d,))
+        cfg = CompressorConfig(kind="topk", ratio=ratio, block=block)
+        dense = packing.block_topk_dense(x, cfg)
+        p = packing.block_topk_pack(x, cfg)
+        recon = packing.block_topk_unpack(p, x.shape, x.dtype,
+                                          block=packing.choose_block(d, block))
+        np.testing.assert_allclose(np.asarray(dense), np.asarray(recon),
+                                   rtol=1e-6, atol=1e-6)
+        # independent check: kept entries appear at their original positions
+        nz = np.flatnonzero(np.asarray(dense))
+        np.testing.assert_allclose(np.asarray(dense)[nz], np.asarray(x)[nz],
+                                   rtol=1e-6)
+
+    def test_blockwise_contractive(self, key):
+        x = _rand(key, (512,))
+        cfg = CompressorConfig(kind="topk", ratio=0.25, block=64)
+        cx = packing.block_topk_dense(x, cfg)
+        gap, nrm = compression.contraction_gap(x, cx)
+        assert gap <= (1 - 0.25) * nrm + 1e-6
+
+    def test_packed_bytes_smaller(self, key):
+        x = _rand(key, (4096,))
+        cfg = CompressorConfig(kind="topk", ratio=0.1, block=256)
+        p = packing.block_topk_pack(x, cfg)
+        assert packing.packed_bytes(p) < x.size * x.dtype.itemsize * 0.25
+
+
+def test_message_bytes_accounting(key):
+    tree = {"a": _rand(key, (100,)), "b": _rand(key, (50, 2))}
+    dense = compression.message_bytes(tree, CompressorConfig(kind="none"))
+    topk = compression.message_bytes(tree, CompressorConfig(kind="topk", ratio=0.1))
+    quant = compression.message_bytes(tree, CompressorConfig(kind="quant", bits=4, block=64))
+    assert dense == 4 * 200
+    assert topk == 8 * 20
+    assert quant < dense / 4
+
+
+class TestNatural:
+    def test_unbiased(self, key):
+        """Natural compression is unbiased: E[C(x)] == x."""
+        x = jax.random.normal(key, (64,))
+        cfg = CompressorConfig(kind="natural")
+        acc = jnp.zeros_like(x)
+        n = 200
+        for i in range(n):
+            acc = acc + compression.compress_leaf(x, cfg, jax.random.fold_in(key, i))
+        np.testing.assert_allclose(np.asarray(acc / n), np.asarray(x),
+                                   rtol=0.15, atol=0.05)
+
+    def test_powers_of_two(self, key):
+        x = jax.random.normal(key, (32,))
+        cfg = CompressorConfig(kind="natural")
+        cx = compression.compress_leaf(x, cfg, key)
+        mags = np.abs(np.asarray(cx))
+        mags = mags[mags > 0]
+        log2 = np.log2(mags)
+        np.testing.assert_allclose(log2, np.round(log2), atol=1e-5)
+
+    def test_bounded_variance(self, key):
+        """omega = 1/8 variance bound: E||C(x)-x||^2 <= (1/8)||x||^2."""
+        x = jax.random.normal(key, (128,))
+        cfg = CompressorConfig(kind="natural")
+        gaps = []
+        for i in range(50):
+            cx = compression.compress_leaf(x, cfg, jax.random.fold_in(key, i))
+            gaps.append(compression.contraction_gap(x, cx)[0])
+        nrm = float(jnp.sum(x ** 2))
+        assert np.mean(gaps) <= nrm / 8 * 1.3

@@ -1,0 +1,160 @@
+"""Integration tests: FedSGM (Algorithm 1) end-to-end on the NP task,
+validating the paper's qualitative claims (EXPERIMENTS.md cites these)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import CompressorConfig, FedConfig, SwitchConfig
+from repro.core import baselines, fedsgm
+from repro.tasks import np_classification as npc
+
+EPS = 0.35
+
+
+@pytest.fixture(scope="module")
+def np_data():
+    key = jax.random.PRNGKey(0)
+    (xs, ys), test = npc.make_dataset(key, n_clients=10)
+    return (xs, ys), test
+
+
+def _cfg(**kw):
+    base = dict(n_clients=10, m=10, local_steps=3, lr=0.1,
+                switch=SwitchConfig(mode="hard", eps=EPS),
+                uplink=CompressorConfig(kind="none"),
+                downlink=CompressorConfig(kind="none"))
+    base.update(kw)
+    return FedConfig(**base)
+
+
+def _run(cfg, np_data, T=150):
+    (xs, ys), _ = np_data
+    params = npc.init_params(jax.random.PRNGKey(1), xs.shape[-1])
+    state = fedsgm.init_state(params, cfg)
+    state, hist = fedsgm.run_rounds(
+        state, lambda t, k: (xs, ys), npc.loss_pair, cfg, T=T)
+    wbar = fedsgm.averaged_iterate(state)
+    f, g = npc.loss_pair(wbar, (xs.reshape(-1, xs.shape[-1]), ys.reshape(-1)))
+    return float(f), float(g), hist, state
+
+
+def test_hard_switching_eps_solution(np_data):
+    f, g, hist, _ = _run(_cfg(), np_data)
+    assert f < 0.69, "objective must improve over init (log 2)"
+    assert g <= EPS + 0.05, f"averaged iterate must be ~feasible, g={g}"
+
+
+def test_soft_switching_eps_solution(np_data):
+    f, g, hist, _ = _run(
+        _cfg(switch=SwitchConfig(mode="soft", eps=EPS, beta=2 / EPS)), np_data)
+    assert f < 0.69
+    assert g <= EPS + 0.05
+
+
+def test_partial_participation_converges(np_data):
+    f, g, hist, _ = _run(_cfg(m=5), np_data)
+    assert f < 0.69
+    assert g <= EPS + 0.08  # extra concentration slack (Theorem 1 partial)
+
+
+def test_bidirectional_compression_ef(np_data):
+    f, g, hist, _ = _run(
+        _cfg(uplink=CompressorConfig(kind="topk", ratio=0.1),
+             downlink=CompressorConfig(kind="topk", ratio=0.1)), np_data,
+        T=250)
+    assert f < 0.69
+    assert g <= EPS + 0.05
+
+
+def test_compression_slows_but_converges(np_data):
+    """Paper Fig. 2 bottom: aggressive K/d=0.1 converges slower than dense."""
+    f_dense, _, h_dense, _ = _run(_cfg(), np_data, T=60)
+    f_comp, _, h_comp, _ = _run(
+        _cfg(uplink=CompressorConfig(kind="topk", ratio=0.05),
+             downlink=CompressorConfig(kind="topk", ratio=0.05)),
+        np_data, T=60)
+    # early-round objective should favor the uncompressed run
+    early_dense = float(np.mean(np.asarray(h_dense.f[5:30])))
+    early_comp = float(np.mean(np.asarray(h_comp.f[5:30])))
+    assert early_dense <= early_comp + 0.02
+
+
+def test_packed_comm_matches_dense_math(np_data):
+    """comm='packed' (blockwise) stays a valid contractive compressor."""
+    f, g, hist, _ = _run(
+        _cfg(comm="packed",
+             uplink=CompressorConfig(kind="topk", ratio=0.2, block=8),
+             downlink=CompressorConfig(kind="topk", ratio=0.2, block=8)),
+        np_data, T=200)
+    assert f < 0.69
+    assert g <= EPS + 0.05
+
+
+def test_local_steps_speed_vs_drift(np_data):
+    """Paper Fig. 2 top: E>1 speeds early progress per round."""
+    _, _, h1, _ = _run(_cfg(local_steps=1), np_data, T=40)
+    _, _, h5, _ = _run(_cfg(local_steps=5), np_data, T=40)
+    assert float(h5.f[10]) <= float(h1.f[10]) + 1e-3
+
+
+def test_switching_actually_switches(np_data):
+    _, _, hist, _ = _run(_cfg(), np_data, T=200)
+    sig = np.asarray(hist.sigma)
+    assert sig.max() == 1.0 and sig.min() == 0.0, "both branches must fire"
+
+
+def test_averaged_iterate_weights_positive(np_data):
+    _, _, hist, state = _run(_cfg(), np_data, T=100)
+    assert float(state.wbar_weight) > 0
+
+
+def test_projection_ball(np_data):
+    cfg = _cfg(proj_radius=0.5)
+    _, _, _, state = _run(cfg, np_data, T=50)
+    from repro.optim.sgd import tree_norm
+    assert float(tree_norm(state.w)) <= 0.5 + 1e-5
+
+
+def test_centralized_special_case(np_data):
+    """n=1, m=1, E=1, no compression: plain SGM (paper Remark)."""
+    (xs, ys), _ = np_data
+    x_all = xs.reshape(1, -1, xs.shape[-1])
+    y_all = ys.reshape(1, -1)
+    cfg = _cfg(n_clients=1, m=1, local_steps=1)
+    params = npc.init_params(jax.random.PRNGKey(1), xs.shape[-1])
+    state = fedsgm.init_state(params, cfg)
+    state, hist = fedsgm.run_rounds(
+        state, lambda t, k: (x_all, y_all), npc.loss_pair, cfg, T=150)
+    assert float(hist.f[-1]) < 0.5
+
+
+def test_penalty_baseline_rho_sensitivity(np_data):
+    """Paper Fig. 6: small rho -> infeasible; FedSGM needs no such tuning."""
+    (xs, ys), _ = np_data
+    params = npc.init_params(jax.random.PRNGKey(1), xs.shape[-1])
+    g_final = {}
+    for rho in (0.0, 5.0):
+        st = baselines.penalty_init(params)
+        step = jax.jit(lambda s: baselines.penalty_round(
+            s, (xs, ys), npc.loss_pair, rho=rho, eps=EPS, lr=0.1,
+            local_steps=3, n_clients=10, m=10))
+        for _ in range(150):
+            st, mx = step(st)
+        _, g = npc.loss_pair(st.w, (xs.reshape(-1, xs.shape[-1]), ys.reshape(-1)))
+        g_final[rho] = float(g)
+    assert g_final[0.0] > g_final[5.0], "penalty strength must matter"
+
+
+def test_memory_scaled_state(np_data):
+    """x is None w/o downlink compression; e_up None w/o uplink."""
+    (xs, ys), _ = np_data
+    params = npc.init_params(jax.random.PRNGKey(1), xs.shape[-1])
+    cfg = _cfg(track_wbar=False)
+    state = fedsgm.init_state(params, cfg)
+    assert state.x is None and state.e_up is None and state.wbar_sum is None
+    state2, _ = jax.jit(
+        lambda s, b: fedsgm.round_step(s, b, npc.loss_pair, cfg))(state, (xs, ys))
+    assert state2.x is None

@@ -1,0 +1,259 @@
+"""Per-architecture smoke + consistency tests (reduced configs, CPU).
+
+Every assigned arch: one forward/train step with shape + NaN assertions
+(the brief's smoke requirement), prefill+decode == full forward, and
+family-specific correctness checks (SSD vs naive recurrence, RG-LRU scan vs
+loop, MoE dispatch vs dense loop)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.configs.base import CompressorConfig, FedConfig, SwitchConfig
+from repro.core import fedsgm
+from repro.models import build
+from repro.tasks import lm
+
+ARCHS = configs.all_arch_names()
+
+
+def _inputs(cfg, key, B=2, S=12):
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    kw = {}
+    if cfg.family in ("vlm", "audio"):
+        M = cfg.n_media_tokens or cfg.n_audio_frames
+        kw["media"] = jax.random.normal(key, (B, M, cfg.d_media or cfg.d_model)) * 0.1
+    return toks, kw
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward(arch, key):
+    cfg = configs.get_reduced(arch)
+    fns = build(cfg)
+    params = fns.init(key, cfg)
+    toks, kw = _inputs(cfg, key)
+    out = fns.forward(params, cfg, toks, **kw)
+    logits = out[0] if isinstance(out, tuple) else out
+    assert logits.shape == (2, 12, cfg.vocab)
+    assert not np.any(np.isnan(np.asarray(logits)))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_train_step(arch, key):
+    """One FedSGM round per reduced arch: finite losses, params move."""
+    cfg = configs.get_reduced(arch)
+    if cfg.moe:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=4.0))
+    fns = build(cfg)
+    params = fns.init(key, cfg)
+    n, b, S = 2, 2, 12
+    toks = jax.random.randint(key, (n, b, S), 0, cfg.vocab)
+    mask = jnp.zeros((n, b, S)).at[:, :, -2:].set(1.0)
+    media = None
+    if cfg.family in ("vlm", "audio"):
+        M = cfg.n_media_tokens or cfg.n_audio_frames
+        media = jax.random.normal(key, (n, b, M, cfg.d_media or cfg.d_model)) * 0.1
+    batches = lm.LMBatch(tokens=toks, minority_mask=mask, media=media)
+    loss_pair = lm.make_loss_pair(fns.forward, cfg, budget=1.0,
+                                  aux_constraint=cfg.moe is not None)
+    fed = FedConfig(n_clients=n, m=n, local_steps=1, lr=0.05,
+                    switch=SwitchConfig(mode="soft", eps=0.0, beta=2.0),
+                    uplink=CompressorConfig(kind="topk", ratio=0.3),
+                    downlink=CompressorConfig(kind="none"))
+    state = fedsgm.init_state(params, fed)
+    state2, metrics = jax.jit(
+        lambda s, bb: fedsgm.round_step(s, bb, loss_pair, fed))(state, batches)
+    assert np.isfinite(float(metrics.f))
+    assert np.isfinite(float(metrics.g_hat))
+    moved = jax.tree_util.tree_map(
+        lambda a, b_: float(jnp.max(jnp.abs(a - b_))), state.w, state2.w)
+    assert max(jax.tree_util.tree_leaves(moved)) > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_consistency(arch, key):
+    cfg = configs.get_reduced(arch)
+    if cfg.moe:  # avoid capacity-drop nondeterminism across batch layouts
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    fns = build(cfg)
+    params = fns.init(key, cfg)
+    B, S, CAP = 2, 8, 12
+    toks, kw = _inputs(cfg, key, B, S)
+    out = fns.forward(params, cfg, toks, **kw)
+    full = out[0] if isinstance(out, tuple) else out
+    P = S - 3
+    pl, cache = fns.prefill(params, cfg, toks[:, :P], CAP, **kw)
+    errs = [np.max(np.abs(np.asarray(pl).reshape(B, -1)
+                          - np.asarray(full[:, P - 1]).reshape(B, -1)))]
+    for t in range(P, S):
+        dl, cache = fns.decode_step(params, cfg, toks[:, t:t + 1], cache, t)
+        errs.append(np.max(np.abs(np.asarray(dl).reshape(B, -1)
+                                  - np.asarray(full[:, t]).reshape(B, -1))))
+    assert max(errs) < 2e-3, f"{arch}: {errs}"
+
+
+def test_causality(key):
+    """Future tokens must not affect past logits (dense arch)."""
+    cfg = configs.get_reduced("qwen3-4b")
+    fns = build(cfg)
+    params = fns.init(key, cfg)
+    toks = jax.random.randint(key, (1, 10), 0, cfg.vocab)
+    toks2 = toks.at[0, -1].set((toks[0, -1] + 7) % cfg.vocab)
+    l1 = fns.forward(params, cfg, toks)
+    l2 = fns.forward(params, cfg, toks2)
+    np.testing.assert_allclose(np.asarray(l1[:, :-1]), np.asarray(l2[:, :-1]),
+                               atol=1e-5)
+
+
+def test_sliding_window_limits_context(key):
+    """gemma3 local layers: distant tokens are invisible."""
+    cfg = dataclasses.replace(configs.get_reduced("gemma3-4b"),
+                              window=4, local_global_ratio=0, n_layers=2)
+    fns = build(cfg)
+    params = fns.init(key, cfg)
+    toks = jax.random.randint(key, (1, 16), 0, cfg.vocab)
+    toks2 = toks.at[0, 0].set((toks[0, 0] + 3) % cfg.vocab)
+    l1 = fns.forward(params, cfg, toks)
+    l2 = fns.forward(params, cfg, toks2)
+    # position 0 change invisible at positions >= window (4) + margin
+    np.testing.assert_allclose(np.asarray(l1[:, 8:]), np.asarray(l2[:, 8:]),
+                               atol=1e-5)
+    assert np.abs(np.asarray(l1[:, 0]) - np.asarray(l2[:, 0])).max() > 1e-4
+
+
+class TestMamba2:
+    def test_ssd_matches_naive_recurrence(self, key):
+        """Chunked SSD == step-by-step state recurrence."""
+        from repro.models.mamba2 import ssd
+        b, l, h, p, n = 1, 12, 2, 4, 8
+        ks = jax.random.split(key, 4)
+        x = jax.random.normal(ks[0], (b, l, h, p)) * 0.5
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (b, l, h)))
+        A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+        B = jax.random.normal(ks[3], (b, l, 1, n)) * 0.5
+        C = jax.random.normal(jax.random.fold_in(key, 9), (b, l, 1, n)) * 0.5
+        y, S_fin = ssd(x, dt, A, B, C, chunk=4)
+        # naive recurrence
+        S = jnp.zeros((b, h, p, n))
+        ys = []
+        for t in range(l):
+            dec = jnp.exp(dt[:, t] * A[None])                  # [b,h]
+            upd = jnp.einsum("bh,bhp,bn->bhpn", dt[:, t], x[:, t], B[:, t, 0])
+            S = dec[..., None, None] * S + upd
+            ys.append(jnp.einsum("bn,bhpn->bhp", C[:, t, 0], S))
+        y_naive = jnp.stack(ys, axis=1)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_naive),
+                                   rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(np.asarray(S_fin), np.asarray(S),
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_chunk_size_invariance(self, key):
+        from repro.models.mamba2 import ssd
+        b, l, h, p, n = 2, 16, 2, 4, 4
+        ks = jax.random.split(key, 4)
+        x = jax.random.normal(ks[0], (b, l, h, p))
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (b, l, h)))
+        A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+        B = jax.random.normal(ks[3], (b, l, 1, n))
+        C = jax.random.normal(jax.random.fold_in(key, 5), (b, l, 1, n))
+        y4, _ = ssd(x, dt, A, B, C, chunk=4)
+        y8, _ = ssd(x, dt, A, B, C, chunk=8)
+        np.testing.assert_allclose(np.asarray(y4), np.asarray(y8),
+                                   rtol=1e-4, atol=1e-4)
+
+
+class TestGriffin:
+    def test_rglru_scan_matches_loop(self, key):
+        from repro.models.griffin import _rglru_scan
+        b, l, w = 2, 9, 5
+        a = jax.nn.sigmoid(jax.random.normal(key, (b, l, w)))
+        bb = jax.random.normal(jax.random.fold_in(key, 1), (b, l, w))
+        h = _rglru_scan(a, bb)
+        hp = jnp.zeros((b, w))
+        outs = []
+        for t in range(l):
+            hp = a[:, t] * hp + bb[:, t]
+            outs.append(hp)
+        np.testing.assert_allclose(np.asarray(h), np.asarray(jnp.stack(outs, 1)),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_rglru_initial_state(self, key):
+        from repro.models.griffin import _rglru_scan
+        a = jax.nn.sigmoid(jax.random.normal(key, (1, 4, 3)))
+        bb = jax.random.normal(jax.random.fold_in(key, 1), (1, 4, 3))
+        h0 = jax.random.normal(jax.random.fold_in(key, 2), (1, 3))
+        h = _rglru_scan(a, jnp.array(bb), h0=h0)
+        hp = h0
+        for t in range(4):
+            hp = a[:, t] * hp + bb[:, t]
+        np.testing.assert_allclose(np.asarray(h[:, -1]), np.asarray(hp),
+                                   rtol=1e-5, atol=1e-5)
+
+
+class TestMoE:
+    def test_dispatch_matches_dense_loop(self, key):
+        """Scatter dispatch == brute-force per-expert computation."""
+        from repro.configs.base import MoEConfig
+        from repro.models import moe
+        mcfg = MoEConfig(n_experts=4, n_shared=0, top_k=2, d_expert=8,
+                         capacity_factor=8.0, router_group=16)
+        d = 6
+        p = moe.init(key, d, mcfg)
+        x = jax.random.normal(jax.random.fold_in(key, 1), (16, d))
+        y, aux = moe.moe_ffn(p, x, mcfg)
+        # dense reference: route every token through its top-k experts
+        logits = x @ p["router"]
+        probs = jax.nn.softmax(logits, -1)
+        gates, idx = jax.lax.top_k(probs, 2)
+        gates = gates / gates.sum(-1, keepdims=True)
+        y_ref = jnp.zeros_like(x)
+        w = p["experts"]
+        for t in range(16):
+            acc = jnp.zeros((d,))
+            for j in range(2):
+                e = int(idx[t, j])
+                h = jax.nn.silu(x[t] @ w["w_gate"][e]) * (x[t] @ w["w_up"][e])
+                acc = acc + gates[t, j] * (h @ w["w_down"][e])
+            y_ref = y_ref.at[t].set(acc)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_capacity_drops_tokens(self, key):
+        from repro.configs.base import MoEConfig
+        from repro.models import moe
+        tight = MoEConfig(n_experts=4, n_shared=0, top_k=2, d_expert=8,
+                          capacity_factor=0.25, router_group=32)
+        p = moe.init(key, 6, tight)
+        x = jax.random.normal(jax.random.fold_in(key, 1), (32, 6))
+        y_tight, _ = moe.moe_ffn(p, x, tight)
+        import dataclasses as dc
+        loose = dc.replace(tight, capacity_factor=8.0)
+        y_loose, _ = moe.moe_ffn(p, x, loose)
+        assert np.abs(np.asarray(y_tight - y_loose)).max() > 1e-4
+
+    def test_balance_aux_uniform_is_zero(self, key):
+        """aux == 0 when routing is perfectly uniform (by construction)."""
+        from repro.configs.base import MoEConfig
+        from repro.models import moe
+        mcfg = MoEConfig(n_experts=2, n_shared=0, top_k=2, d_expert=4,
+                         capacity_factor=8.0, router_group=8)
+        p = moe.init(key, 4, mcfg)
+        x = jax.random.normal(jax.random.fold_in(key, 1), (8, 4))
+        _, aux = moe.moe_ffn(p, x, mcfg)  # top-2 of 2 experts => f_e uniform
+        assert abs(float(aux)) < 0.25
+
+
+def test_mtp_head_present(key):
+    cfg = configs.get_reduced("deepseek-v3-671b")
+    fns = build(cfg)
+    params = fns.init(key, cfg)
+    toks = jax.random.randint(key, (1, 8), 0, cfg.vocab)
+    out = fns.forward(params, cfg, toks)
+    assert isinstance(out, tuple) and len(out) == 3
+    logits, aux, mtp = out
+    assert mtp.shape == (1, 7, cfg.vocab)

@@ -1,0 +1,120 @@
+"""Switching rule + error-feedback invariant tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import CompressorConfig, SwitchConfig
+from repro.core import error_feedback, switching, theory
+
+
+class TestSwitching:
+    @settings(max_examples=30, deadline=None)
+    @given(v=st.floats(-10, 10), beta=st.floats(0.1, 100))
+    def test_sigma_in_unit_interval(self, v, beta):
+        s = float(switching.sigma_beta(jnp.asarray(v), beta))
+        assert 0.0 <= s <= 1.0
+
+    @settings(max_examples=20, deadline=None)
+    @given(beta=st.floats(0.5, 50))
+    def test_sigma_monotone(self, beta):
+        vs = jnp.linspace(-5, 5, 101)
+        s = switching.sigma_beta(vs, beta)
+        assert bool(jnp.all(jnp.diff(s) >= -1e-7))
+
+    def test_soft_to_hard_limit(self):
+        """beta -> inf recovers the hard indicator (paper Section 3.2)."""
+        cfg_hard = SwitchConfig(mode="hard", eps=0.1)
+        cfg_soft = SwitchConfig(mode="soft", eps=0.1, beta=1e8)
+        for g in (-0.5, 0.0, 0.09, 0.11, 1.0):
+            h = float(switching.switch_weight(jnp.asarray(g), cfg_hard))
+            s = float(switching.switch_weight(jnp.asarray(g), cfg_soft))
+            if abs(g - 0.1) > 1e-6:
+                assert abs(h - s) < 1e-3, (g, h, s)
+
+    def test_trimmed_hinge_form(self):
+        """sigma_beta(x) = clip(1 + beta x, 0, 1) exactly."""
+        for x in (-1.0, -0.01, 0.0, 0.004, 1.0):
+            s = float(switching.sigma_beta(jnp.asarray(x), 40.0))
+            assert abs(s - min(1.0, max(0.0, 1 + 40.0 * x))) < 1e-6
+
+    def test_averaged_iterate_weights(self):
+        hard = SwitchConfig(mode="hard", eps=0.1)
+        soft = SwitchConfig(mode="soft", eps=0.1, beta=20.0)
+        assert float(switching.averaged_iterate_weight(jnp.asarray(0.05), hard)) == 1.0
+        assert float(switching.averaged_iterate_weight(jnp.asarray(0.2), hard)) == 0.0
+        # soft: zero weight at/above eps, positive strictly below eps-1/beta
+        assert float(switching.averaged_iterate_weight(jnp.asarray(0.2), soft)) == 0.0
+        assert float(switching.averaged_iterate_weight(jnp.asarray(0.0), soft)) > 0.0
+
+    def test_beta_min(self):
+        assert theory.beta_min(0.05) == 40.0
+
+
+class TestErrorFeedback:
+    def test_ef_telescoping(self, key):
+        """EF14 invariant: sum_t v_t + e_T = sum_t Delta_t (lossless memory)."""
+        cfg = CompressorConfig(kind="topk", ratio=0.2)
+        e = {"w": jnp.zeros((64,))}
+        total_v = jnp.zeros((64,))
+        total_d = jnp.zeros((64,))
+        for t in range(20):
+            delta = {"w": jax.random.normal(jax.random.fold_in(key, t), (64,))}
+            v, e = error_feedback.uplink_step(e, delta, cfg)
+            total_v = total_v + v["w"]
+            total_d = total_d + delta["w"]
+        np.testing.assert_allclose(np.asarray(total_v + e["w"]),
+                                   np.asarray(total_d), rtol=1e-5, atol=1e-5)
+
+    def test_ef_residual_bounded(self, key):
+        """Residual norm stays bounded (geometric contraction, Lemma 9)."""
+        cfg = CompressorConfig(kind="topk", ratio=0.25)
+        e = {"w": jnp.zeros((128,))}
+        norms = []
+        for t in range(120):
+            delta = {"w": jax.random.normal(jax.random.fold_in(key, t), (128,))}
+            _, e = error_feedback.uplink_step(e, delta, cfg)
+            norms.append(float(jnp.linalg.norm(e["w"])))
+        # bound from Lemma 9: ||e||^2 <= 4(1-q)/q^2 * G^2 (G ~ ||delta||)
+        assert max(norms[60:]) < 4 * np.sqrt(128) * np.sqrt(4 * 0.75 / 0.25**2)
+        assert norms[-1] < 3 * max(norms[:5]) + 50
+
+    def test_downlink_ef21_tracks_center(self, key):
+        """w tracks x: ||x - w|| contracts when x stops moving."""
+        cfg = CompressorConfig(kind="topk", ratio=0.3)
+        x = {"w": jax.random.normal(key, (64,))}
+        w = {"w": jnp.zeros((64,))}
+        dists = []
+        for t in range(30):
+            w = error_feedback.downlink_step(w, x, cfg)
+            dists.append(float(jnp.linalg.norm(x["w"] - w["w"])))
+        assert dists[-1] < 1e-3 * dists[0] + 1e-6
+
+    def test_no_compression_identity(self, key):
+        cfg = CompressorConfig(kind="none")
+        delta = {"w": jax.random.normal(key, (32,))}
+        e = {"w": jnp.zeros((32,))}
+        v, e_new = error_feedback.uplink_step(e, delta, cfg)
+        np.testing.assert_allclose(np.asarray(v["w"]), np.asarray(delta["w"]))
+        assert float(jnp.abs(e_new["w"]).max()) == 0.0
+
+
+class TestTheory:
+    def test_gamma_no_compression(self):
+        assert theory.gamma_full(1, 1.0, 1.0) == 2.0
+        assert theory.gamma_full(5, 1.0, 1.0) == 50.0
+
+    def test_gamma_monotone_in_compression(self):
+        g1 = theory.gamma_full(5, 0.5, 0.5)
+        g2 = theory.gamma_full(5, 0.1, 0.1)
+        assert g2 > g1 > theory.gamma_full(5, 1.0, 1.0)
+
+    def test_rate_order(self):
+        """Rate halves when T quadruples (O(1/sqrt(T)))."""
+        r1 = theory.rate_bound(1.0, 1.0, 5, 100, 50.0)
+        r2 = theory.rate_bound(1.0, 1.0, 5, 400, 50.0)
+        assert abs(r1 / r2 - 2.0) < 1e-9
+
+    def test_partial_gamma_reduces_to_terms(self):
+        g = theory.gamma_partial(1, 1.0, 1.0, 10, 10)
+        assert abs(g - (2 + 20)) < 1e-9  # 2E^2 + 20E/q^2 at q=q0=1

@@ -1,0 +1,143 @@
+"""Task adapters + data pipeline tests (NP, CMDP, fair, LM, synthetic)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import synthetic
+from repro.tasks import cmdp, fair, lm, np_classification as npc
+
+
+class TestData:
+    def test_breast_cancer_like_stats(self, key):
+        x, y = synthetic.breast_cancer_like(key)
+        assert x.shape == (569, 30)
+        frac = float(jnp.mean(y))
+        assert 0.3 < frac < 0.5  # minority class ~37% + flips
+
+    def test_partition_iid_shapes(self, key):
+        x, y = synthetic.breast_cancer_like(key)
+        xs, ys = synthetic.partition_iid(key, x, y, 20)
+        assert xs.shape[0] == 20 and xs.shape[2] == 30
+        assert ys.shape == xs.shape[:2]
+
+    def test_partition_dirichlet_heterogeneous(self, key):
+        x, y = synthetic.breast_cancer_like(key)
+        xs, ys = synthetic.partition_dirichlet(key, x, y, 10, alpha=0.3)
+        fracs = np.asarray(jnp.mean(ys, axis=1))
+        assert fracs.std() > 0.05, "low alpha must produce label skew"
+
+    def test_token_stream(self, key):
+        toks, mask = synthetic.token_stream(key, 4, 64, 1000)
+        assert toks.shape == (4, 64) and toks.max() < 1000
+        # minority tail uses rare (upper-half) tokens
+        assert int(toks[:, -4:].min()) >= 500
+        assert float(mask[:, -4:].min()) == 1.0
+
+    def test_client_batches_heterogeneity(self, key):
+        toks, _ = synthetic.client_token_batches(key, 4, 2, 128, 1000, hetero=1.0)
+        assert toks.shape == (4, 2, 128)
+
+
+class TestNP:
+    def test_loss_pair_separates_classes(self, key):
+        x, y = synthetic.breast_cancer_like(key)
+        params = npc.init_params(key, 30)
+        f, g = npc.loss_pair(params, (x, y))
+        assert abs(float(f) - 0.6931) < 1e-3  # log 2 at init
+        assert abs(float(g) - 0.6931) < 1e-3
+
+    def test_gradients_flow(self, key):
+        x, y = synthetic.breast_cancer_like(key)
+        params = npc.init_params(key, 30)
+        gf = jax.grad(lambda p: npc.loss_pair(p, (x, y))[0])(params)
+        assert float(jnp.abs(gf["w"]).max()) > 0
+
+
+class TestCMDP:
+    def test_env_physics(self):
+        s = jnp.array([0.0, 0.0, 0.05, 0.0])
+        s2 = cmdp.env_step(s, 10.0)
+        assert float(s2[1]) > 0  # push right accelerates right
+
+    def test_cost_zones(self):
+        assert float(cmdp.step_cost(jnp.array([0.0, 0, 0, 0]))) == 1.0   # center zone
+        assert float(cmdp.step_cost(jnp.array([0.5, 0, 0, 0]))) == 0.0
+        assert float(cmdp.step_cost(jnp.array([0.5, 0, 0.2, 0]))) == 1.0  # angle
+
+    def test_rollout_shapes(self, key):
+        params = cmdp.init_params(key)
+        traj = cmdp.rollout(params, key, 3, 50)
+        assert traj.obs.shape == (3, 50, 4)
+        assert float(traj.alive.max()) == 1.0
+        # alive is non-increasing per episode
+        diffs = np.diff(np.asarray(traj.alive), axis=1)
+        assert (diffs <= 1e-6).all()
+
+    def test_loss_pair_values_exact(self, key):
+        """The value/gradient splice reports exact reward/cost values."""
+        params = cmdp.init_params(key)
+        lp = cmdp.make_loss_pair(n_episodes=3, horizon=50)
+        f, g = lp(params, (key, 30.0))
+        traj = cmdp.rollout(params, key, 3, 50)
+        np.testing.assert_allclose(float(f), -float(traj.rewards.sum(-1).mean()),
+                                   rtol=1e-5)
+        np.testing.assert_allclose(float(g),
+                                   float(traj.costs.sum(-1).mean()) - 30.0,
+                                   rtol=1e-5)
+
+    def test_policy_gradient_nonzero(self, key):
+        params = cmdp.init_params(key)
+        lp = cmdp.make_loss_pair(n_episodes=3, horizon=40)
+        gf = jax.grad(lambda p: lp(p, (key, 30.0))[0])(params)
+        total = sum(float(jnp.abs(l).sum()) for l in jax.tree_util.tree_leaves(gf))
+        assert total > 0
+
+    def test_budgets(self):
+        b = cmdp.client_budgets(5)
+        assert float(b[0]) == 25.0 and float(b[-1]) == 35.0
+
+
+class TestFair:
+    def test_dp_constraint(self, key):
+        (xs, ys, as_), (x, y, a) = fair.make_dataset(key, 4)
+        params = fair.init_params(key, xs.shape[-1])
+        lp = fair.loss_pair_builder()
+        f, g = lp(params, (xs[0], ys[0], as_[0]))
+        assert np.isfinite(float(f)) and float(g) >= 0
+
+    def test_dp_metric_zero_for_constant(self, key):
+        (xs, ys, as_), (x, y, a) = fair.make_dataset(key, 4)
+        params = fair.init_params(key, xs.shape[-1])
+        zero = jax.tree_util.tree_map(jnp.zeros_like, params)
+        assert fair.demographic_parity(zero, x, y, a) < 1e-6
+
+
+class TestLM:
+    def test_minority_constraint(self, key):
+        from repro import configs
+        from repro.models import build
+        cfg = configs.get_reduced("smollm-360m")
+        fns = build(cfg)
+        params = fns.init(key, cfg)
+        toks, mask = synthetic.token_stream(key, 2, 32, cfg.vocab)
+        lp = lm.make_loss_pair(fns.forward, cfg, budget=1.0)
+        f, g = lp(params, lm.LMBatch(toks, mask))
+        assert np.isfinite(float(f)) and np.isfinite(float(g))
+        # budget shifts g only
+        lp2 = lm.make_loss_pair(fns.forward, cfg, budget=2.0)
+        f2, g2 = lp2(params, lm.LMBatch(toks, mask))
+        np.testing.assert_allclose(float(f), float(f2), rtol=1e-6)
+        np.testing.assert_allclose(float(g) - float(g2), 1.0, rtol=1e-5)
+
+    def test_moe_aux_constraint(self, key):
+        from repro import configs
+        from repro.models import build
+        cfg = configs.get_reduced("deepseek-v2-236b")
+        fns = build(cfg)
+        params = fns.init(key, cfg)
+        toks, mask = synthetic.token_stream(key, 2, 16, cfg.vocab)
+        lp = lm.make_loss_pair(fns.forward, cfg, budget=0.02,
+                               aux_constraint=True)
+        f, g = lp(params, lm.LMBatch(toks, mask))
+        assert np.isfinite(float(g))

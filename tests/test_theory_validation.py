@@ -1,0 +1,155 @@
+"""Validation of the paper's own quantitative claims (EXPERIMENTS.md §Paper
+claims cites these tests).
+
+Synthetic convex problem with a known optimum so D = ||w0 - w*|| and G are
+computable, letting us check Theorem 1's prescribed (eta*, eps*) actually
+yields an eps*-solution, the O(1/sqrt(T)) scaling, and the sqrt(E) drift
+factor."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import CompressorConfig, FedConfig, SwitchConfig
+from repro.core import fedsgm, theory
+
+D_TRUE = 2.0
+N, DIM = 8, 12
+
+
+def _quadratic_problem(key):
+    """f_j(w) = ||w - a_j||^2/2, g_j(w) = <b, w> + c_j (convex, G-Lipschitz
+    on the ball); optimum of mean objective = mean(a_j) projected to g<=0."""
+    ka, kb = jax.random.split(key)
+    a = jax.random.normal(ka, (N, DIM)) * 0.5
+    b = jax.random.normal(kb, (DIM,))
+    b = b / jnp.linalg.norm(b)
+
+    def loss_pair(params, batch):
+        a_j, c_j = batch
+        f = 0.5 * jnp.sum((params["w"] - a_j) ** 2)
+        g = jnp.dot(b, params["w"]) + c_j
+        return f, g
+
+    c = -jnp.dot(b, a.mean(0)) + 0.1   # constraint active near optimum
+    batches = (a, jnp.full((N,), c))
+    return loss_pair, batches, a, b, c
+
+
+def _run(loss_pair, batches, T, E, eta, eps, mode="hard"):
+    params = {"w": jnp.zeros((DIM,))}
+    cfg = FedConfig(n_clients=N, m=N, local_steps=E, lr=eta,
+                    switch=SwitchConfig(mode=mode, eps=eps,
+                                        beta=theory.beta_min(max(eps, 1e-3))),
+                    uplink=CompressorConfig(kind="none"),
+                    downlink=CompressorConfig(kind="none"),
+                    proj_radius=D_TRUE * 2)
+    state = fedsgm.init_state(params, cfg)
+    state, hist = fedsgm.run_rounds(
+        state, lambda t, k: batches, loss_pair, cfg, T=T)
+    wbar = fedsgm.averaged_iterate(state)
+    fs, gs = jax.vmap(lambda aj, cj: loss_pair(wbar, (aj, cj)))(*batches)
+    return float(fs.mean()), float(gs.mean()), state
+
+
+class TestTheorem1:
+    def test_prescribed_eta_eps_gives_eps_solution(self, key):
+        """Theorem 1 full participation, no compression: with eta*, eps* the
+        averaged iterate satisfies f - f* <= eps and g <= eps."""
+        loss_pair, batches, a, b, c = _quadratic_problem(key)
+        G, E, T = 3.0, 2, 400
+        gamma = theory.gamma_full(E, 1.0, 1.0)
+        eta = theory.eta_star(D_TRUE, G, E, T, gamma)
+        eps = theory.eps_star_full(D_TRUE, G, E, T, gamma)
+        f_bar, g_bar, _ = _run(loss_pair, batches, T, E, eta, eps)
+        # f* lower bound: unconstrained optimum of the mean quadratic
+        w_star = a.mean(0)
+        f_star = float(jax.vmap(
+            lambda aj: 0.5 * jnp.sum((w_star - aj) ** 2))(a).mean())
+        assert g_bar <= eps + 1e-3, (g_bar, eps)
+        assert f_bar - f_star <= eps + 0.05, (f_bar - f_star, eps)
+
+    def test_rate_scales_one_over_sqrt_T(self, key):
+        """Gap at the prescribed schedule shrinks ~1/sqrt(T)."""
+        loss_pair, batches, a, b, c = _quadratic_problem(key)
+        G, E = 3.0, 1
+        gaps = {}
+        for T in (64, 576):  # 9x => expect ~3x smaller eps*
+            gamma = theory.gamma_full(E, 1.0, 1.0)
+            eta = theory.eta_star(D_TRUE, G, E, T, gamma)
+            eps = theory.eps_star_full(D_TRUE, G, E, T, gamma)
+            f_bar, g_bar, _ = _run(loss_pair, batches, T, E, eta, eps)
+            gaps[T] = max(g_bar, 0.0) + eps
+        assert gaps[576] < gaps[64], gaps
+
+    def test_soft_matches_hard_rate(self, key):
+        """Theorem 2: soft switching with beta >= 2/eps matches hard."""
+        loss_pair, batches, a, b, c = _quadratic_problem(key)
+        G, E, T = 3.0, 2, 300
+        gamma = theory.gamma_full(E, 1.0, 1.0)
+        eta = theory.eta_star(D_TRUE, G, E, T, gamma)
+        eps = theory.eps_star_full(D_TRUE, G, E, T, gamma)
+        fh, gh, _ = _run(loss_pair, batches, T, E, eta, eps, "hard")
+        fs, gs, _ = _run(loss_pair, batches, T, E, eta, eps, "soft")
+        assert abs(fh - fs) < 0.35
+        assert gs <= eps + 1e-2
+
+
+class TestStochastic:
+    def test_minibatch_noise_still_converges(self, key):
+        """Stochastic FedSGM (Appendix D): per-round client data resampling."""
+        loss_pair, batches, a, b, c = _quadratic_problem(key)
+        a_full, c_full = batches
+
+        def noisy_batch(t, k):
+            noise = jax.random.normal(k, a_full.shape) * 0.3
+            return (a_full + noise, c_full)
+
+        params = {"w": jnp.zeros((DIM,))}
+        cfg = FedConfig(n_clients=N, m=N // 2, local_steps=2, lr=0.02,
+                        switch=SwitchConfig(mode="soft", eps=0.1, beta=20.0),
+                        uplink=CompressorConfig(kind="topk", ratio=0.3),
+                        downlink=CompressorConfig(kind="none"),
+                        proj_radius=4.0)
+        state = fedsgm.init_state(params, cfg)
+        state, hist = fedsgm.run_rounds(
+            state, noisy_batch, loss_pair, cfg, T=250)
+        wbar = fedsgm.averaged_iterate(state)
+        fs, gs = jax.vmap(lambda aj, cj: loss_pair(wbar, (aj, cj)))(
+            a_full, c_full)
+        f0 = float(jax.vmap(lambda aj: 0.5 * jnp.sum(aj ** 2))(a_full).mean())
+        assert float(fs.mean()) < f0          # improved over w0 = 0
+        assert float(gs.mean()) <= 0.1 + 0.15  # eps + concentration slack
+
+
+class TestInvariants:
+    def test_client_permutation_invariance(self, key):
+        """Full participation: permuting clients leaves the update unchanged."""
+        loss_pair, batches, *_ = _quadratic_problem(key)
+        a, c = batches
+        cfg = FedConfig(n_clients=N, m=N, local_steps=2, lr=0.05,
+                        switch=SwitchConfig(mode="soft", eps=0.1, beta=20.0),
+                        uplink=CompressorConfig(kind="none"),
+                        downlink=CompressorConfig(kind="none"))
+        params = {"w": jnp.ones((DIM,))}
+        state = fedsgm.init_state(params, cfg)
+        perm = jax.random.permutation(key, N)
+        s1, _ = fedsgm.round_step(state, (a, c), loss_pair, cfg)
+        s2, _ = fedsgm.round_step(state, (a[perm], c[perm]), loss_pair, cfg)
+        np.testing.assert_allclose(np.asarray(s1.w["w"]),
+                                   np.asarray(s2.w["w"]), rtol=1e-5)
+
+    def test_sigma_constant_blend_equals_grad_of_blend(self, key):
+        """grad((1-s)f + s g) == (1-s) grad f + s grad g (round-constant s)."""
+        loss_pair, batches, *_ = _quadratic_problem(key)
+        a, c = batches
+        params = {"w": jnp.ones((DIM,))}
+        s = 0.37
+        gfull = jax.grad(
+            lambda p: (1 - s) * loss_pair(p, (a[0], c[0]))[0]
+            + s * loss_pair(p, (a[0], c[0]))[1])(params)
+        gf = jax.grad(lambda p: loss_pair(p, (a[0], c[0]))[0])(params)
+        gg = jax.grad(lambda p: loss_pair(p, (a[0], c[0]))[1])(params)
+        np.testing.assert_allclose(
+            np.asarray(gfull["w"]),
+            np.asarray((1 - s) * gf["w"] + s * gg["w"]), rtol=1e-6)
