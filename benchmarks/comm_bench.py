@@ -1,13 +1,21 @@
 """Communication-efficiency table: wire bytes per round per client for each
 compressor across the assigned architectures (the paper's core argument in
-bandwidth terms).  Analytic (message_bytes), no device allocation.
+bandwidth terms).  Two columns per row, no device allocation:
+
+* ``analytic_bytes``  -- the closed-form estimate (compression.message_bytes),
+* ``measured_bytes``  -- derived from the transport layer's actual wire
+  representation (payload shapes), per backend.
+
+The two agree exactly for topk on the ref backend and for quant whenever the
+block size divides the tensor dims (divisor-blocking vs the analytic ceil;
+asserted in tests/test_comm.py).
 """
 from __future__ import annotations
 
 import jax
 
 from benchmarks.common import emit
-from repro import configs
+from repro import comm, configs
 from repro.configs.base import CompressorConfig
 from repro.core.compression import message_bytes
 from repro.models import build
@@ -21,6 +29,10 @@ COMPRESSORS = [
     ("natural", CompressorConfig(kind="natural")),
 ]
 
+# backend whose wire representation the measured column reports
+BACKEND = {"none": "ref", "topk": "ref", "randk": "ref",
+           "quant": "packed", "natural": "ref"}
+
 ARCHS = ["smollm-360m", "qwen3-4b", "mamba2-130m", "deepseek-v2-236b"]
 
 
@@ -32,10 +44,31 @@ def comm_table():
                                 jax.random.PRNGKey(0))
         dense = message_bytes(shapes, CompressorConfig(kind="none"))
         for name, comp in COMPRESSORS:
-            b = message_bytes(shapes, comp)
+            analytic = message_bytes(shapes, comp)
+            transport = comm.get_transport(comp, BACKEND[comp.kind])
+            measured = transport.wire_bytes(shapes)
             emit(f"comm_{arch}_{name}", 0.0,
-                 f"uplink_bytes={b};savings={1 - b / dense:.3f};"
+                 f"analytic_bytes={analytic};measured_bytes={measured};"
+                 f"savings={1 - analytic / dense:.3f};"
                  f"params={cfg.n_params()}")
 
 
-ALL = [comm_table]
+def packed_payload_table():
+    """Packed-wire sizes for the blockwise kinds (what the collective
+    actually moves under comm='packed')."""
+    for arch in ("smollm-360m", "mamba2-130m"):
+        cfg = configs.get_config(arch)
+        fns = build(cfg)
+        shapes = jax.eval_shape(lambda k: fns.init(k, cfg),
+                                jax.random.PRNGKey(0))
+        for name, comp in [
+                ("topk0.1", CompressorConfig(kind="topk", ratio=0.1, block=2048)),
+                ("randk0.1", CompressorConfig(kind="randk", ratio=0.1, block=2048)),
+                ("quant8", CompressorConfig(kind="quant", bits=8, block=2048))]:
+            measured = comm.get_transport(comp, "packed").wire_bytes(shapes)
+            emit(f"packed_{arch}_{name}", 0.0,
+                 f"measured_bytes={measured};"
+                 f"analytic_bytes={message_bytes(shapes, comp)}")
+
+
+ALL = [comm_table, packed_payload_table]

@@ -1,0 +1,19 @@
+"""repro.comm -- the pluggable compression/EF transport layer.
+
+One registry entry per compressor kind (none/topk/randk/quant/natural),
+three backends (ref/packed/pallas).  ``fedsgm.round_step`` talks to this
+package through exactly two call sites: ``uplink.transmit(...)`` and
+``downlink.broadcast(...)``.  See DESIGN.md §Transport.
+"""
+from repro.comm.payloads import (PackedLeaf, QuantPayload, block_geometry,
+                                 choose_block, packed_bytes,
+                                 payload_wire_bytes)
+from repro.comm.transports import (BACKENDS, Transport, backend_for,
+                                   get_transport, masked_mean, register,
+                                   transport_kinds)
+
+__all__ = [
+    "BACKENDS", "PackedLeaf", "QuantPayload", "Transport", "backend_for",
+    "block_geometry", "choose_block", "get_transport", "masked_mean",
+    "packed_bytes", "payload_wire_bytes", "register", "transport_kinds",
+]

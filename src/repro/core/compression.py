@@ -23,6 +23,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.comm.payloads import block_topk_dense, choose_block
 from repro.configs.base import CompressorConfig
 
 
@@ -48,16 +49,16 @@ def _leaf_randk(x: jnp.ndarray, ratio: float, key: jax.Array) -> jnp.ndarray:
     return out.reshape(x.shape)
 
 
-def _leaf_quant(x: jnp.ndarray, bits: int, block: int) -> jnp.ndarray:
+def _leaf_quant(x: jnp.ndarray, bits: int, block: int,
+                shards: int = 1) -> jnp.ndarray:
     """Per-block symmetric quantization to 2^(bits-1) magnitude levels.
 
     Blocks run along the last axis (divisor-sized, shard-local for GSPMD --
-    see core/packing.py docstring)."""
-    from repro.core.packing import choose_block
+    see repro/comm/payloads.py docstring)."""
     if x.ndim == 0:
         return x
     D = x.shape[-1]
-    b = choose_block(D, block)
+    b = choose_block(D, block, shards)
     blocks = x.reshape(x.shape[:-1] + (D // b, b))
     scale = jnp.max(jnp.abs(blocks), axis=-1, keepdims=True)
     levels = float(2 ** (bits - 1) - 1)
@@ -93,14 +94,13 @@ def compress_leaf(x: jnp.ndarray, cfg: CompressorConfig, key: jax.Array | None =
             # giant leaves: global argsort is absurd (and overflows int32
             # gather on >2^31 elements) -- use the TPU-native blockwise
             # variant, same contraction q = k/block (DESIGN.md §3)
-            from repro.core import packing
-            return packing.block_topk_dense(x, cfg)
+            return block_topk_dense(x, cfg)
         return _leaf_topk(x, cfg.ratio)
     if cfg.kind == "randk":
         assert key is not None, "randk needs a PRNG key"
         return _leaf_randk(x, cfg.ratio, key)
     if cfg.kind == "quant":
-        return _leaf_quant(x, cfg.bits, cfg.block)
+        return _leaf_quant(x, cfg.bits, cfg.block, cfg.shards)
     raise ValueError(f"unknown compressor kind: {cfg.kind}")
 
 

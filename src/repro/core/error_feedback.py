@@ -1,4 +1,7 @@
-"""Error-feedback operators (uplink EF14, downlink primal EF21).
+"""Deprecated shim -- error feedback moved into the transport layer
+(:mod:`repro.comm`).  ``Transport.ef_step`` is the EF14 uplink and
+``Transport.broadcast`` the primal-EF21 downlink; this module keeps the old
+free-function signatures for existing callers/tests.
 
 Uplink (Seide et al. 2014 style, per client j):
 
@@ -15,34 +18,21 @@ center x; the residual x - w contracts geometrically for contractive C_0.
 """
 from __future__ import annotations
 
-import jax
-
+from repro.comm import get_transport
 from repro.configs.base import CompressorConfig
-from repro.core import compression, packing
-from repro.optim.sgd import tree_add, tree_sub
 
-tree_map = jax.tree_util.tree_map
+
+def _backend(blockwise: bool) -> str:
+    return "packed" if blockwise else "ref"
 
 
 def uplink_step(e, delta, cfg: CompressorConfig, key=None, blockwise: bool = False):
-    """One EF14 uplink step.  Returns (message v, new residual e')."""
-    buf = tree_add(e, delta)
-    if cfg.kind == "none":
-        return buf, tree_map(lambda x: x * 0.0, buf)
-    if blockwise and cfg.kind == "topk":
-        v = tree_map(lambda l: packing.block_topk_dense(l, cfg), buf)
-    else:
-        v = compression.compress(buf, cfg, key)
-    return v, tree_sub(buf, v)
+    """One EF14 uplink step.  Returns (dense message v, new residual e')."""
+    t = get_transport(cfg, _backend(blockwise))
+    msg, e_new = t.ef_step(e, delta, key)
+    return t.decompress(msg, delta), e_new
 
 
 def downlink_step(w, x_new, cfg: CompressorConfig, key=None, blockwise: bool = False):
     """One primal-EF21 downlink step.  Returns broadcast model w_{t+1}."""
-    diff = tree_sub(x_new, w)
-    if cfg.kind == "none":
-        return x_new
-    if blockwise and cfg.kind == "topk":
-        delta = tree_map(lambda l: packing.block_topk_dense(l, cfg), diff)
-    else:
-        delta = compression.compress(diff, cfg, key)
-    return tree_add(w, delta)
+    return get_transport(cfg, _backend(blockwise)).broadcast(w, x_new, key)

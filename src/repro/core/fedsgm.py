@@ -7,9 +7,15 @@ One :func:`round_step` implements a full communication round:
   3. switching weight sigma_t (hard indicator or soft trimmed hinge),
   4. E local steps per client on the blended loss (1-sigma) f_j + sigma g_j
      (sigma_t is round-constant, so grad-of-blend == blend-of-grads),
-  5. uplink EF14 compression of Delta_j = (w_t - w_{j,E}) / eta,
+  5. uplink EF14 compression of Delta_j = (w_t - w_{j,E}) / eta
+     (``uplink.transmit`` -- the transport layer, repro.comm),
   6. server step x_{t+1} = Pi_X(x_t - eta * mean_S v_j),
-  7. downlink primal-EF21 broadcast w_{t+1} = w_t + C_0(x_{t+1} - w_t).
+  7. downlink primal-EF21 broadcast w_{t+1} = w_t + C_0(x_{t+1} - w_t)
+     (``downlink.broadcast``).
+
+All compressor-kind, wire-format (dense vs packed payload) and backend
+(ref / packed / pallas) dispatch lives in repro.comm -- round_step itself
+contains no compressor branching.
 
 The client dimension is an explicit leading axis on ``batches`` and on the
 uplink residual state, so the same code runs the CPU simulator and -- with the
@@ -22,13 +28,13 @@ from typing import Callable, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro import comm
 from repro.configs.base import FedConfig
-from repro.core import error_feedback, switching
+from repro.core import switching
 from repro.core.compression import message_bytes
 from repro.sharding import partition
 from repro.optim import sgd
-from repro.optim.sgd import (tree_add, tree_axpy, tree_scale, tree_sub,
-                             tree_zeros_like, project_ball)
+from repro.optim.sgd import tree_axpy, tree_zeros_like, project_ball
 
 tree_map = jax.tree_util.tree_map
 
@@ -50,6 +56,18 @@ class RoundMetrics(NamedTuple):
     sigma: jnp.ndarray      # switching weight used
     feasible: jnp.ndarray   # 1{G_hat <= eps}
     delta_norm: jnp.ndarray
+    # measured wire bytes of this round's messages, from the transport's
+    # actual wire representation (per participating client uplink / one
+    # broadcast downlink) -- not the analytic message_bytes estimate
+    up_bytes: jnp.ndarray
+    down_bytes: jnp.ndarray
+
+
+def transports_for(cfg: FedConfig):
+    """(uplink, downlink) transports for a federation config."""
+    backend = comm.backend_for(cfg.comm)
+    return (comm.get_transport(cfg.uplink, backend),
+            comm.get_transport(cfg.downlink, backend))
 
 
 def init_state(params, cfg: FedConfig, key: Optional[jax.Array] = None) -> FedState:
@@ -59,11 +77,12 @@ def init_state(params, cfg: FedConfig, key: Optional[jax.Array] = None) -> FedSt
     # under uplink compression; the server center x is stored separately only
     # under downlink compression (otherwise x == w identically); the averaged
     # iterate accumulator is optional (theory tasks, not LM dry-runs).
+    uplink, downlink = transports_for(cfg)
     e_up = None
-    if cfg.uplink.kind != "none":
+    if uplink.needs_residual:
         e_up = tree_map(
             lambda p: jnp.zeros((cfg.n_clients,) + p.shape, p.dtype), params)
-    x = params if cfg.downlink.kind != "none" else None
+    x = params if downlink.tracks_center else None
     return FedState(
         w=params, x=x, e_up=e_up,
         wbar_sum=tree_zeros_like(params) if cfg.track_wbar else None,
@@ -125,90 +144,34 @@ def round_step(state: FedState,
     deltas = jax.vmap(local_updates)(batches)                   # [n, ...]
     deltas = partition.constrain_leading(deltas, "client")
 
-    mexp = lambda d: mask.reshape((n,) + (1,) * (d.ndim - 1))
-
-    def masked_mean(tree):
-        # dot-general over the (sharded) client axis => partial reduction
-        # stays local and only the params-sized result crosses the wire;
-        # jnp.sum over a sharded axis makes GSPMD all-gather the n-fold stack
-        # (EXPERIMENTS.md §Perf iteration A0).
-        return tree_map(
-            lambda v: jnp.tensordot(mask.astype(v.dtype), v, axes=(0, 0)) / m,
-            tree)
+    # -- the wire path: exactly one uplink and one downlink call site -------
+    # All compressor-kind / backend / wire-format dispatch lives inside the
+    # transport layer (repro.comm, DESIGN.md §Transport).
+    uplink, downlink = transports_for(cfg)
 
     x_cur = state.x if state.x is not None else state.w
-    if cfg.uplink.kind != "none":
-        blockwise = cfg.comm == "packed"
-        if blockwise and cfg.uplink.kind == "topk":
-            # Beyond-paper wire path (DESIGN.md §3): the cross-client
-            # aggregation consumes only the packed (values, indices) payload
-            # -- the collective moves ~K/d of the model bytes.  Residual
-            # updates stay local (client-sharded unpack).
-            from repro.core import packing
-
-            def pack_client(e_j, d_j):
-                buf = tree_add(e_j, d_j)
-                packed = packing.pack_tree(buf, cfg.uplink)
-                e_new = tree_sub(buf, packing.unpack_tree(packed, buf, cfg.uplink))
-                return packed, e_new
-
-            packed_all, e_new = jax.vmap(pack_client)(state.e_up, deltas)
-            e_up = tree_map(lambda en, eo: jnp.where(mexp(en) > 0, en, eo),
-                            e_new, state.e_up)
-            # force the payload (not the dense tensors) across the client
-            # axis; all other dims keep their (param) layout
-            packed_repl = partition.gather_leading(packed_all)
-
-            def accum(acc, xs):
-                p_j, mask_j = xs
-                dense_j = packing.unpack_tree(p_j, state.w, cfg.uplink)
-                return tree_map(lambda a, d: a + mask_j * d, acc, dense_j), None
-
-            v_sum, _ = jax.lax.scan(
-                accum, tree_zeros_like(state.w), (packed_repl, mask))
-            v_bar = tree_map(lambda v: v / m, v_sum)
-        else:
-            # EF14, applied per client; non-participants keep their residual.
-            keys = jax.random.split(k_up, n)
-
-            def one_client(e_j, d_j, kj):
-                v, e_new = error_feedback.uplink_step(
-                    e_j, d_j, cfg.uplink, kj, blockwise=blockwise)
-                return v, e_new
-
-            v_all, e_new = jax.vmap(one_client)(state.e_up, deltas, keys)
-            v_all = partition.constrain_leading(v_all, "client")
-            e_new = partition.constrain_leading(e_new, "client")
-            e_up = tree_map(lambda en, eo, v: jnp.where(
-                mexp(en) > 0, en, eo), e_new, state.e_up, v_all)
-            v_bar = masked_mean(v_all)
-        x_new = project_ball(
-            tree_map(lambda x, v: x - eta * v, x_cur, v_bar), cfg.proj_radius)
-        w_new = error_feedback.downlink_step(
-            state.w, x_new, cfg.downlink, k_down,
-            blockwise=blockwise)
-    else:
-        e_up = state.e_up
-        d_bar = masked_mean(deltas)
-        w_new = project_ball(
-            tree_map(lambda w, d: w - eta * d, state.w, d_bar), cfg.proj_radius)
-        x_new = w_new
-    if cfg.downlink.kind == "none":
-        w_new, x_new = x_new, None
+    v_bar, e_up = uplink.transmit(
+        state.e_up, deltas, mask, m, like=state.w, key=k_up)
+    x_new = project_ball(
+        tree_map(lambda x, v: x - eta * v, x_cur, v_bar), cfg.proj_radius)
+    w_new = downlink.broadcast(state.w, x_new, key=k_down)
+    x_keep = x_new if downlink.tracks_center else None
 
     # -- averaged iterate bookkeeping (Theorems 1/2) -------------------------
     alpha = switching.averaged_iterate_weight(g_hat, cfg.switch)
     wbar_sum = (tree_axpy(alpha, state.w, state.wbar_sum)
                 if state.wbar_sum is not None else None)
 
-    delta_norm = sgd.tree_norm(masked_mean(deltas))
+    delta_norm = sgd.tree_norm(comm.masked_mean(deltas, mask, m))
     metrics = RoundMetrics(
         f=f_part, g_hat=g_hat, g_full=g_full, sigma=sigma,
         feasible=(g_hat <= cfg.switch.eps).astype(jnp.float32),
-        delta_norm=delta_norm)
+        delta_norm=delta_norm,
+        up_bytes=jnp.asarray(float(uplink.wire_bytes(state.w)), jnp.float32),
+        down_bytes=jnp.asarray(float(downlink.wire_bytes(state.w)), jnp.float32))
 
     new_state = FedState(
-        w=w_new, x=x_new, e_up=e_up,
+        w=w_new, x=x_keep, e_up=e_up,
         wbar_sum=wbar_sum, wbar_weight=state.wbar_weight + alpha,
         t=state.t + 1, key=key)
     return new_state, metrics
@@ -250,9 +213,16 @@ def run_rounds_scan(state: FedState, batches, loss_pair: Callable,
 
 
 def round_bytes(params, cfg: FedConfig) -> dict:
-    """Wire-bytes accounting for one round (per participating client)."""
+    """Wire-bytes accounting for one round (per participating client).
+
+    ``uplink``/``downlink`` are analytic estimates (message_bytes);
+    ``measured_up``/``measured_down`` come from the transport's actual wire
+    representation for this config's backend."""
+    uplink, downlink = transports_for(cfg)
     up = message_bytes(params, cfg.uplink)
     down = message_bytes(params, cfg.downlink)
     dense = message_bytes(params, type(cfg.uplink)(kind="none"))
     return {"uplink": up, "downlink": down, "dense": dense,
+            "measured_up": uplink.wire_bytes(params),
+            "measured_down": downlink.wire_bytes(params),
             "savings_up": 1.0 - up / dense, "savings_down": 1.0 - down / dense}

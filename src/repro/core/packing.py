@@ -1,151 +1,23 @@
-"""Packed compressed payloads for wire-efficient collectives (beyond-paper).
-
-``comm="dense"`` (paper-faithful simulation) decompresses before the
-cross-client collective, so XLA moves full-model bytes.  ``comm="packed"``
-moves only the (values, indices) payload across the client axis and
-decompresses *after* the all-gather -- same math for deterministic
-compressors, ~K/d wire bytes.
-
-Blocking runs along the LAST tensor axis with a divisor-sized block
-(no padding, leading dims untouched), so packing a sharded pytree leaf stays
-a (mostly) shard-local operation -- flattening the whole leaf would force
-GSPMD to all-gather it first, which dominated the memory/collective terms in
-early dry-runs (EXPERIMENTS.md §Perf, refuted-hypothesis log).
+"""Deprecated shim -- the packed-payload wire formats moved to
+:mod:`repro.comm.payloads` (the transport layer).  Import from there; this
+module re-exports the old names for existing callers and will be removed
+once nothing references it.
 """
 from __future__ import annotations
 
-from typing import NamedTuple
-
-import jax
-import jax.numpy as jnp
-
-from repro.configs.base import CompressorConfig
-
-
-class PackedLeaf(NamedTuple):
-    values: jnp.ndarray     # [..., nblocks, k]
-    indices: jnp.ndarray    # [..., nblocks, k] int32, index within block
-
-
-def choose_block(D: int, pref: int, shards: int = 1) -> int:
-    """Largest divisor of D (and, when possible, of the per-shard chunk
-    D/shards) that is <= pref -- exact blocking, no padding, shard-local."""
-    base = D // shards if shards > 1 and D % shards == 0 else D
-    b = max(1, min(pref, base))
-    while base % b:
-        b -= 1
-    return b
-
-
-_SORT_FREE_MIN = 1 << 22   # leaves above this use threshold selection
-
-
-def _block_threshold(absx: jnp.ndarray, k: int, iters: int = 25):
-    """Binary-search the k-th largest |x| per block (sort-free top-k).
-
-    XLA SPMD replicates sort operands wholesale, which made lax.top_k on
-    model-scale EF buffers all-gather hundreds of GB (EXPERIMENTS.md §Perf
-    A0); 25 rounds of elementwise compare + block-local count partition
-    perfectly.  Returns thr with count(|x| > thr) in [~k, k + ties]."""
-    hi = jnp.max(absx, axis=-1, keepdims=True)
-    lo = jnp.zeros_like(hi)
-
-    def body(_, carry):
-        lo, hi = carry
-        mid = 0.5 * (lo + hi)
-        cnt = jnp.sum(absx > mid, axis=-1, keepdims=True)
-        too_many = cnt > k
-        return jnp.where(too_many, mid, lo), jnp.where(too_many, hi, mid)
-
-    lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
-    return lo
-
-
-def block_topk_pack(x: jnp.ndarray, cfg: CompressorConfig) -> PackedLeaf:
-    """Block-wise magnitude top-k along the last axis.
-
-    Small leaves use exact lax.top_k; mesh-scale leaves use the sort-free
-    threshold + cumsum-slotting path (see :func:`_block_threshold`)."""
-    if x.ndim == 0:
-        x = x.reshape(1)
-    D = x.shape[-1]
-    b = choose_block(D, cfg.block, cfg.shards)
-    k = max(1, min(b, int(round(b * cfg.ratio))))
-    blocks = x.reshape(x.shape[:-1] + (D // b, b))
-    if k >= b:
-        idx = jnp.broadcast_to(
-            jnp.arange(b, dtype=jnp.int32), blocks.shape).copy()
-        return PackedLeaf(blocks, idx)
-    if x.size <= _SORT_FREE_MIN:
-        _, idx = jax.lax.top_k(jnp.abs(blocks), k)
-        vals = jnp.take_along_axis(blocks, idx, axis=-1)
-        return PackedLeaf(vals, idx.astype(jnp.int32))
-    absx = jnp.abs(blocks)
-    thr = _block_threshold(absx, k)
-    keep = absx > thr
-    pos = jnp.cumsum(keep.astype(jnp.int32), axis=-1) - 1
-    slot = jnp.where(keep & (pos < k), pos, k)          # overflow -> slot k
-    vals = jnp.zeros(blocks.shape[:-1] + (k + 1,), blocks.dtype)
-    vals = jnp.put_along_axis(vals, slot, blocks * keep, axis=-1,
-                              inplace=False)[..., :k]
-    iota = jnp.broadcast_to(
-        jnp.arange(b, dtype=jnp.int32), blocks.shape)
-    idx = jnp.zeros(blocks.shape[:-1] + (k + 1,), jnp.int32)
-    idx = jnp.put_along_axis(idx, slot, iota, axis=-1,
-                             inplace=False)[..., :k]
-    return PackedLeaf(vals, idx)
-
-
-def block_topk_unpack(p: PackedLeaf, shape, dtype=jnp.float32,
-                      block: int | None = None) -> jnp.ndarray:
-    """Inverse of :func:`block_topk_pack` (dense with zeros elsewhere)."""
-    if len(shape) == 0:
-        return block_topk_unpack(p, (1,), dtype, block).reshape(())
-    D = shape[-1]
-    nb = p.values.shape[-2]
-    b = D // nb if block is None else block
-    dense = jnp.zeros(tuple(shape[:-1]) + (nb, b), dtype=p.values.dtype)
-    dense = jnp.put_along_axis(dense, p.indices, p.values, axis=-1,
-                               inplace=False)
-    return dense.reshape(shape).astype(dtype)
-
-
-def block_topk_dense(x: jnp.ndarray, cfg: CompressorConfig) -> jnp.ndarray:
-    """Dense result of blockwise top-k (pack -> unpack); contraction q~k/b."""
-    if x.ndim == 0:
-        return x
-    D = x.shape[-1]
-    b = choose_block(D, cfg.block, cfg.shards)
-    if x.size > _SORT_FREE_MIN and b > 1:
-        # sort-free fast path: mask below the per-block k-th-largest threshold
-        k = max(1, min(b, int(round(b * cfg.ratio))))
-        blocks = x.reshape(x.shape[:-1] + (D // b, b))
-        if k >= b:
-            return x
-        absx = jnp.abs(blocks)
-        keep = absx > _block_threshold(absx, k)
-        return (blocks * keep).reshape(x.shape)
-    return block_topk_unpack(block_topk_pack(x, cfg), x.shape, x.dtype, block=b)
-
-
-def pack_tree(tree, cfg: CompressorConfig):
-    return jax.tree_util.tree_map(lambda l: block_topk_pack(l, cfg), tree)
-
-
-def unpack_tree(packed, like_tree, cfg: CompressorConfig | None = None):
-    def one(p, ref):
-        block = (choose_block(ref.shape[-1] if ref.ndim else 1,
-                              cfg.block, cfg.shards)
-                 if cfg is not None else None)
-        return block_topk_unpack(p, ref.shape, ref.dtype, block=block)
-    return jax.tree_util.tree_map(
-        one, packed, like_tree,
-        is_leaf=lambda n: isinstance(n, PackedLeaf),
-    )
-
-
-def packed_bytes(packed) -> int:
-    total = 0
-    for leaf in jax.tree_util.tree_leaves(packed):
-        total += leaf.size * leaf.dtype.itemsize
-    return int(total)
+from repro.comm.payloads import (  # noqa: F401
+    PackedLeaf,
+    _SORT_FREE_MIN,
+    _block_threshold,
+    block_geometry,
+    block_randk_pack,
+    block_topk_dense,
+    block_topk_pack,
+    block_topk_unpack,
+    choose_block,
+    pack_tree,
+    packed_bytes,
+    quant_pack,
+    quant_unpack,
+    unpack_tree,
+)

@@ -123,7 +123,7 @@ def main():
     ap.add_argument("--shape", default="train_4k",
                     choices=list(INPUT_SHAPES))
     ap.add_argument("--mesh", default="single", choices=["single", "multi"])
-    ap.add_argument("--comm", default="dense", choices=["dense", "packed"])
+    ap.add_argument("--comm", default="dense", choices=["dense", "packed", "pallas"])
     ap.add_argument("--local-steps", type=int, default=1)
     ap.add_argument("--uplink-ratio", type=float, default=0.1)
     ap.add_argument("--dtype", default=None, choices=[None, "float32", "bfloat16"])

@@ -68,7 +68,12 @@ def _client_prefix(spec: P, client_axis: Optional[str]) -> P:
 def fed_config_for(cfg: ModelConfig, mesh: Mesh, local_steps: int = 1,
                    comm: str = "dense", uplink_ratio: float = 0.1,
                    partial: bool = True) -> FedConfig:
-    """Default FedSGM policy per architecture class (DESIGN.md §5)."""
+    """Default FedSGM policy per architecture class (DESIGN.md §5).
+
+    ``comm`` selects the transport backend (DESIGN.md §Transport):
+    dense -> ref, packed -> payload collectives, pallas -> fused kernels."""
+    from repro import comm as comm_layer
+    comm_layer.backend_for(comm)    # validate early, before lowering
     axes = dict(zip(mesh.axis_names, mesh.devices.shape))
     shards = axes.get("model", 1)   # shard-local compression blocks (§Perf A0)
     if cfg.name in GIANTS:

@@ -35,7 +35,7 @@ def main():
     ap.add_argument("--lr", type=float, default=0.03)
     ap.add_argument("--uplink", default="topk", choices=["none", "topk", "quant"])
     ap.add_argument("--ratio", type=float, default=0.1)
-    ap.add_argument("--comm", default="dense", choices=["dense", "packed"])
+    ap.add_argument("--comm", default="dense", choices=["dense", "packed", "pallas"])
     ap.add_argument("--switch", default="soft", choices=["hard", "soft"])
     ap.add_argument("--multi-pod", action="store_true",
                     help="use the production mesh (needs devices)")

@@ -1,0 +1,93 @@
+"""Tiny deterministic fallback for `hypothesis` (see requirements-dev.txt).
+
+When the real package is missing, :func:`install` registers a minimal
+stand-in under ``sys.modules['hypothesis']`` *before* test collection
+(conftest.py), so the property tests still run -- each ``@given`` test is
+executed on a fixed-seed pseudo-random sample of examples instead of
+hypothesis' adaptive search.  Only the API surface this repo uses is
+implemented: ``given`` (kwargs form), ``settings(max_examples, deadline)``,
+and ``strategies.integers/floats/sampled_from``.
+
+Install the real package (``pip install -r requirements-dev.txt``) for
+shrinking, adaptive example generation, and edge-case probing.
+"""
+from __future__ import annotations
+
+import inspect
+import random
+import sys
+import types
+
+_DEFAULT_EXAMPLES = 10
+_MAX_EXAMPLES_CAP = 20    # keep the fallback fast; real hypothesis honors all
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def floats(min_value: float, max_value: float, **_kw) -> _Strategy:
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def sampled_from(elements) -> _Strategy:
+    elements = list(elements)
+    return _Strategy(lambda rng: rng.choice(elements))
+
+
+def settings(max_examples: int = _DEFAULT_EXAMPLES, deadline=None, **_kw):
+    """Order-insensitive with @given: stores the budget on the function."""
+    def deco(fn):
+        fn._shim_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(**strategies):
+    def deco(fn):
+        def wrapper(*args, **kwargs):
+            n = min(getattr(wrapper, "_shim_max_examples",
+                            getattr(fn, "_shim_max_examples",
+                                    _DEFAULT_EXAMPLES)), _MAX_EXAMPLES_CAP)
+            rng = random.Random(0)   # deterministic across runs
+            for _ in range(n):
+                drawn = {k: s.example(rng) for k, s in strategies.items()}
+                fn(*args, **drawn, **kwargs)
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__doc__ = fn.__doc__
+        wrapper._shim_max_examples = getattr(fn, "_shim_max_examples",
+                                             _DEFAULT_EXAMPLES)
+        # expose only the non-strategy params (self / pytest fixtures) so
+        # pytest does not try to resolve the drawn arguments as fixtures
+        sig = inspect.signature(fn)
+        keep = [p for name, p in sig.parameters.items()
+                if name not in strategies]
+        wrapper.__signature__ = sig.replace(parameters=keep)
+        return wrapper
+    return deco
+
+
+def install():
+    """Register the stand-in as `hypothesis` if the real one is absent."""
+    if "hypothesis" in sys.modules:
+        return
+    hyp = types.ModuleType("hypothesis")
+    strat = types.ModuleType("hypothesis.strategies")
+    strat.integers = integers
+    strat.floats = floats
+    strat.sampled_from = sampled_from
+    hyp.given = given
+    hyp.settings = settings
+    hyp.strategies = strat
+    hyp.__is_shim__ = True
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = strat

@@ -5,8 +5,9 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
+from repro.comm import payloads
 from repro.configs.base import CompressorConfig
-from repro.core import compression, packing
+from repro.core import compression
 
 
 def _rand(key, shape):
@@ -91,10 +92,10 @@ class TestPacking:
         """unpack(pack(x)) == blockwise-dense-topk(x)."""
         x = _rand(jax.random.PRNGKey(seed), (d,))
         cfg = CompressorConfig(kind="topk", ratio=ratio, block=block)
-        dense = packing.block_topk_dense(x, cfg)
-        p = packing.block_topk_pack(x, cfg)
-        recon = packing.block_topk_unpack(p, x.shape, x.dtype,
-                                          block=packing.choose_block(d, block))
+        dense = payloads.block_topk_dense(x, cfg)
+        p = payloads.block_topk_pack(x, cfg)
+        recon = payloads.block_topk_unpack(p, x.shape, x.dtype,
+                                          block=payloads.choose_block(d, block))
         np.testing.assert_allclose(np.asarray(dense), np.asarray(recon),
                                    rtol=1e-6, atol=1e-6)
         # independent check: kept entries appear at their original positions
@@ -105,15 +106,15 @@ class TestPacking:
     def test_blockwise_contractive(self, key):
         x = _rand(key, (512,))
         cfg = CompressorConfig(kind="topk", ratio=0.25, block=64)
-        cx = packing.block_topk_dense(x, cfg)
+        cx = payloads.block_topk_dense(x, cfg)
         gap, nrm = compression.contraction_gap(x, cx)
         assert gap <= (1 - 0.25) * nrm + 1e-6
 
     def test_packed_bytes_smaller(self, key):
         x = _rand(key, (4096,))
         cfg = CompressorConfig(kind="topk", ratio=0.1, block=256)
-        p = packing.block_topk_pack(x, cfg)
-        assert packing.packed_bytes(p) < x.size * x.dtype.itemsize * 0.25
+        p = payloads.block_topk_pack(x, cfg)
+        assert payloads.packed_bytes(p) < x.size * x.dtype.itemsize * 0.25
 
 
 def test_message_bytes_accounting(key):

@@ -1,11 +1,18 @@
-"""Switching rule + error-feedback invariant tests."""
+"""Switching rule + error-feedback invariant tests (transport-layer API)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 from hypothesis import given, settings, strategies as st
 
+from repro import comm
 from repro.configs.base import CompressorConfig, SwitchConfig
 from repro.core import error_feedback, switching, theory
+
+
+def _ef(transport, e, delta, key=None):
+    """Dense EF14 step through a transport (message decompressed)."""
+    msg, e_new = transport.ef_step(e, delta, key)
+    return transport.decompress(msg, delta), e_new
 
 
 class TestSwitching:
@@ -53,27 +60,30 @@ class TestSwitching:
 
 class TestErrorFeedback:
     def test_ef_telescoping(self, key):
-        """EF14 invariant: sum_t v_t + e_T = sum_t Delta_t (lossless memory)."""
-        cfg = CompressorConfig(kind="topk", ratio=0.2)
-        e = {"w": jnp.zeros((64,))}
-        total_v = jnp.zeros((64,))
-        total_d = jnp.zeros((64,))
-        for t in range(20):
-            delta = {"w": jax.random.normal(jax.random.fold_in(key, t), (64,))}
-            v, e = error_feedback.uplink_step(e, delta, cfg)
-            total_v = total_v + v["w"]
-            total_d = total_d + delta["w"]
-        np.testing.assert_allclose(np.asarray(total_v + e["w"]),
-                                   np.asarray(total_d), rtol=1e-5, atol=1e-5)
+        """EF14 invariant: sum_t v_t + e_T = sum_t Delta_t (lossless memory),
+        on every transport backend."""
+        for backend in comm.BACKENDS:
+            cfg = CompressorConfig(kind="topk", ratio=0.2, block=16)
+            t_up = comm.get_transport(cfg, backend)
+            e = {"w": jnp.zeros((64,))}
+            total_v = jnp.zeros((64,))
+            total_d = jnp.zeros((64,))
+            for t in range(20):
+                delta = {"w": jax.random.normal(jax.random.fold_in(key, t), (64,))}
+                v, e = _ef(t_up, e, delta)
+                total_v = total_v + v["w"]
+                total_d = total_d + delta["w"]
+            np.testing.assert_allclose(np.asarray(total_v + e["w"]),
+                                       np.asarray(total_d), rtol=1e-5, atol=1e-5)
 
     def test_ef_residual_bounded(self, key):
         """Residual norm stays bounded (geometric contraction, Lemma 9)."""
-        cfg = CompressorConfig(kind="topk", ratio=0.25)
+        t_up = comm.get_transport(CompressorConfig(kind="topk", ratio=0.25))
         e = {"w": jnp.zeros((128,))}
         norms = []
         for t in range(120):
             delta = {"w": jax.random.normal(jax.random.fold_in(key, t), (128,))}
-            _, e = error_feedback.uplink_step(e, delta, cfg)
+            _, e = t_up.ef_step(e, delta)
             norms.append(float(jnp.linalg.norm(e["w"])))
         # bound from Lemma 9: ||e||^2 <= 4(1-q)/q^2 * G^2 (G ~ ||delta||)
         assert max(norms[60:]) < 4 * np.sqrt(128) * np.sqrt(4 * 0.75 / 0.25**2)
@@ -81,22 +91,36 @@ class TestErrorFeedback:
 
     def test_downlink_ef21_tracks_center(self, key):
         """w tracks x: ||x - w|| contracts when x stops moving."""
-        cfg = CompressorConfig(kind="topk", ratio=0.3)
+        t_down = comm.get_transport(CompressorConfig(kind="topk", ratio=0.3))
         x = {"w": jax.random.normal(key, (64,))}
         w = {"w": jnp.zeros((64,))}
         dists = []
         for t in range(30):
-            w = error_feedback.downlink_step(w, x, cfg)
+            w = t_down.broadcast(w, x)
             dists.append(float(jnp.linalg.norm(x["w"] - w["w"])))
         assert dists[-1] < 1e-3 * dists[0] + 1e-6
 
     def test_no_compression_identity(self, key):
-        cfg = CompressorConfig(kind="none")
+        t_up = comm.get_transport(CompressorConfig(kind="none"))
         delta = {"w": jax.random.normal(key, (32,))}
         e = {"w": jnp.zeros((32,))}
-        v, e_new = error_feedback.uplink_step(e, delta, cfg)
+        v, e_new = t_up.ef_step(e, delta)
         np.testing.assert_allclose(np.asarray(v["w"]), np.asarray(delta["w"]))
         assert float(jnp.abs(e_new["w"]).max()) == 0.0
+
+    def test_legacy_shim_matches_transport(self, key):
+        """core.error_feedback free functions == transport methods."""
+        cfg = CompressorConfig(kind="topk", ratio=0.2, block=16)
+        delta = {"w": jax.random.normal(key, (64,))}
+        e = {"w": jnp.zeros((64,))}
+        for blockwise, backend in ((False, "ref"), (True, "packed")):
+            v_old, e_old = error_feedback.uplink_step(
+                e, delta, cfg, blockwise=blockwise)
+            v_new, e_new = _ef(comm.get_transport(cfg, backend), e, delta)
+            np.testing.assert_array_equal(np.asarray(v_old["w"]),
+                                          np.asarray(v_new["w"]))
+            np.testing.assert_array_equal(np.asarray(e_old["w"]),
+                                          np.asarray(e_new["w"]))
 
 
 class TestTheory:
