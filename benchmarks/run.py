@@ -10,8 +10,8 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import cmdp_benches, comm_bench, fair_benches, \
-        kernel_benches, np_benches, roofline_bench
+    from benchmarks import cmdp_benches, comm_bench, engine_bench, \
+        fair_benches, kernel_benches, np_benches, roofline_bench
 
     suites = {
         "np": np_benches.ALL,
@@ -19,6 +19,7 @@ def main() -> None:
         "fair": fair_benches.ALL,
         "kernels": kernel_benches.ALL,
         "comm": comm_bench.ALL,
+        "engine": engine_bench.ALL,
         "roofline": roofline_bench.ALL,
     }
     want = [a for a in sys.argv[1:] if a in suites] or list(suites)

@@ -10,10 +10,11 @@ from repro.comm.payloads import (PackedLeaf, QuantPayload, block_geometry,
                                  payload_wire_bytes)
 from repro.comm.transports import (BACKENDS, Transport, backend_for,
                                    get_transport, masked_mean, register,
-                                   transport_kinds)
+                                   scatter_rows, transport_kinds)
 
 __all__ = [
     "BACKENDS", "PackedLeaf", "QuantPayload", "Transport", "backend_for",
     "block_geometry", "choose_block", "get_transport", "masked_mean",
-    "packed_bytes", "payload_wire_bytes", "register", "transport_kinds",
+    "packed_bytes", "payload_wire_bytes", "register", "scatter_rows",
+    "transport_kinds",
 ]

@@ -91,6 +91,17 @@ def _mask_where(mask, new, old):
     return tree_map(one, new, old)
 
 
+def scatter_rows(tree, idx, n: int):
+    """[m, ...] participant rows -> full [n, ...] layout, zeros elsewhere.
+    Works on dense leaves and payload pytrees alike (payload fields carry
+    the same leading client axis).  Shared by the gathered transmit path
+    and engine.participation."""
+    def one(x):
+        out = jnp.zeros((n,) + x.shape[1:], x.dtype)
+        return out.at[idx].set(x)
+    return tree_map(one, tree)
+
+
 # ---------------------------------------------------------------------------
 # Registry
 # ---------------------------------------------------------------------------
@@ -214,6 +225,38 @@ class Transport:
             v_bar = self._aggregate_packed(msgs, mask, m, like)
         return v_bar, e_out
 
+    def transmit_gathered(self, e, deltas, idx, mask, m, like,
+                          key: Optional[jax.Array] = None):
+        """Compute-sparse variant of :meth:`transmit` (engine.participation
+        ``gather`` mode): ``deltas`` carries only the m participants'
+        rows ([m, ...], sorted by client index ``idx``); ``e`` keeps the
+        full [n, ...] layout.
+
+        The EF14 step runs over m rows (per-client results identical to the
+        mask path's, incl. per-client PRNG keys), residuals scatter back in
+        place, and messages scatter into the full layout so the aggregation
+        is the same op as :meth:`transmit` -- trajectories match the mask
+        path bit-for-bit while EF compute and state traffic scale with m."""
+        from repro.sharding import partition
+        n = mask.shape[0]
+        e_part = None if e is None else \
+            tree_map(lambda x: jnp.take(x, idx, axis=0), e)
+        keys = None
+        if self.needs_key and key is not None:
+            keys = jnp.take(jax.random.split(key, n), idx, axis=0)
+        msgs, e_stack = self._ef_clients(e_part, deltas, like, key, keys=keys)
+        e_out = e
+        if e is not None:
+            e_stack = partition.constrain_leading(e_stack, "client")
+            e_out = tree_map(lambda E, En: E.at[idx].set(En), e, e_stack)
+        msgs = scatter_rows(msgs, idx, n)
+        if self.wire == "dense":
+            msgs = partition.constrain_leading(msgs, "client")
+            v_bar = masked_mean(msgs, mask, m)
+        else:
+            v_bar = self._aggregate_packed(msgs, mask, m, like)
+        return v_bar, e_out
+
     def broadcast(self, w, x_new, key: Optional[jax.Array] = None):
         """Primal-EF21 downlink: w' = w + C(x_new - w)."""
         diff = _tree_sub(x_new, w)
@@ -222,11 +265,14 @@ class Transport:
 
     # -- internals ----------------------------------------------------------
 
-    def _ef_clients(self, e, deltas, like, key):
-        """EF14 over the stacked [n, ...] client axis (vmap by default)."""
+    def _ef_clients(self, e, deltas, like, key, keys=None):
+        """EF14 over the stacked client axis (vmap by default).  ``keys``
+        overrides the per-client PRNG keys (the gathered path passes the
+        participants' rows of the mask path's ``split(key, n)``)."""
         n = _leading_dim(deltas)
         if self.needs_key and key is not None:
-            keys = jax.random.split(key, n)
+            if keys is None:
+                keys = jax.random.split(key, n)
             return jax.vmap(self.ef_step)(e, deltas, keys)
         return jax.vmap(lambda ej, dj: self.ef_step(ej, dj))(e, deltas)
 
@@ -285,6 +331,10 @@ class IdentityTransport(Transport):
 
     def transmit(self, e, deltas, mask, m, like, key=None):
         return masked_mean(deltas, mask, m), e
+
+    def transmit_gathered(self, e, deltas, idx, mask, m, like, key=None):
+        dense = scatter_rows(deltas, idx, mask.shape[0])
+        return masked_mean(dense, mask, m), e
 
     def broadcast(self, w, x_new, key=None):
         return x_new
@@ -356,9 +406,9 @@ class TopKTransport(_BlockSelectTransport):
         vals, idx = block_topk(blocks.reshape(-1, b), k)
         return PackedLeaf(vals.reshape(lead + (k,)), idx.reshape(lead + (k,)))
 
-    def _ef_clients(self, e, deltas, like, key):
+    def _ef_clients(self, e, deltas, like, key, keys=None):
         if self.backend != "pallas":
-            return super()._ef_clients(e, deltas, like, key)
+            return super()._ef_clients(e, deltas, like, key, keys=keys)
         # fold the client axis into the kernel grid: blocking runs along the
         # last tensor axis, so the stacked [n, ...] tree packs in ONE kernel
         # launch per leaf instead of a vmap over pallas_call
@@ -472,9 +522,9 @@ class QuantTransport(Transport):
         e_new = tree_map(lambda _, o: o[1], like, out)
         return v, e_new
 
-    def _ef_clients(self, e, deltas, like, key):
+    def _ef_clients(self, e, deltas, like, key, keys=None):
         if self.backend != "pallas":
-            return super()._ef_clients(e, deltas, like, key)
+            return super()._ef_clients(e, deltas, like, key, keys=keys)
         return self._fused_ef(e, deltas, like)
 
     def _wire_bytes(self, like) -> int:

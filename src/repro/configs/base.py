@@ -199,6 +199,17 @@ class FedConfig:
     client_axis: Optional[str] = "data"   # mesh axis carrying the client dim
     track_wbar: bool = True         # keep the averaged-iterate accumulator
     seed: int = 0
+    # -- engine knobs (repro.engine, DESIGN.md §Engine) ---------------------
+    strategy: str = "fedsgm"        # engine.strategies registry key
+    participation: str = "mask"     # mask (dense, paper-faithful simulation)
+                                    # | gather (compute-sparse: local steps +
+                                    #   EF state touch only the m sampled)
+    client_chunk: int = 0           # >0: lax.map over chunks of this many
+                                    # vmapped clients (n >> devices memory)
+    full_eval: bool = True          # evaluate the constraint query over all n
+                                    # clients (g_full metric + bit-parity with
+                                    # the mask path); False: m sampled only
+    rho: float = 1.0                # penalty-fedavg strength (strategy knob)
 
     def replace(self, **kw) -> "FedConfig":
         return dataclasses.replace(self, **kw)

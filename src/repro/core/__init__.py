@@ -1,4 +1,24 @@
-"""FedSGM core: the paper's contribution as composable JAX modules."""
-from repro.core import baselines, compression, error_feedback, fedsgm, packing, switching, theory  # noqa: F401
-from repro.core.fedsgm import (FedState, RoundMetrics, averaged_iterate,  # noqa: F401
-                               init_state, round_step, run_rounds)
+"""FedSGM core: the paper's contribution as composable JAX modules.
+
+Re-exports are lazy (PEP 562): ``core.fedsgm`` is now a shim over
+``repro.engine``, which itself imports ``repro.core.switching`` -- eager
+imports here would cycle through the package __init__.
+"""
+import importlib
+
+_SUBMODULES = ("baselines", "compression", "error_feedback", "fedsgm",
+               "packing", "switching", "theory", "weakly_convex")
+_FEDSGM_NAMES = ("FedState", "RoundMetrics", "averaged_iterate",
+                 "init_state", "round_step", "run_rounds")
+
+__all__ = list(_SUBMODULES) + list(_FEDSGM_NAMES) + ["sgd"]
+
+
+def __getattr__(name):
+    if name in _SUBMODULES:
+        return importlib.import_module(f"repro.core.{name}")
+    if name in _FEDSGM_NAMES:
+        return getattr(importlib.import_module("repro.core.fedsgm"), name)
+    if name == "sgd":
+        return importlib.import_module("repro.optim.sgd")
+    raise AttributeError(f"module 'repro.core' has no attribute {name!r}")

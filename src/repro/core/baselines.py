@@ -3,8 +3,13 @@
 * Penalty-based FedAvg (Fig. 6/7): clients descend on f + rho * [g - eps]_+
   with a fixed penalty weight rho -- showing the tuning instability the paper
   criticizes (small rho => infeasible, large rho => slow).
-* Centralized SGM (n=1 special case of FedSGM; use FedConfig(n_clients=1, m=1)).
-"""
+* Centralized SGM (n=1 special case of FedSGM; ``strategy="centralized-sgm"``
+  or FedConfig(n_clients=1, m=1)).
+
+:func:`penalty_round` is a thin wrapper over one engine round with
+``strategy="penalty-fedavg"`` -- the sampling / vmap / aggregation skeleton
+lives in :mod:`repro.engine`, not here (the seed inlined its own copy of
+the sampling-mask logic and the mask-blend aggregation)."""
 from __future__ import annotations
 
 from typing import Callable, NamedTuple
@@ -12,7 +17,8 @@ from typing import Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.optim.sgd import project_ball
+from repro.configs.base import CompressorConfig, FedConfig, SwitchConfig
+from repro.engine import rounds
 
 tree_map = jax.tree_util.tree_map
 
@@ -27,33 +33,41 @@ def penalty_init(params, seed: int = 0) -> PenaltyState:
     return PenaltyState(params, jnp.zeros((), jnp.int32), jax.random.PRNGKey(seed))
 
 
+def penalty_config(rho: float, eps: float, lr: float, local_steps: int,
+                   n_clients: int, m: int, proj_radius: float = 0.0,
+                   participation: str = "mask",
+                   client_chunk: int = 0) -> FedConfig:
+    """The engine config equivalent of the seed penalty-FedAvg arguments."""
+    return FedConfig(
+        n_clients=n_clients, m=m, local_steps=local_steps, lr=lr,
+        switch=SwitchConfig(mode="hard", eps=eps),
+        uplink=CompressorConfig(kind="none"),
+        downlink=CompressorConfig(kind="none"),
+        proj_radius=proj_radius, track_wbar=False,
+        strategy="penalty-fedavg", rho=rho,
+        participation=participation, client_chunk=client_chunk)
+
+
 def penalty_round(state: PenaltyState, batches, loss_pair: Callable,
                   rho: float, eps: float, lr: float, local_steps: int,
-                  n_clients: int, m: int, proj_radius: float = 0.0):
-    """One penalty-FedAvg round: E local steps on f + rho [g - eps]_+."""
-    key, k_part = jax.random.split(state.key)
-    if m >= n_clients:
-        mask = jnp.ones((n_clients,), jnp.float32)
-    else:
-        mask = (jax.random.permutation(k_part, n_clients) < m).astype(jnp.float32)
+                  n_clients: int, m: int, proj_radius: float = 0.0,
+                  participation: str = "mask", client_chunk: int = 0):
+    """One penalty-FedAvg round: E local steps on f + rho [g - eps]_+.
 
-    def penalized(params, batch):
-        f, g = loss_pair(params, batch)
-        return f + rho * jnp.maximum(g - eps, 0.0)
-
-    grad_fn = jax.grad(penalized)
-
-    def local(batch):
-        def body(w, _):
-            return tree_map(lambda p, gr: p - lr * gr, w, grad_fn(w, batch)), None
-        w_E, _ = jax.lax.scan(body, state.w, None, length=local_steps)
-        return tree_map(lambda a, b: a - b, w_E, state.w)
-
-    updates = jax.vmap(local)(batches)
-    mexp = lambda u: mask.reshape((n_clients,) + (1,) * (u.ndim - 1))
-    mean_upd = tree_map(lambda u: jnp.sum(mexp(u) * u, 0) / m, updates)
-    w_new = project_ball(tree_map(jnp.add, state.w, mean_upd), proj_radius)
-
-    f_all, g_all = jax.vmap(lambda b: loss_pair(state.w, b))(batches)
-    metrics = {"f": jnp.mean(f_all), "g": jnp.mean(g_all)}
-    return PenaltyState(w_new, state.t + 1, key), metrics
+    Matches the seed implementation under full participation up to float
+    rounding (~1e-5 after 10 rounds: the engine wire path carries
+    (w0 - w_E)/eta and re-scales by eta server-side, double-rounding
+    relative to the seed's direct w + mean(w_E - w0); see
+    tests/test_engine.py::TestPenaltyWrapper).  For m < n_clients the
+    participation mask now comes from the engine's uniform 4-way key split
+    (the seed used a 2-way split), so partial-participation runs sample a
+    different -- equally uniform -- client stream than the seed repo."""
+    cfg = penalty_config(rho, eps, lr, local_steps, n_clients, m,
+                         proj_radius, participation, client_chunk)
+    fstate = rounds.FedState(
+        w=state.w, x=None, e_up=None, wbar_sum=None,
+        wbar_weight=jnp.zeros(()), t=state.t, key=state.key)
+    new, mets = rounds.round_step(fstate, batches, loss_pair, cfg)
+    # seed metric contract: all-client means at the pre-update iterate
+    metrics = {"f": mets.f_full, "g": mets.g_full}
+    return PenaltyState(new.w, new.t, new.key), metrics

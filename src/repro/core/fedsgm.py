@@ -1,228 +1,30 @@
-"""FedSGM (Algorithm 1) as a pure pytree transformation.
+"""FedSGM (Algorithm 1) -- compatibility shim over :mod:`repro.engine`.
 
-One :func:`round_step` implements a full communication round:
+The round loop itself now lives in the engine layer (DESIGN.md §Engine):
 
-  1. sample S_t (m of n clients, uniform without replacement; static-shape mask),
-  2. constraint query: G_hat(w_t) = mean_{j in S_t} g_j(w_t),
-  3. switching weight sigma_t (hard indicator or soft trimmed hinge),
-  4. E local steps per client on the blended loss (1-sigma) f_j + sigma g_j
-     (sigma_t is round-constant, so grad-of-blend == blend-of-grads),
-  5. uplink EF14 compression of Delta_j = (w_t - w_{j,E}) / eta
-     (``uplink.transmit`` -- the transport layer, repro.comm),
-  6. server step x_{t+1} = Pi_X(x_t - eta * mean_S v_j),
-  7. downlink primal-EF21 broadcast w_{t+1} = w_t + C_0(x_{t+1} - w_t)
-     (``downlink.broadcast``).
+* ``engine.rounds.round_step``  -- one strategy-pluggable communication
+  round (this module's :func:`round_step` IS that function; the default
+  ``FedConfig.strategy == "fedsgm"`` reproduces Algorithm 1 exactly),
+* ``engine.participation``      -- the client-sampling axis (dense mask or
+  compute-sparse gather, ``FedConfig.participation``),
+* ``engine.rounds.drive``       -- the fully-jitted multi-round driver
+  behind :func:`run_rounds_scan`.
 
-All compressor-kind, wire-format (dense vs packed payload) and backend
-(ref / packed / pallas) dispatch lives in repro.comm -- round_step itself
-contains no compressor branching.
-
-The client dimension is an explicit leading axis on ``batches`` and on the
-uplink residual state, so the same code runs the CPU simulator and -- with the
-leading axis sharded over the mesh's client axis -- the multi-pod lowering.
+All compressor-kind, wire-format and backend dispatch lives in repro.comm
+(DESIGN.md §Transport) -- the round contains no compressor branching.
+Import from ``repro.engine`` in new code; these re-exports keep the seed
+API stable.
 """
 from __future__ import annotations
 
-from typing import Callable, NamedTuple, Optional
+from repro.engine.participation import participation_mask  # noqa: F401
+from repro.engine.rounds import (FedState, RoundMetrics,  # noqa: F401
+                                 averaged_iterate, drive, init_state,
+                                 round_bytes, round_step, run_rounds,
+                                 run_rounds_scan, transports_for)
 
-import jax
-import jax.numpy as jnp
-
-from repro import comm
-from repro.configs.base import FedConfig
-from repro.core import switching
-from repro.core.compression import message_bytes
-from repro.sharding import partition
-from repro.optim import sgd
-from repro.optim.sgd import tree_axpy, tree_zeros_like, project_ball
-
-tree_map = jax.tree_util.tree_map
-
-
-class FedState(NamedTuple):
-    w: object               # broadcast model w_t (all clients hold this)
-    x: object               # server center x_t (== w when downlink uncompressed)
-    e_up: object            # uplink EF residuals, leading axis [n_clients]
-    wbar_sum: object        # running weighted sum of w_t over feasible rounds
-    wbar_weight: jnp.ndarray
-    t: jnp.ndarray
-    key: jax.Array
-
-
-class RoundMetrics(NamedTuple):
-    f: jnp.ndarray          # mean client objective at w_t (participating)
-    g_hat: jnp.ndarray      # aggregated constraint estimate (participating)
-    g_full: jnp.ndarray     # constraint over all clients (eval only)
-    sigma: jnp.ndarray      # switching weight used
-    feasible: jnp.ndarray   # 1{G_hat <= eps}
-    delta_norm: jnp.ndarray
-    # measured wire bytes of this round's messages, from the transport's
-    # actual wire representation (per participating client uplink / one
-    # broadcast downlink) -- not the analytic message_bytes estimate
-    up_bytes: jnp.ndarray
-    down_bytes: jnp.ndarray
-
-
-def transports_for(cfg: FedConfig):
-    """(uplink, downlink) transports for a federation config."""
-    backend = comm.backend_for(cfg.comm)
-    return (comm.get_transport(cfg.uplink, backend),
-            comm.get_transport(cfg.downlink, backend))
-
-
-def init_state(params, cfg: FedConfig, key: Optional[jax.Array] = None) -> FedState:
-    if key is None:
-        key = jax.random.PRNGKey(cfg.seed)
-    # Memory-scaled state (DESIGN.md §3): the uplink EF residual exists only
-    # under uplink compression; the server center x is stored separately only
-    # under downlink compression (otherwise x == w identically); the averaged
-    # iterate accumulator is optional (theory tasks, not LM dry-runs).
-    uplink, downlink = transports_for(cfg)
-    e_up = None
-    if uplink.needs_residual:
-        e_up = tree_map(
-            lambda p: jnp.zeros((cfg.n_clients,) + p.shape, p.dtype), params)
-    x = params if downlink.tracks_center else None
-    return FedState(
-        w=params, x=x, e_up=e_up,
-        wbar_sum=tree_zeros_like(params) if cfg.track_wbar else None,
-        wbar_weight=jnp.zeros(()),
-        t=jnp.zeros((), jnp.int32),
-        key=key)
-
-
-def averaged_iterate(state: FedState):
-    """w_bar: the theorem's averaged iterate over feasible rounds."""
-    if state.wbar_sum is None:
-        return state.w
-    wgt = jnp.maximum(state.wbar_weight, 1e-12)
-    has = state.wbar_weight > 0
-    return tree_map(
-        lambda s, w: jnp.where(has, s / wgt, w), state.wbar_sum, state.w)
-
-
-def participation_mask(key: jax.Array, n: int, m: int) -> jnp.ndarray:
-    """0/1 mask with exactly m ones, uniform without replacement."""
-    if m >= n:
-        return jnp.ones((n,), jnp.float32)
-    perm = jax.random.permutation(key, n)
-    return (perm < m).astype(jnp.float32)
-
-
-def round_step(state: FedState,
-               batches,
-               loss_pair: Callable,   # (params, batch) -> (f_j, g_j) scalars
-               cfg: FedConfig) -> tuple[FedState, RoundMetrics]:
-    """One FedSGM round.  ``batches`` has leading axis [n_clients]."""
-    n, m, E, eta = cfg.n_clients, cfg.m, cfg.local_steps, cfg.lr
-    key, k_part, k_up, k_down = jax.random.split(state.key, 4)
-
-    mask = participation_mask(k_part, n, m)                     # [n]
-
-    # -- constraint query (scalar uplink per client) ------------------------
-    f_all, g_all = jax.vmap(lambda b: loss_pair(state.w, b))(batches)
-    g_hat = jnp.sum(mask * g_all) / m
-    f_part = jnp.sum(mask * f_all) / m
-    g_full = jnp.mean(g_all)
-
-    sigma = switching.switch_weight(g_hat, cfg.switch)
-
-    # -- E local steps on the blended objective -----------------------------
-    def blended(params, batch):
-        f, g = loss_pair(params, batch)
-        return (1.0 - sigma) * f + sigma * g
-
-    grad_fn = jax.grad(blended)
-
-    def local_updates(batch):
-        def body(w, _):
-            g = grad_fn(w, batch)
-            return tree_map(lambda p, gr: p - eta * gr, w, g), None
-        w_E, _ = jax.lax.scan(body, state.w, None, length=E)
-        return tree_map(lambda a, b: (a - b) / eta, state.w, w_E)  # Delta_j
-
-    deltas = jax.vmap(local_updates)(batches)                   # [n, ...]
-    deltas = partition.constrain_leading(deltas, "client")
-
-    # -- the wire path: exactly one uplink and one downlink call site -------
-    # All compressor-kind / backend / wire-format dispatch lives inside the
-    # transport layer (repro.comm, DESIGN.md §Transport).
-    uplink, downlink = transports_for(cfg)
-
-    x_cur = state.x if state.x is not None else state.w
-    v_bar, e_up = uplink.transmit(
-        state.e_up, deltas, mask, m, like=state.w, key=k_up)
-    x_new = project_ball(
-        tree_map(lambda x, v: x - eta * v, x_cur, v_bar), cfg.proj_radius)
-    w_new = downlink.broadcast(state.w, x_new, key=k_down)
-    x_keep = x_new if downlink.tracks_center else None
-
-    # -- averaged iterate bookkeeping (Theorems 1/2) -------------------------
-    alpha = switching.averaged_iterate_weight(g_hat, cfg.switch)
-    wbar_sum = (tree_axpy(alpha, state.w, state.wbar_sum)
-                if state.wbar_sum is not None else None)
-
-    delta_norm = sgd.tree_norm(comm.masked_mean(deltas, mask, m))
-    metrics = RoundMetrics(
-        f=f_part, g_hat=g_hat, g_full=g_full, sigma=sigma,
-        feasible=(g_hat <= cfg.switch.eps).astype(jnp.float32),
-        delta_norm=delta_norm,
-        up_bytes=jnp.asarray(float(uplink.wire_bytes(state.w)), jnp.float32),
-        down_bytes=jnp.asarray(float(downlink.wire_bytes(state.w)), jnp.float32))
-
-    new_state = FedState(
-        w=w_new, x=x_keep, e_up=e_up,
-        wbar_sum=wbar_sum, wbar_weight=state.wbar_weight + alpha,
-        t=state.t + 1, key=key)
-    return new_state, metrics
-
-
-def run_rounds(state: FedState, batch_fn: Callable, loss_pair: Callable,
-               cfg: FedConfig, T: int, jit: bool = True):
-    """Drive T rounds; ``batch_fn(t, key) -> batches`` supplies per-round data.
-
-    Returns final state and stacked metrics (host-side loop so batch_fn may be
-    arbitrary python; the round itself is jitted).
-    """
-    step = jax.jit(lambda s, b: round_step(s, b, loss_pair, cfg)) if jit else \
-        (lambda s, b: round_step(s, b, loss_pair, cfg))
-    history = []
-    key = jax.random.PRNGKey(cfg.seed + 1)
-    for t in range(T):
-        key, sub = jax.random.split(key)
-        batches = batch_fn(t, sub)
-        state, metrics = step(state, batches)
-        history.append(jax.device_get(metrics))
-    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *history)
-    return state, stacked
-
-
-def run_rounds_scan(state: FedState, batches, loss_pair: Callable,
-                    cfg: FedConfig, T: int):
-    """Fully-jitted T rounds with fixed per-client data (lax.scan over
-    rounds) -- the fast path for the paper's full-batch NP experiments."""
-
-    @jax.jit
-    def many(state):
-        def body(s, _):
-            s, m = round_step(s, batches, loss_pair, cfg)
-            return s, m
-        return jax.lax.scan(body, state, None, length=T)
-
-    return many(state)
-
-
-def round_bytes(params, cfg: FedConfig) -> dict:
-    """Wire-bytes accounting for one round (per participating client).
-
-    ``uplink``/``downlink`` are analytic estimates (message_bytes);
-    ``measured_up``/``measured_down`` come from the transport's actual wire
-    representation for this config's backend."""
-    uplink, downlink = transports_for(cfg)
-    up = message_bytes(params, cfg.uplink)
-    down = message_bytes(params, cfg.downlink)
-    dense = message_bytes(params, type(cfg.uplink)(kind="none"))
-    return {"uplink": up, "downlink": down, "dense": dense,
-            "measured_up": uplink.wire_bytes(params),
-            "measured_down": downlink.wire_bytes(params),
-            "savings_up": 1.0 - up / dense, "savings_down": 1.0 - down / dense}
+__all__ = [
+    "FedState", "RoundMetrics", "averaged_iterate", "drive", "init_state",
+    "participation_mask", "round_bytes", "round_step", "run_rounds",
+    "run_rounds_scan", "transports_for",
+]

@@ -19,19 +19,23 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
+from repro.engine.participation import client_vmap
 from repro.optim.sgd import tree_axpy, tree_map, tree_norm, tree_sub
 
 
 def proximal_point(loss_pair: Callable, batches, w, *, rho_hat: float = 2.0,
                    eps: float = 1e-2, inner_steps: int = 200,
-                   lr: float = 0.05):
+                   lr: float = 0.05, client_chunk: int = 0):
     """Approximately solve the proximal subproblem with switching gradients.
 
     loss_pair(params, batch) -> (f_j, g_j); ``batches`` has a leading client
-    axis (the subproblem uses the global mean, full participation)."""
+    axis (the subproblem uses the global mean, full participation).
+    ``client_chunk`` bounds the inner solver's per-step activation memory on
+    large client counts (engine.participation.client_vmap)."""
 
     def mean_pair(params):
-        f, g = jax.vmap(lambda b: loss_pair(params, b))(batches)
+        f, g = client_vmap(lambda b: loss_pair(params, b),
+                           client_chunk)(batches)
         return f.mean(), g.mean()
 
     def surrogate_f(params):

@@ -1,0 +1,32 @@
+"""repro.engine -- the federation round engine (DESIGN.md §Engine).
+
+Owns everything between "here is a FedState" and "here is the next one":
+
+* ``participation`` -- the client-sampling axis: dense mask (paper-faithful
+  simulation) or compute-sparse gather of the m sampled clients, plus the
+  ``client_chunk`` memory knob,
+* ``strategies``    -- registry of round strategies (fedsgm / fedsgm-soft /
+  penalty-fedavg / centralized-sgm), each supplying only the round's math,
+* ``rounds``        -- the strategy-pluggable :func:`round_step`, the
+  fully-jitted multi-round :func:`drive`, and the ``run_rounds`` /
+  ``run_rounds_scan`` compatibility shims.
+
+``core.fedsgm`` and ``core.baselines.penalty_round`` are thin wrappers over
+this package.
+"""
+from repro.engine import participation, strategies
+from repro.engine.participation import (Participation, client_vmap,
+                                        participation_mask)
+from repro.engine.rounds import (FedState, RoundMetrics, averaged_iterate,
+                                 drive, init_state, round_bytes, round_step,
+                                 run_rounds, run_rounds_scan, transports_for)
+from repro.engine.strategies import (Strategy, get_strategy,
+                                     register_strategy, strategy_names)
+
+__all__ = [
+    "FedState", "Participation", "RoundMetrics", "Strategy",
+    "averaged_iterate", "client_vmap", "drive", "get_strategy", "init_state",
+    "participation", "participation_mask", "register_strategy",
+    "round_bytes", "round_step", "run_rounds", "run_rounds_scan",
+    "strategies", "strategy_names", "transports_for",
+]

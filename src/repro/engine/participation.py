@@ -1,0 +1,130 @@
+"""Client participation as a first-class, compute-bearing axis.
+
+FedSGM samples S_t (m of n clients, uniform without replacement) every
+round.  Two executions of the same sample are supported:
+
+* ``mask``   -- the paper-faithful dense simulation: every per-client
+  computation runs over all n clients and is mask-multiplied down to the m
+  participants afterwards (the seed ``round_step`` behavior).
+* ``gather`` -- compute-sparse: the sorted indices of the m sampled clients
+  are materialized (static shape), their batches and uplink EF residuals are
+  gathered with ``jnp.take``, the E local steps and the EF step run over m
+  rows only, and residuals are scattered back.  Local-step FLOPs and
+  EF-state traffic scale with m, not n; aggregation scatters messages back
+  into the full [n, ...] layout so it is the *same op* as the mask path
+  (trajectories match bit-for-bit, verified in tests/test_engine.py).
+
+``client_vmap`` adds the orthogonal ``client_chunk`` knob: a ``lax.map``
+over chunks of vmapped clients, so n >> devices scenarios (e.g. n=512
+synthetic NP clients) bound the per-step activation memory by the chunk
+size instead of n.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+tree_map = jax.tree_util.tree_map
+
+MODES = ("mask", "gather")
+
+
+class Participation(NamedTuple):
+    """One round's sample S_t.  ``idx`` is None in mask mode; in gather mode
+    it holds the sorted indices of the m participants (static shape [m])."""
+    mask: jnp.ndarray               # [n] 0/1, exactly m ones
+    idx: Optional[jnp.ndarray]      # [m] int32, sorted ascending, or None
+    n: int
+    m: int
+
+
+def participation_mask(key: jax.Array, n: int, m: int) -> jnp.ndarray:
+    """0/1 mask with exactly m ones, uniform without replacement."""
+    if m >= n:
+        return jnp.ones((n,), jnp.float32)
+    perm = jax.random.permutation(key, n)
+    return (perm < m).astype(jnp.float32)
+
+
+def mask_indices(mask: jnp.ndarray, m: int) -> jnp.ndarray:
+    """Sorted indices of the m participants (static output shape)."""
+    return jnp.flatnonzero(mask > 0, size=m, fill_value=0).astype(jnp.int32)
+
+
+def sample(key: jax.Array, cfg) -> Participation:
+    """Draw S_t for this round per ``cfg.participation``."""
+    if cfg.participation not in MODES:
+        raise ValueError(f"unknown participation mode {cfg.participation!r}; "
+                         f"expected one of {MODES}")
+    mask = participation_mask(key, cfg.n_clients, cfg.m)
+    idx = mask_indices(mask, cfg.m) if cfg.participation == "gather" else None
+    return Participation(mask, idx, cfg.n_clients, cfg.m)
+
+
+def gather(part: Participation, tree):
+    """Participants' view of a stacked [n, ...] pytree ([m, ...] rows in
+    sorted-index order); identity in mask mode."""
+    if part.idx is None:
+        return tree
+    return tree_map(lambda x: jnp.take(x, part.idx, axis=0), tree)
+
+
+def scatter_rows(part: Participation, tree_part):
+    """[m, ...] participant rows -> full [n, ...] layout, zeros elsewhere
+    (delegates to the transport layer's shared helper)."""
+    from repro.comm import scatter_rows as _scatter
+    return _scatter(tree_part, part.idx, part.n)
+
+
+def aggregate(part: Participation, deltas):
+    """Participating mean of per-client deltas (gathered [m,...] or full
+    [n,...]), via the same masked reduction either way."""
+    from repro.comm import masked_mean
+    if part.idx is None:
+        return masked_mean(deltas, part.mask, part.m)
+    return masked_mean(scatter_rows(part, deltas), part.mask, part.m)
+
+
+def transmit(transport, e, deltas, part: Participation, like, key=None):
+    """The engine's single uplink call site: dispatch the EF14 + aggregation
+    to the transport's dense-mask or gathered execution."""
+    if part.idx is None:
+        return transport.transmit(e, deltas, part.mask, part.m,
+                                  like=like, key=key)
+    return transport.transmit_gathered(e, deltas, part.idx, part.mask,
+                                       part.m, like=like, key=key)
+
+
+def client_vmap(fn, chunk: int = 0):
+    """vmap over the leading client axis, optionally lax.map'd over chunks.
+
+    ``chunk <= 0`` is a plain vmap.  A non-dividing chunk runs the largest
+    chunk-multiple prefix through the lax.map and the remainder through one
+    smaller vmap -- the memory bound stays ``chunk``, never silently
+    reverting to a full-width vmap.  Per-client results are identical --
+    each client's work is independent -- while peak activation memory
+    scales with ``chunk``."""
+    vf = jax.vmap(fn)
+    if chunk <= 0:
+        return vf
+
+    def run(*args):
+        n = jax.tree_util.tree_leaves(args)[0].shape[0]
+        if chunk >= n:
+            return vf(*args)
+        n_main = (n // chunk) * chunk
+
+        def resh(x):
+            return x[:n_main].reshape((n_main // chunk, chunk) + x.shape[1:])
+
+        out = jax.lax.map(lambda a: vf(*a), tree_map(resh, args))
+        out = tree_map(lambda x: x.reshape((n_main,) + x.shape[2:]), out)
+        if n_main == n:
+            return out
+        rest = vf(*tree_map(lambda x: x[n_main:], args))
+        return tree_map(lambda a, b: jnp.concatenate([a, b], axis=0),
+                        out, rest)
+
+    return run

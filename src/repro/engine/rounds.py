@@ -1,0 +1,294 @@
+"""The federation round engine: everything between "here is a FedState" and
+"here is the next one".
+
+One :func:`round_step` implements a full communication round for any
+registered strategy (engine.strategies):
+
+  1. sample S_t (m of n clients; dense mask or compute-sparse gather,
+     engine.participation),
+  2. constraint query: G_hat(w_t) over the participants (and, unless
+     ``cfg.full_eval`` is off, the all-client g_full eval metric),
+  3. strategy switch weight sigma_t,
+  4. E local steps per client on the strategy's local objective,
+  5. uplink EF14 compression of Delta_j = (w_t - w_{j,E}) / eta through the
+     transport layer (repro.comm),
+  6. strategy server update x_{t+1},
+  7. downlink primal-EF21 broadcast w_{t+1} = w_t + C_0(x_{t+1} - w_t).
+
+Compressor/wire/backend dispatch lives in repro.comm; participation-mode
+dispatch lives in engine.participation; the strategy supplies only the
+round's math.  :func:`drive` is the fully-jitted multi-round driver
+(donated-buffer lax.scan, metric offload per chunk, host-callback progress
+hook); :func:`run_rounds` / :func:`run_rounds_scan` keep the seed
+signatures as shims.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import comm
+from repro.configs.base import FedConfig
+from repro.core.compression import message_bytes
+from repro.engine import participation, strategies
+from repro.optim import sgd
+from repro.optim.sgd import tree_axpy, tree_zeros_like
+from repro.sharding import partition
+
+tree_map = jax.tree_util.tree_map
+
+
+class FedState(NamedTuple):
+    w: object               # broadcast model w_t (all clients hold this)
+    x: object               # server center x_t (== w when downlink uncompressed)
+    e_up: object            # uplink EF residuals, leading axis [n_clients]
+    wbar_sum: object        # running weighted sum of w_t over feasible rounds
+    wbar_weight: jnp.ndarray
+    t: jnp.ndarray
+    key: jax.Array
+
+
+class RoundMetrics(NamedTuple):
+    f: jnp.ndarray          # mean client objective at w_t (participating)
+    g_hat: jnp.ndarray      # aggregated constraint estimate (participating)
+    g_full: jnp.ndarray     # constraint over all clients (eval only; the
+                            # participating estimate when full_eval is off)
+    sigma: jnp.ndarray      # switching weight used
+    feasible: jnp.ndarray   # 1{G_hat <= eps}
+    delta_norm: jnp.ndarray
+    # measured wire bytes of this round's messages, from the transport's
+    # actual wire representation (per participating client uplink / one
+    # broadcast downlink) -- not the analytic message_bytes estimate
+    up_bytes: jnp.ndarray
+    down_bytes: jnp.ndarray
+    f_full: jnp.ndarray     # mean objective over all clients (eval only)
+
+
+def transports_for(cfg: FedConfig):
+    """(uplink, downlink) transports for a federation config."""
+    backend = comm.backend_for(cfg.comm)
+    return (comm.get_transport(cfg.uplink, backend),
+            comm.get_transport(cfg.downlink, backend))
+
+
+def init_state(params, cfg: FedConfig, key: Optional[jax.Array] = None) -> FedState:
+    if key is None:
+        key = jax.random.PRNGKey(cfg.seed)
+    # Memory-scaled state (DESIGN.md §3): the uplink EF residual exists only
+    # under uplink compression; the server center x is stored separately only
+    # under downlink compression (otherwise x == w identically); the averaged
+    # iterate accumulator is optional (theory tasks, not LM dry-runs).
+    uplink, downlink = transports_for(cfg)
+    e_up = None
+    if uplink.needs_residual:
+        e_up = tree_map(
+            lambda p: jnp.zeros((cfg.n_clients,) + p.shape, p.dtype), params)
+    x = params if downlink.tracks_center else None
+    return FedState(
+        w=params, x=x, e_up=e_up,
+        wbar_sum=tree_zeros_like(params) if cfg.track_wbar else None,
+        wbar_weight=jnp.zeros(()),
+        t=jnp.zeros((), jnp.int32),
+        key=key)
+
+
+def averaged_iterate(state: FedState):
+    """w_bar: the theorem's averaged iterate over feasible rounds."""
+    if state.wbar_sum is None:
+        return state.w
+    wgt = jnp.maximum(state.wbar_weight, 1e-12)
+    has = state.wbar_weight > 0
+    return tree_map(
+        lambda s, w: jnp.where(has, s / wgt, w), state.wbar_sum, state.w)
+
+
+def round_step(state: FedState,
+               batches,
+               loss_pair: Callable,   # (params, batch) -> (f_j, g_j) scalars
+               cfg: FedConfig) -> tuple[FedState, RoundMetrics]:
+    """One engine round.  ``batches`` has leading axis [n_clients]."""
+    strat = strategies.get_strategy(cfg.strategy)
+    strat.validate(cfg)
+    n, m, E, eta = cfg.n_clients, cfg.m, cfg.local_steps, cfg.lr
+    key, k_part, k_up, k_down = jax.random.split(state.key, 4)
+
+    part = participation.sample(k_part, cfg)
+
+    # -- constraint query (scalar uplink per client) ------------------------
+    sparse_eval = part.idx is not None and not cfg.full_eval
+    eval_b = participation.gather(part, batches) if sparse_eval else batches
+    f_ev, g_ev = participation.client_vmap(
+        lambda b: loss_pair(state.w, b), cfg.client_chunk)(eval_b)
+    if sparse_eval:
+        g_hat = jnp.sum(g_ev) / m
+        f_part = jnp.sum(f_ev) / m
+    else:
+        g_hat = jnp.sum(part.mask * g_ev) / m
+        f_part = jnp.sum(part.mask * f_ev) / m
+    g_full, f_full = jnp.mean(g_ev), jnp.mean(f_ev)
+
+    sigma = strat.switch_weight(g_hat, cfg)
+
+    # -- E local steps on the strategy's local objective --------------------
+    grad_fn = jax.grad(strat.local_objective(loss_pair, sigma, cfg))
+
+    def local_updates(batch):
+        def body(w, _):
+            g = grad_fn(w, batch)
+            return tree_map(lambda p, gr: p - eta * gr, w, g), None
+        w_E, _ = jax.lax.scan(body, state.w, None, length=E)
+        return tree_map(lambda a, b: (a - b) / eta, state.w, w_E)  # Delta_j
+
+    local_b = participation.gather(part, batches)       # [m|n, ...]
+    deltas = participation.client_vmap(local_updates, cfg.client_chunk)(local_b)
+    deltas = partition.constrain_leading(deltas, "client")
+
+    # -- the wire path: exactly one uplink and one downlink call site -------
+    # All compressor / backend / wire-format dispatch lives inside the
+    # transport layer (repro.comm); participation-mode dispatch lives in
+    # engine.participation.
+    uplink, downlink = transports_for(cfg)
+
+    x_cur = state.x if state.x is not None else state.w
+    v_bar, e_up = participation.transmit(
+        uplink, state.e_up, deltas, part, like=state.w, key=k_up)
+    x_new = strat.server_update(x_cur, v_bar, cfg)
+    w_new = downlink.broadcast(state.w, x_new, key=k_down)
+    x_keep = x_new if downlink.tracks_center else None
+
+    # -- averaged iterate bookkeeping (Theorems 1/2) -------------------------
+    alpha = strat.iterate_weight(g_hat, cfg)
+    wbar_sum = (tree_axpy(alpha, state.w, state.wbar_sum)
+                if state.wbar_sum is not None else None)
+
+    delta_norm = sgd.tree_norm(participation.aggregate(part, deltas))
+    metrics = RoundMetrics(
+        f=f_part, g_hat=g_hat, g_full=g_full, sigma=sigma,
+        feasible=(g_hat <= cfg.switch.eps).astype(jnp.float32),
+        delta_norm=delta_norm,
+        up_bytes=jnp.asarray(float(uplink.wire_bytes(state.w)), jnp.float32),
+        down_bytes=jnp.asarray(float(downlink.wire_bytes(state.w)), jnp.float32),
+        f_full=f_full)
+
+    new_state = FedState(
+        w=w_new, x=x_keep, e_up=e_up,
+        wbar_sum=wbar_sum, wbar_weight=state.wbar_weight + alpha,
+        t=state.t + 1, key=key)
+    return new_state, metrics
+
+
+# ---------------------------------------------------------------------------
+# Drivers
+# ---------------------------------------------------------------------------
+
+def drive(state: FedState, batches, loss_pair: Callable, cfg: FedConfig,
+          T: int, *, per_round: bool = False, block: int = 0,
+          progress: Optional[Callable] = None,
+          donate: Optional[bool] = None):
+    """Fully-jitted multi-round driver: lax.scan over rounds with donated
+    state buffers, metric offload per ``block`` rounds, and an optional
+    host-callback progress hook.
+
+    * ``batches``: fixed per-client data ([n, ...]); with ``per_round=True``
+      a stacked [T, n, ...] pytree scanned one slice per round.
+    * ``block``: rounds per scan segment.  Metrics transfer to the host once
+      per segment (device metric memory is O(block), and the per-round
+      dispatch stall of the old host loop is amortized away).  0 => one
+      segment of T rounds.
+    * ``progress``: ``progress(t, f, g_hat, sigma)`` called from the device
+      via ``jax.debug.callback`` every round (async, does not stall
+      dispatch).
+    * ``donate``: donate the state buffers to each scan segment (defaults to
+      on for non-CPU backends; CPU ignores donation and would warn).  The
+      caller's state is copied once up front so donation never invalidates
+      caller-held arrays (FedState.w aliases the params it was built from).
+
+    Returns ``(final_state, metrics)`` with metrics stacked on the host
+    ([T] leading axis, numpy).
+    """
+    if donate is None:
+        donate = jax.default_backend() != "cpu"
+    if donate:
+        state = tree_map(jnp.copy, state)
+    block = int(block) if block else T
+    block = max(1, min(block, T))
+
+    def segment(length: int):
+        def run(s, xs):
+            def body(carry, x):
+                b = x if per_round else batches
+                carry, mets = round_step(carry, b, loss_pair, cfg)
+                if progress is not None:
+                    jax.debug.callback(progress, carry.t, mets.f,
+                                       mets.g_hat, mets.sigma)
+                return carry, mets
+            return jax.lax.scan(body, s, xs,
+                                length=None if per_round else length)
+        kw = {"donate_argnums": (0,)} if donate else {}
+        return jax.jit(run, **kw)
+
+    runners: dict = {}
+    chunks = []
+    t = 0
+    while t < T:
+        L = min(block, T - t)
+        if L not in runners:
+            runners[L] = segment(L)
+        xs = None
+        if per_round:
+            xs = tree_map(lambda x: x[t:t + L], batches)
+        state, mets = runners[L](state, xs)
+        chunks.append(jax.device_get(mets))     # offload one segment
+        t += L
+    stacked = tree_map(lambda *xs: np.concatenate(xs, axis=0), *chunks)
+    return state, stacked
+
+
+def run_rounds(state: FedState, batch_fn: Callable, loss_pair: Callable,
+               cfg: FedConfig, T: int, jit: bool = True):
+    """Drive T rounds; ``batch_fn(t, key) -> batches`` supplies per-round
+    data (host-side loop so batch_fn may be arbitrary python; the round
+    itself is jitted).
+
+    Compatibility shim over the engine round.  Metrics accumulate on device
+    and transfer to the host once at the end -- the seed's per-round
+    ``jax.device_get`` stalled dispatch between rounds.
+    """
+    step = jax.jit(lambda s, b: round_step(s, b, loss_pair, cfg)) if jit else \
+        (lambda s, b: round_step(s, b, loss_pair, cfg))
+    history = []
+    key = jax.random.PRNGKey(cfg.seed + 1)
+    for t in range(T):
+        key, sub = jax.random.split(key)
+        batches = batch_fn(t, sub)
+        state, metrics = step(state, batches)
+        history.append(metrics)                 # stays on device
+    stacked = tree_map(lambda *xs: jnp.stack(xs), *history)
+    return state, jax.device_get(stacked)
+
+
+def run_rounds_scan(state: FedState, batches, loss_pair: Callable,
+                    cfg: FedConfig, T: int):
+    """Fully-jitted T rounds with fixed per-client data -- compatibility
+    shim over :func:`drive` (the fast path for the paper's full-batch NP
+    experiments)."""
+    return drive(state, batches, loss_pair, cfg, T)
+
+
+def round_bytes(params, cfg: FedConfig) -> dict:
+    """Wire-bytes accounting for one round (per participating client).
+
+    ``uplink``/``downlink`` are analytic estimates (message_bytes);
+    ``measured_up``/``measured_down`` come from the transport's actual wire
+    representation for this config's backend."""
+    uplink, downlink = transports_for(cfg)
+    up = message_bytes(params, cfg.uplink)
+    down = message_bytes(params, cfg.downlink)
+    dense = message_bytes(params, type(cfg.uplink)(kind="none"))
+    return {"uplink": up, "downlink": down, "dense": dense,
+            "measured_up": uplink.wire_bytes(params),
+            "measured_down": downlink.wire_bytes(params),
+            "savings_up": 1.0 - up / dense, "savings_down": 1.0 - down / dense}

@@ -1,0 +1,148 @@
+"""Strategy registry for the engine round.
+
+A :class:`Strategy` supplies only the round's pluggable math; everything
+else -- participation sampling, client vmap/chunking, the EF wire path
+(repro.comm), metrics, averaged-iterate bookkeeping -- is the engine's,
+shared across strategies:
+
+* ``switch_weight(g_hat, cfg) -> sigma_t``  (the constraint-awareness knob),
+* ``local_objective(loss_pair, sigma, cfg) -> (params, batch) -> scalar``
+  (what each client descends for E local steps),
+* ``server_update(x, v_bar, cfg) -> x_{t+1}`` (the server-side step on the
+  aggregated, decompressed direction),
+* ``iterate_weight(g_hat, cfg) -> alpha_t`` (weight of w_t in the averaged
+  iterate; 0 drops the round, Theorems 1/2).
+
+Registered strategies: ``fedsgm`` (Algorithm 1, switch mode from cfg),
+``fedsgm-soft`` (forces the trimmed-hinge soft switch), ``penalty-fedavg``
+(the Fig. 6/7 baseline: fixed-rho penalty, no switching) and
+``centralized-sgm`` (the n=1 special case of Algorithm 1, paper Remark).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import switching
+from repro.optim.sgd import project_ball
+
+tree_map = jax.tree_util.tree_map
+
+_STRATEGIES: dict = {}
+
+
+def register_strategy(cls):
+    """Class decorator: register a Strategy under its ``name``."""
+    _STRATEGIES[cls.name] = cls
+    return cls
+
+
+def get_strategy(name: str) -> "Strategy":
+    try:
+        cls = _STRATEGIES[name]
+    except KeyError:
+        raise ValueError(f"unknown strategy {name!r}; "
+                         f"registered: {sorted(_STRATEGIES)}")
+    return cls()
+
+
+def strategy_names() -> tuple:
+    return tuple(sorted(_STRATEGIES))
+
+
+class Strategy:
+    """Pluggable round math (see module docstring)."""
+
+    name: str = "?"
+
+    def validate(self, cfg) -> None:
+        """Raise at trace time when ``cfg`` is incompatible."""
+
+    def switch_weight(self, g_hat, cfg):
+        raise NotImplementedError
+
+    def local_objective(self, loss_pair, sigma, cfg):
+        raise NotImplementedError
+
+    def server_update(self, x, v_bar, cfg):
+        """x_{t+1} = Pi_X(x_t - eta * v_bar) by default."""
+        stepped = tree_map(lambda xi, vi: xi - cfg.lr * vi, x, v_bar)
+        return project_ball(stepped, cfg.proj_radius)
+
+    def iterate_weight(self, g_hat, cfg):
+        raise NotImplementedError
+
+
+@register_strategy
+class FedSGM(Strategy):
+    """Algorithm 1: blended-objective local steps with switching weight."""
+
+    name = "fedsgm"
+
+    def _switch_cfg(self, cfg):
+        return cfg.switch
+
+    def switch_weight(self, g_hat, cfg):
+        return switching.switch_weight(g_hat, self._switch_cfg(cfg))
+
+    def local_objective(self, loss_pair, sigma, cfg):
+        # sigma_t is round-constant, so grad-of-blend == blend-of-grads
+        def blended(params, batch):
+            f, g = loss_pair(params, batch)
+            return (1.0 - sigma) * f + sigma * g
+        return blended
+
+    def iterate_weight(self, g_hat, cfg):
+        return switching.averaged_iterate_weight(g_hat, self._switch_cfg(cfg))
+
+
+@register_strategy
+class FedSGMSoft(FedSGM):
+    """FedSGM with the trimmed-hinge soft switch forced on, whatever
+    ``cfg.switch.mode`` says (convenience registry entry)."""
+
+    name = "fedsgm-soft"
+
+    def _switch_cfg(self, cfg):
+        if cfg.switch.mode == "soft":
+            return cfg.switch
+        return dataclasses.replace(cfg.switch, mode="soft")
+
+
+@register_strategy
+class PenaltyFedAvg(FedSGM):
+    """Penalty-based FedAvg (Fig. 6/7): E local steps on
+    f + rho * [g - eps]_+ with fixed rho -- no switching; the averaged
+    iterate (if track_wbar is on) is a uniform average of all rounds."""
+
+    name = "penalty-fedavg"
+
+    def switch_weight(self, g_hat, cfg):
+        return jnp.zeros(())
+
+    def local_objective(self, loss_pair, sigma, cfg):
+        def penalized(params, batch):
+            f, g = loss_pair(params, batch)
+            return f + cfg.rho * jnp.maximum(g - cfg.switch.eps, 0.0)
+        return penalized
+
+    def iterate_weight(self, g_hat, cfg):
+        return jnp.ones(())
+
+
+@register_strategy
+class CentralizedSGM(FedSGM):
+    """Centralized switching gradient method: the n=1, m=1 special case of
+    Algorithm 1 (paper Remark).  Identical round math; the client axis is a
+    singleton and participation is degenerate."""
+
+    name = "centralized-sgm"
+
+    def validate(self, cfg) -> None:
+        if cfg.n_clients != 1 or cfg.m != 1:
+            raise ValueError(
+                "centralized-sgm is the n_clients == m == 1 special case; "
+                f"got n_clients={cfg.n_clients}, m={cfg.m} "
+                "(use strategy='fedsgm' for federated runs)")

@@ -24,6 +24,7 @@ from repro.configs.base import INPUT_SHAPES
 def run_one(arch: str, shape_name: str, mesh_kind: str, comm: str = "dense",
             local_steps: int = 1, uplink_ratio: float = 0.1,
             dtype: str = None, seq_shard: bool = False,
+            participation: str = "mask", client_chunk: int = 0,
             verbose: bool = True) -> dict:
     import jax
     from repro import configs
@@ -36,7 +37,8 @@ def run_one(arch: str, shape_name: str, mesh_kind: str, comm: str = "dense",
     rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
            "chips": chips, "comm": comm, "local_steps": local_steps,
            "uplink_ratio": uplink_ratio, "dtype": dtype or "default",
-           "seq_shard": seq_shard}
+           "seq_shard": seq_shard, "participation": participation,
+           "client_chunk": client_chunk}
 
     reason = steps.skip_reason(arch, shape_name)
     if reason:
@@ -45,7 +47,9 @@ def run_one(arch: str, shape_name: str, mesh_kind: str, comm: str = "dense",
 
     case = steps.build_case(arch, shape_name, mesh, comm=comm,
                             local_steps=local_steps, dtype=dtype,
-                            seq_shard=seq_shard, uplink_ratio=uplink_ratio) \
+                            seq_shard=seq_shard, uplink_ratio=uplink_ratio,
+                            participation=participation,
+                            client_chunk=client_chunk) \
         if shape_name == "train_4k" else \
         steps.build_case(arch, shape_name, mesh, dtype=dtype)
     with mesh:
@@ -126,6 +130,11 @@ def main():
     ap.add_argument("--comm", default="dense", choices=["dense", "packed", "pallas"])
     ap.add_argument("--local-steps", type=int, default=1)
     ap.add_argument("--uplink-ratio", type=float, default=0.1)
+    ap.add_argument("--participation", default="mask",
+                    choices=["mask", "gather"],
+                    help="engine client-sampling execution (DESIGN.md §Engine)")
+    ap.add_argument("--client-chunk", type=int, default=0,
+                    help="lax.map over chunks of this many vmapped clients")
     ap.add_argument("--dtype", default=None, choices=[None, "float32", "bfloat16"])
     ap.add_argument("--seq-shard", action="store_true")
     ap.add_argument("--append", default=None, help="append JSONL record here")
@@ -149,7 +158,9 @@ def main():
         rec = run_one(args.arch, args.shape, args.mesh, comm=args.comm,
                       local_steps=args.local_steps,
                       uplink_ratio=args.uplink_ratio,
-                      dtype=args.dtype, seq_shard=args.seq_shard)
+                      dtype=args.dtype, seq_shard=args.seq_shard,
+                      participation=args.participation,
+                      client_chunk=args.client_chunk)
     except Exception as e:  # noqa: BLE001
         rec = {"arch": args.arch, "shape": args.shape, "mesh": args.mesh,
                "comm": args.comm, "status": "error",

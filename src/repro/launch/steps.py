@@ -67,13 +67,21 @@ def _client_prefix(spec: P, client_axis: Optional[str]) -> P:
 
 def fed_config_for(cfg: ModelConfig, mesh: Mesh, local_steps: int = 1,
                    comm: str = "dense", uplink_ratio: float = 0.1,
-                   partial: bool = True) -> FedConfig:
+                   partial: bool = True, participation: str = "mask",
+                   client_chunk: int = 0) -> FedConfig:
     """Default FedSGM policy per architecture class (DESIGN.md §5).
 
     ``comm`` selects the transport backend (DESIGN.md §Transport):
-    dense -> ref, packed -> payload collectives, pallas -> fused kernels."""
+    dense -> ref, packed -> payload collectives, pallas -> fused kernels.
+    ``participation``/``client_chunk`` select the engine's client-sampling
+    execution (DESIGN.md §Engine): gather makes local-step FLOPs scale with
+    m instead of n; client_chunk bounds per-step memory when n >> devices."""
     from repro import comm as comm_layer
+    from repro.engine import participation as part_layer
     comm_layer.backend_for(comm)    # validate early, before lowering
+    if participation not in part_layer.MODES:
+        raise ValueError(f"unknown participation mode {participation!r}; "
+                         f"expected one of {part_layer.MODES}")
     axes = dict(zip(mesh.axis_names, mesh.devices.shape))
     shards = axes.get("model", 1)   # shard-local compression blocks (§Perf A0)
     if cfg.name in GIANTS:
@@ -85,7 +93,8 @@ def fed_config_for(cfg: ModelConfig, mesh: Mesh, local_steps: int = 1,
                                     block=2048, shards=shards),
             downlink=CompressorConfig(kind="none"),
             comm=comm, client_axis="pod" if "pod" in axes else None,
-            track_wbar=False)
+            track_wbar=False, participation=participation,
+            client_chunk=client_chunk)
     n = axes.get("data", 1)
     m = max(1, int(0.75 * n)) if partial else n
     return FedConfig(
@@ -95,7 +104,8 @@ def fed_config_for(cfg: ModelConfig, mesh: Mesh, local_steps: int = 1,
                                 block=2048, shards=shards),
         downlink=CompressorConfig(kind="topk", ratio=uplink_ratio,
                                   block=2048, shards=shards),
-        comm=comm, client_axis="data", track_wbar=False)
+        comm=comm, client_axis="data", track_wbar=False,
+        participation=participation, client_chunk=client_chunk)
 
 
 def _activate(cfg: ModelConfig, mesh: Mesh, kind: str, fed: Optional[FedConfig]):
@@ -143,12 +153,16 @@ def build_train_case(cfg: ModelConfig, shape: InputShape, mesh: Mesh,
                      fed: Optional[FedConfig] = None, comm: str = "dense",
                      local_steps: int = 1, dtype: Optional[str] = None,
                      seq_shard: bool = False,
-                     uplink_ratio: float = 0.1) -> Case:
+                     uplink_ratio: float = 0.1,
+                     participation: str = "mask",
+                     client_chunk: int = 0) -> Case:
     if dtype:
         cfg = dataclasses.replace(cfg, param_dtype=dtype)
     fns = build(cfg)
     fed = fed or fed_config_for(cfg, mesh, local_steps=local_steps, comm=comm,
-                                uplink_ratio=uplink_ratio)
+                                uplink_ratio=uplink_ratio,
+                                participation=participation,
+                                client_chunk=client_chunk)
     _activate(cfg, mesh, "train", fed)
     if seq_shard:
         # sequence parallelism for the residual stream (hillclimb knob):

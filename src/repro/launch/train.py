@@ -37,6 +37,14 @@ def main():
     ap.add_argument("--ratio", type=float, default=0.1)
     ap.add_argument("--comm", default="dense", choices=["dense", "packed", "pallas"])
     ap.add_argument("--switch", default="soft", choices=["hard", "soft"])
+    ap.add_argument("--strategy", default="fedsgm",
+                    help="engine strategy (repro.engine.strategies registry)")
+    ap.add_argument("--participation", default="mask",
+                    choices=["mask", "gather"],
+                    help="dense-mask simulation vs compute-sparse gather of "
+                         "the m sampled clients")
+    ap.add_argument("--client-chunk", type=int, default=0,
+                    help="lax.map over chunks of this many vmapped clients")
     ap.add_argument("--multi-pod", action="store_true",
                     help="use the production mesh (needs devices)")
     ap.add_argument("--ckpt-dir", default=None,
@@ -63,7 +71,8 @@ def main():
         switch=SwitchConfig(mode=args.switch, eps=0.0, beta=2.0),
         uplink=CompressorConfig(kind=args.uplink, ratio=args.ratio),
         downlink=CompressorConfig(kind="none"),
-        comm=args.comm)
+        comm=args.comm, strategy=args.strategy,
+        participation=args.participation, client_chunk=args.client_chunk)
     loss_pair = lm.make_loss_pair(fns.forward, cfg, budget=6.0,
                                   aux_constraint=cfg.moe is not None)
     state = fedsgm.init_state(params, fed)
