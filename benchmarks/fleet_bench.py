@@ -1,0 +1,205 @@
+"""Fleet benchmark: in-jit provisioning throughput and non-IID convergence
+(ISSUE 3, DESIGN.md §Fleet).
+
+Two record families, written to BENCH_fleet.json:
+
+* ``provision``: us/round for a jitted engine round with streaming fleet
+  provisioning (batch_size rows drawn per client per round inside the jit)
+  at n in {64, 512}, m = n/4, mask vs gather participation.  The headline:
+  gather-mode provisioning + local-step cost scales with m, not n -- on
+  the fixed-m pair (n=64 vs n=512 at m=16) gather grows only by the
+  engine's O(n) aggregation/EF-scatter floor (~2x for 8x the clients)
+  while the mask path grows ~8x.  Provisioning runs inside the round's
+  jit: no per-round host transfers (the drive scan never leaves the
+  device).
+* ``alpha_sweep``: NP-task convergence on a Dirichlet label-skew fleet at
+  alpha in {100, 1, 0.1} with the shard-size-weighted sampler -- final
+  f / g_hat / switching duty as heterogeneity grows.
+
+``--smoke`` is the CI regression guard: bit-parity of the fleet path
+(defaults vs raw batches AND provisioned gather vs mask) plus a wall-time
+check that gather-mode provisioning is actually compute-sparse.
+
+    PYTHONPATH=src python -m benchmarks.fleet_bench [--smoke] [--out F.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timed
+from benchmarks.engine_bench import D, _init_params, _loss_pair
+from repro.configs.base import (CompressorConfig, FedConfig, FleetConfig,
+                                SwitchConfig)
+from repro.engine import rounds
+from repro.fleet import provision
+from repro.tasks import np_classification as npc
+
+POOL = 64          # rows held per client
+BATCH = 32         # rows provisioned per client per round
+
+
+def _fleet(key, n, pool=POOL):
+    kx, ky = jax.random.split(key)
+    x = jax.random.normal(kx, (n, pool, D))
+    y = (jax.random.uniform(ky, (n, pool)) < 0.3).astype(jnp.float32)
+    return provision.from_stacked((x, y))
+
+
+def _cfg(n, m, mode, E, batch=BATCH, full_eval=None, sampler="uniform"):
+    if full_eval is None:
+        full_eval = mode == "mask"
+    return FedConfig(
+        n_clients=n, m=m, local_steps=E, lr=0.05,
+        switch=SwitchConfig(mode="soft", eps=0.35, beta=6.0),
+        uplink=CompressorConfig(kind="topk", ratio=0.25, block=32),
+        downlink=CompressorConfig(kind="none"),
+        participation=mode, full_eval=full_eval, track_wbar=False,
+        fleet=FleetConfig(sampler=sampler, batch_size=batch, redraw=True))
+
+
+def _time_round(cfg, params, fleet, iters=3, warmup=2):
+    state = rounds.init_state(params, cfg)
+    step = jax.jit(lambda s, b: rounds.round_step(s, b, _loss_pair, cfg))
+    us, _ = timed(step, state, fleet, warmup=warmup, iters=iters)
+    return us
+
+
+def provision_records(E=8, iters=3):
+    key = jax.random.PRNGKey(0)
+    params = _init_params(key)
+    records = []
+    for n in (64, 512):
+        fleet = _fleet(jax.random.fold_in(key, n), n)
+        for mode, m in (("mask", n // 4), ("gather", n // 4),
+                        ("gather", 16)):   # fixed-m row: m-not-n scaling
+            us = _time_round(_cfg(n, m, mode, E), params, fleet,
+                             iters=iters)
+            rec = {"bench": "provision", "n": n, "m": m,
+                   "participation": mode, "batch_size": BATCH,
+                   "local_steps": E, "us_per_round": round(us, 1),
+                   "rounds_per_s": round(1e6 / us, 2)}
+            records.append(rec)
+            emit(f"fleet_provision_{mode}_m{m}of{n}", us,
+                 f"rounds_per_s={rec['rounds_per_s']};batch={BATCH}")
+    return records
+
+
+def alpha_records(T=30, n=20, m=10):
+    key = jax.random.PRNGKey(0)
+    records = []
+    for alpha in (100.0, 1.0, 0.1):
+        fl = FleetConfig(partitioner="dirichlet", alpha=alpha,
+                         batch_size=16, redraw=True, sampler="weighted")
+        cfg = FedConfig(
+            n_clients=n, m=m, local_steps=5, lr=0.1,
+            switch=SwitchConfig(mode="soft", eps=0.35, beta=6.0),
+            uplink=CompressorConfig(kind="topk", ratio=0.1),
+            downlink=CompressorConfig(kind="topk", ratio=0.1),
+            fleet=fl)
+        fleet, (x_test, _) = npc.make_fleet(key, cfg)
+        params = npc.init_params(key, x_test.shape[-1])
+        state = rounds.init_state(params, cfg)
+        us, (state, hist) = timed(
+            lambda: rounds.drive(state, fleet, npc.loss_pair, cfg, T=T),
+            warmup=0, iters=1)
+        counts = np.asarray(fleet.count)
+        rec = {"bench": "alpha_sweep", "alpha": alpha, "T": T,
+               "f_final": round(float(hist.f[-1]), 4),
+               "g_hat_final": round(float(hist.g_hat[-1]), 4),
+               "mean_sigma": round(float(hist.sigma.mean()), 3),
+               "count_min": int(counts.min()),
+               "count_max": int(counts.max()),
+               "us_per_round": round(us / T, 1)}
+        records.append(rec)
+        emit(f"fleet_alpha{alpha}", us / T,
+             f"f={rec['f_final']};g_hat={rec['g_hat_final']};"
+             f"sigma={rec['mean_sigma']}")
+    return records
+
+
+def fleet_table(out: str = "BENCH_fleet.json"):
+    records = provision_records() + alpha_records()
+    with open(out, "w") as f:
+        json.dump({"bench": "fleet", "records": records}, f, indent=1)
+    return records
+
+
+def smoke(n=64, m=16, E=8, threshold=0.9) -> int:
+    """CI guard (fast): (a) fleet defaults reproduce raw-batch trajectories
+    bit-for-bit, (b) provisioned gather == provisioned mask bit-for-bit,
+    (c) gather-mode provisioning is compute-sparse (cost scales with m)."""
+    key = jax.random.PRNGKey(0)
+    params = _init_params(key)
+    fleet = _fleet(jax.random.fold_in(key, 1), n)
+
+    # (a) parity: full-shard fleet vs the same arrays as raw batches
+    cfg0 = _cfg(n, m, "mask", 2, batch=0, full_eval=True)
+    finals = {}
+    for name, batches in (("raw", fleet.data), ("fleet", fleet)):
+        state = rounds.init_state(params, cfg0)
+        step = jax.jit(lambda s, b: rounds.round_step(s, b, _loss_pair,
+                                                      cfg0))
+        for _ in range(3):
+            state, mets = step(state, batches)
+        finals[name] = (state, mets)
+    for a, b in zip(jax.tree_util.tree_leaves(finals["raw"]),
+                    jax.tree_util.tree_leaves(finals["fleet"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    print("smoke: fleet defaults == raw batches (bit-for-bit) .. ok")
+
+    # (b) provisioned gather == provisioned mask
+    finals = {}
+    for mode in ("mask", "gather"):
+        cfg = _cfg(n, m, mode, 2, full_eval=True)
+        state = rounds.init_state(params, cfg)
+        step = jax.jit(lambda s, b: rounds.round_step(s, b, _loss_pair, cfg))
+        for _ in range(3):
+            state, mets = step(state, fleet)
+        finals[mode] = (state, mets)
+    for a, b in zip(jax.tree_util.tree_leaves(finals["mask"]),
+                    jax.tree_util.tree_leaves(finals["gather"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    print("smoke: provisioned gather == mask (bit-for-bit) .. ok")
+
+    # (c) compute-sparsity incl. provisioning (best-of-2 per mode: robust
+    # to noisy-neighbor spikes on shared CI runners)
+    us_mask = min(_time_round(_cfg(n, m, "mask", E), params, fleet)
+                  for _ in range(2))
+    us_gather = min(_time_round(_cfg(n, m, "gather", E), params, fleet)
+                    for _ in range(2))
+    ratio = us_gather / us_mask
+    print(f"smoke: m/n={m}/{n}  mask={us_mask:.0f}us  gather={us_gather:.0f}us"
+          f"  ratio={ratio:.2f} (must be < {threshold})")
+    if ratio >= threshold:
+        print("smoke: FAIL -- gather-mode fleet provisioning is not "
+              "compute-sparse (cost did not scale with m)")
+        return 1
+    print("smoke: ok")
+    return 0
+
+
+ALL = [fleet_table]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI regression guard (parity + provisioning "
+                         "scaling)")
+    ap.add_argument("--out", default="BENCH_fleet.json")
+    args = ap.parse_args()
+    if args.smoke:
+        sys.exit(smoke())
+    print("name,us_per_call,derived")
+    records = fleet_table(args.out)
+    print(f"wrote {args.out} ({len(records)} records)", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

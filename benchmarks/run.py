@@ -11,7 +11,7 @@ import traceback
 
 def main() -> None:
     from benchmarks import cmdp_benches, comm_bench, engine_bench, \
-        fair_benches, kernel_benches, np_benches, roofline_bench
+        fair_benches, fleet_bench, kernel_benches, np_benches, roofline_bench
 
     suites = {
         "np": np_benches.ALL,
@@ -20,6 +20,7 @@ def main() -> None:
         "kernels": kernel_benches.ALL,
         "comm": comm_bench.ALL,
         "engine": engine_bench.ALL,
+        "fleet": fleet_bench.ALL,
         "roofline": roofline_bench.ALL,
     }
     want = [a for a in sys.argv[1:] if a in suites] or list(suites)

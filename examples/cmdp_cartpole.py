@@ -2,13 +2,21 @@
 (paper Section 4, Figure 3/4).  n=10 clients with budgets d_i in [25,35],
 soft switching, Top-K K/d=0.5 compression, 70% participation.
 
+The client population is a fleet (repro.fleet): each client's shard is a
+pool of rollout seeds + its budget, provisioned in-jit (batch_size=1,
+redraw) so the whole multi-round driver runs jitted -- no host-side
+batch_fn key loop -- and participation follows the Markov availability
+sampler: clients drop out and return in time-correlated streaks, the
+partial-participation regime the paper's high-probability bounds target.
+
     PYTHONPATH=src python examples/cmdp_cartpole.py [--rounds 300]
 """
 import argparse
 
 import jax
 
-from repro.configs.base import CompressorConfig, FedConfig, SwitchConfig
+from repro.configs.base import (CompressorConfig, FedConfig, FleetConfig,
+                                SwitchConfig)
 from repro.core import fedsgm
 from repro.tasks import cmdp
 
@@ -16,24 +24,24 @@ from repro.tasks import cmdp
 def main(rounds: int, n: int = 10, participation: float = 0.7):
     key = jax.random.PRNGKey(0)
     params = cmdp.init_params(key)
-    budgets = cmdp.client_budgets(n)
-    loss_pair = cmdp.make_loss_pair(n_episodes=5, horizon=200)
+    loss_pair = cmdp.fleet_loss_pair(n_episodes=5, horizon=200)
     cfg = FedConfig(
         n_clients=n, m=max(1, int(participation * n)), local_steps=1, lr=3e-4,
         switch=SwitchConfig(mode="soft", eps=0.0, beta=1.0),
         uplink=CompressorConfig(kind="topk", ratio=0.5),
         downlink=CompressorConfig(kind="none"),
+        fleet=FleetConfig(sampler="markov", avail_stay=0.85,
+                          avail_return=0.6, batch_size=1, redraw=True),
     )
+    fleet = cmdp.make_fleet(jax.random.PRNGKey(1), cfg, pool=256)
     state = fedsgm.init_state(params, cfg)
 
-    def batch_fn(t, k):
-        return (jax.random.split(k, n), budgets)
-
     for chunk in range(max(rounds // 50, 1)):
-        state, hist = fedsgm.run_rounds(state, batch_fn, loss_pair, cfg, T=50)
+        state, hist = fedsgm.drive(state, fleet, loss_pair, cfg, T=50)
         ev = cmdp.eval_policy(state.w, jax.random.PRNGKey(chunk + 1), 10)
         print(f"round {50*(chunk+1):4d}: episodic reward={ev['reward']:6.1f} "
-              f"cost={ev['cost']:5.1f} (budget 30) sigma={float(hist.sigma[-1]):.2f}")
+              f"cost={ev['cost']:5.1f} (budget 30) "
+              f"sigma={float(hist.sigma[-1]):.2f}")
 
 
 if __name__ == "__main__":

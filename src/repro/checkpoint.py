@@ -1,6 +1,17 @@
 """Checkpointing: FedState / pytree save-restore (npz-based, no orbax in the
 container).  Leaf paths are flattened to '/'-joined keys; NamedTuple-tagged
-None leaves (x / e_up / wbar under the memory-scaled state) round-trip.
+None leaves (x / e_up / wbar / sampler under the memory-scaled state)
+round-trip.
+
+The generic :func:`save`/:func:`restore` pair round-trips the *full* engine
+FedState -- uplink EF residuals, downlink server center, the averaged
+iterate accumulator, round counter, PRNG key and client-sampler state --
+so a restored run continues on the exact trajectory of the uninterrupted
+one (tests/test_fleet.py::TestCheckpoint).  :func:`save_round` /
+:func:`restore_round` additionally carry the fleet (partitioned client
+shards + counts, ``repro.fleet.Fleet``) beside each round checkpoint, with
+the partition metadata (per-client counts, FleetConfig fields) recorded in
+the sidecar json.
 """
 from __future__ import annotations
 
@@ -53,10 +64,9 @@ def restore(path: str, like_tree):
         jax.tree_util.tree_structure(like_tree), leaves)
 
 
-def latest_round(ckpt_dir: str) -> Optional[int]:
-    """Find the newest round_<t> checkpoint in a directory."""
-    if not os.path.isdir(ckpt_dir):
-        return None
+def _round_numbers(ckpt_dir: str) -> list:
+    """Round numbers of the round_<t>.npz checkpoints in a directory
+    (sidecar files like round_<t>_fleet.npz are skipped, not crashed on)."""
     rounds = []
     for f in os.listdir(ckpt_dir):
         if f.startswith("round_") and f.endswith(".npz"):
@@ -64,27 +74,55 @@ def latest_round(ckpt_dir: str) -> Optional[int]:
                 rounds.append(int(f[len("round_"):-len(".npz")]))
             except ValueError:
                 pass
+    return sorted(rounds)
+
+
+def latest_round(ckpt_dir: str) -> Optional[int]:
+    """Find the newest round_<t> checkpoint in a directory."""
+    if not os.path.isdir(ckpt_dir):
+        return None
+    rounds = _round_numbers(ckpt_dir)
     return max(rounds) if rounds else None
 
 
+def fleet_metadata(fleet, cfg=None) -> dict:
+    """Partition metadata for the checkpoint sidecar: per-client shard
+    counts plus the FleetConfig fields that produced them."""
+    import dataclasses
+    meta = {"count": np.asarray(fleet.count).tolist()}
+    if cfg is not None:
+        meta.update(dataclasses.asdict(cfg.fleet))
+    return meta
+
+
 def save_round(ckpt_dir: str, t: int, state, keep: int = 3,
-               metadata: Optional[dict] = None):
-    """Save a round checkpoint and garbage-collect old ones."""
+               metadata: Optional[dict] = None, fleet=None, cfg=None):
+    """Save a round checkpoint (plus the fleet, when given) and
+    garbage-collect old ones."""
+    metadata = dict(metadata or {})
+    if fleet is not None:
+        metadata["fleet"] = fleet_metadata(fleet, cfg)
+        save(os.path.join(ckpt_dir, f"round_{t}_fleet"), fleet,
+             metadata["fleet"])
     save(os.path.join(ckpt_dir, f"round_{t}"), state, metadata)
-    rounds = sorted(
-        int(f[len("round_"):-len(".npz")])
-        for f in os.listdir(ckpt_dir)
-        if f.startswith("round_") and f.endswith(".npz"))
-    for old in rounds[:-keep]:
-        for ext in (".npz", ".json"):
-            try:
-                os.remove(os.path.join(ckpt_dir, f"round_{old}{ext}"))
-            except OSError:
-                pass
+    for old in _round_numbers(ckpt_dir)[:-keep]:
+        for stem in (f"round_{old}", f"round_{old}_fleet"):
+            for ext in (".npz", ".json"):
+                try:
+                    os.remove(os.path.join(ckpt_dir, stem + ext))
+                except OSError:
+                    pass
 
 
-def restore_round(ckpt_dir: str, like_state, t: Optional[int] = None):
+def restore_round(ckpt_dir: str, like_state, t: Optional[int] = None,
+                  like_fleet=None):
+    """Restore the newest (or round-``t``) checkpoint.  With ``like_fleet``
+    the fleet sidecar is restored too and ``(state, fleet), t`` returns."""
     t = t if t is not None else latest_round(ckpt_dir)
     if t is None:
         return None, None
-    return restore(os.path.join(ckpt_dir, f"round_{t}"), like_state), t
+    state = restore(os.path.join(ckpt_dir, f"round_{t}"), like_state)
+    if like_fleet is None:
+        return state, t
+    fleet = restore(os.path.join(ckpt_dir, f"round_{t}_fleet"), like_fleet)
+    return (state, fleet), t

@@ -186,6 +186,31 @@ class SwitchConfig:
 
 
 @dataclass(frozen=True)
+class FleetConfig:
+    """The client-population axis (repro.fleet, DESIGN.md §Fleet).
+
+    Defaults are the bit-parity point: IID partition, uniform sampler,
+    full-shard batches, no per-round re-draw -- an engine round under these
+    defaults reproduces the pre-fleet trajectories exactly.
+    """
+    # -- partitioner (fleet.partitions registry) ----------------------------
+    partitioner: str = "iid"        # iid | dirichlet | zipf | shift
+    alpha: float = 2.0              # dirichlet concentration (label skew)
+    zipf_a: float = 1.2             # zipf exponent (quantity skew)
+    shift: float = 0.0              # covariate-drift strength (shift)
+    balance: bool = False           # equal-size re-slice of ragged label skew
+    cap_factor: float = 2.0         # padded shard capacity x (n / n_clients)
+    n_classes: int = 0              # 0 => infer from labels at build time
+    # -- sampler (fleet.samplers registry) ----------------------------------
+    sampler: str = "uniform"        # uniform | weighted | markov
+    avail_stay: float = 0.9         # markov: P(available -> available)
+    avail_return: float = 0.5       # markov: P(unavailable -> available)
+    # -- provisioning (fleet.provision) -------------------------------------
+    batch_size: int = 0             # per-client minibatch rows; 0 => full shard
+    redraw: bool = False            # fresh per-round in-jit minibatch draw
+
+
+@dataclass(frozen=True)
 class FedConfig:
     n_clients: int = 8
     m: int = 8                      # participating clients per round
@@ -210,6 +235,8 @@ class FedConfig:
                                     # clients (g_full metric + bit-parity with
                                     # the mask path); False: m sampled only
     rho: float = 1.0                # penalty-fedavg strength (strategy knob)
+    # -- fleet knobs (repro.fleet, DESIGN.md §Fleet) ------------------------
+    fleet: FleetConfig = field(default_factory=FleetConfig)
 
     def replace(self, **kw) -> "FedConfig":
         return dataclasses.replace(self, **kw)

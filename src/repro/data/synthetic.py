@@ -6,7 +6,9 @@
   classification experiment.
 * ``token_stream`` -- zipf-distributed LM tokens with induction patterns and a
   rare-token "minority domain" used as the LM constraint slice.
-* ``partition_*`` -- IID and Dirichlet-heterogeneous client splits.
+* ``partition_*`` -- IID and Dirichlet-heterogeneous client splits (shims
+  over ``repro.fleet.partitions``; the fleet subsystem is the real home of
+  client-population construction, DESIGN.md §Fleet).
 """
 from __future__ import annotations
 
@@ -14,7 +16,6 @@ from typing import Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 
 def breast_cancer_like(key, n: int = 569, d: int = 30,
@@ -62,25 +63,22 @@ def partition_iid(key, x, y, n_clients: int):
 
 
 def partition_dirichlet(key, x, y, n_clients: int, alpha: float = 2.0):
-    """Label-Dirichlet heterogeneous split (numpy; equal sizes via resample)."""
-    x_np, y_np = np.asarray(x), np.asarray(y)
-    n = x_np.shape[0]
-    per = n // n_clients
-    rng = np.random.default_rng(int(jax.device_get(jax.random.randint(key, (), 0, 2**31 - 1))))
-    classes = np.unique(y_np)
-    props = rng.dirichlet([alpha] * n_clients, size=len(classes))
-    xs, ys = [], []
-    for c_idx in range(n_clients):
-        pool = []
-        for ci, c in enumerate(classes):
-            idx = np.where(y_np == c)[0]
-            take = max(1, int(props[ci, c_idx] * len(idx)))
-            pool.append(rng.choice(idx, size=take, replace=True))
-        pool = np.concatenate(pool)
-        sel = rng.choice(pool, size=per, replace=True)
-        xs.append(x_np[sel])
-        ys.append(y_np[sel])
-    return jnp.asarray(np.stack(xs)), jnp.asarray(np.stack(ys))
+    """Label-Dirichlet heterogeneous split -- deprecation shim over
+    ``repro.fleet.partitions`` (DESIGN.md §Fleet).
+
+    The seed implementation ran on host numpy (a ``jax.device_get`` on the
+    key, which breaks under jit/vmap tracing) and drew ``replace=True``
+    resamples, silently duplicating rows.  The fleet partitioner is pure
+    JAX on device and an *exact* partition: every row assigned at most
+    once, equal sizes via the balanced re-slice (skew approximately
+    preserved) instead of resampling.  Prefer ``fleet.build_fleet`` with
+    ``FleetConfig(partitioner="dirichlet")`` in new code -- it also keeps
+    the ragged true-partition form with per-client count masks."""
+    from repro.fleet import partitions
+    cp = partitions.dirichlet_indices(
+        key, y.astype(jnp.int32), n_clients, alpha,
+        partitions.infer_n_classes(y), cap=x.shape[0], balance=True)
+    return x[cp.idx], y[cp.idx]
 
 
 # ---------------------------------------------------------------------------

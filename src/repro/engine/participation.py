@@ -33,11 +33,19 @@ MODES = ("mask", "gather")
 
 class Participation(NamedTuple):
     """One round's sample S_t.  ``idx`` is None in mask mode; in gather mode
-    it holds the sorted indices of the m participants (static shape [m])."""
+    it holds the sorted indices of the m participants (static shape [m]).
+
+    ``weights`` carries the sampler's per-client aggregation weights
+    (repro.fleet.samplers): every participating reduction is
+    ``sum_j weights_j * x_j / m``.  None (or the mask itself -- the uniform
+    law sets ``weights IS mask``) reproduces the plain masked mean
+    bit-for-bit; a non-uniform sampler bakes its unbiased reweighting in
+    (e.g. Horvitz-Thompson ``m * q_j / pi_j`` for importance sampling)."""
     mask: jnp.ndarray               # [n] 0/1, exactly m ones
     idx: Optional[jnp.ndarray]      # [m] int32, sorted ascending, or None
     n: int
     m: int
+    weights: Optional[jnp.ndarray] = None   # [n], zero off-support
 
 
 def participation_mask(key: jax.Array, n: int, m: int) -> jnp.ndarray:
@@ -53,14 +61,23 @@ def mask_indices(mask: jnp.ndarray, m: int) -> jnp.ndarray:
     return jnp.flatnonzero(mask > 0, size=m, fill_value=0).astype(jnp.int32)
 
 
-def sample(key: jax.Array, cfg) -> Participation:
-    """Draw S_t for this round per ``cfg.participation``."""
+def finalize(mask: jnp.ndarray, weights: Optional[jnp.ndarray],
+             cfg) -> Participation:
+    """Wrap a sampler's (mask, weights) draw into a Participation, with the
+    sorted participant indices materialized in gather mode."""
     if cfg.participation not in MODES:
         raise ValueError(f"unknown participation mode {cfg.participation!r}; "
                          f"expected one of {MODES}")
-    mask = participation_mask(key, cfg.n_clients, cfg.m)
     idx = mask_indices(mask, cfg.m) if cfg.participation == "gather" else None
-    return Participation(mask, idx, cfg.n_clients, cfg.m)
+    return Participation(mask, idx, cfg.n_clients, cfg.m, weights)
+
+
+def sample(key: jax.Array, cfg) -> Participation:
+    """Draw S_t for this round per ``cfg.participation`` (the uniform law;
+    pluggable samplers live in repro.fleet.samplers and are dispatched by
+    engine.rounds)."""
+    mask = participation_mask(key, cfg.n_clients, cfg.m)
+    return finalize(mask, mask, cfg)
 
 
 def gather(part: Participation, tree):
@@ -78,22 +95,33 @@ def scatter_rows(part: Participation, tree_part):
     return _scatter(tree_part, part.idx, part.n)
 
 
+def agg_weights(part: Participation) -> jnp.ndarray:
+    """The [n] aggregation weights: the sampler's, else the mask (the
+    uniform law keeps ``weights IS mask``, so this is the same array and the
+    downstream reduction is bitwise the pre-fleet masked mean)."""
+    return part.mask if part.weights is None else part.weights
+
+
 def aggregate(part: Participation, deltas):
-    """Participating mean of per-client deltas (gathered [m,...] or full
-    [n,...]), via the same masked reduction either way."""
+    """Participating weighted mean of per-client deltas (gathered [m,...]
+    or full [n,...]), via the same masked reduction either way."""
     from repro.comm import masked_mean
+    w = agg_weights(part)
     if part.idx is None:
-        return masked_mean(deltas, part.mask, part.m)
-    return masked_mean(scatter_rows(part, deltas), part.mask, part.m)
+        return masked_mean(deltas, w, part.m)
+    return masked_mean(scatter_rows(part, deltas), w, part.m)
 
 
 def transmit(transport, e, deltas, part: Participation, like, key=None):
     """The engine's single uplink call site: dispatch the EF14 + aggregation
-    to the transport's dense-mask or gathered execution."""
+    to the transport's dense-mask or gathered execution.  The sampler's
+    aggregation weights ride in the mask slot (the transport only ever
+    selects on ``> 0`` and reduces with it, so weighted laws need no new
+    wire API)."""
+    w = agg_weights(part)
     if part.idx is None:
-        return transport.transmit(e, deltas, part.mask, part.m,
-                                  like=like, key=key)
-    return transport.transmit_gathered(e, deltas, part.idx, part.mask,
+        return transport.transmit(e, deltas, w, part.m, like=like, key=key)
+    return transport.transmit_gathered(e, deltas, part.idx, w,
                                        part.m, like=like, key=key)
 
 

@@ -4,8 +4,11 @@
 One :func:`round_step` implements a full communication round for any
 registered strategy (engine.strategies):
 
-  1. sample S_t (m of n clients; dense mask or compute-sparse gather,
-     engine.participation),
+  1. sample S_t (the ``cfg.fleet.sampler`` law from repro.fleet.samplers --
+     uniform / weighted / markov -- executed dense-mask or compute-sparse
+     gather per engine.participation); with a :class:`repro.fleet.Fleet` as
+     ``batches``, provision this round's per-client minibatches in-jit
+     (fleet.provision.minibatch, per-client ``fold_in`` streams),
   2. constraint query: G_hat(w_t) over the participants (and, unless
      ``cfg.full_eval`` is off, the all-client g_full eval metric),
   3. strategy switch weight sigma_t,
@@ -34,6 +37,7 @@ from repro import comm
 from repro.configs.base import FedConfig
 from repro.core.compression import message_bytes
 from repro.engine import participation, strategies
+from repro.fleet import provision, samplers
 from repro.optim import sgd
 from repro.optim.sgd import tree_axpy, tree_zeros_like
 from repro.sharding import partition
@@ -49,6 +53,8 @@ class FedState(NamedTuple):
     wbar_weight: jnp.ndarray
     t: jnp.ndarray
     key: jax.Array
+    sampler: object = None  # client-sampler state (fleet.samplers; None for
+                            # the stateless laws -- no extra pytree leaves)
 
 
 class RoundMetrics(NamedTuple):
@@ -87,12 +93,14 @@ def init_state(params, cfg: FedConfig, key: Optional[jax.Array] = None) -> FedSt
         e_up = tree_map(
             lambda p: jnp.zeros((cfg.n_clients,) + p.shape, p.dtype), params)
     x = params if downlink.tracks_center else None
+    samp = samplers.get_sampler(cfg.fleet.sampler)
     return FedState(
         w=params, x=x, e_up=e_up,
         wbar_sum=tree_zeros_like(params) if cfg.track_wbar else None,
         wbar_weight=jnp.zeros(()),
         t=jnp.zeros((), jnp.int32),
-        key=key)
+        key=key,
+        sampler=samp.init(cfg, jax.random.fold_in(key, 0x736D70)))  # "smp"
 
 
 def averaged_iterate(state: FedState):
@@ -109,25 +117,44 @@ def round_step(state: FedState,
                batches,
                loss_pair: Callable,   # (params, batch) -> (f_j, g_j) scalars
                cfg: FedConfig) -> tuple[FedState, RoundMetrics]:
-    """One engine round.  ``batches`` has leading axis [n_clients]."""
+    """One engine round.  ``batches`` has leading axis [n_clients], or is a
+    :class:`repro.fleet.Fleet` -- then this round's per-client minibatches
+    are provisioned in-jit from the fleet's shards (fleet.provision)."""
     strat = strategies.get_strategy(cfg.strategy)
     strat.validate(cfg)
     n, m, E, eta = cfg.n_clients, cfg.m, cfg.local_steps, cfg.lr
     key, k_part, k_up, k_down = jax.random.split(state.key, 4)
 
-    part = participation.sample(k_part, cfg)
+    fleet = batches if isinstance(batches, provision.Fleet) else None
+    samp = samplers.get_sampler(cfg.fleet.sampler)
+    mask, weights, samp_state = samp.sample(k_part, cfg, fleet=fleet,
+                                            state=state.sampler)
+    part = participation.finalize(mask, weights, cfg)
+
+    # -- in-jit batch provisioning (fleet only) -----------------------------
+    # Gather mode without the full-n eval provisions only the m sampled
+    # clients' minibatches, so provisioning FLOPs/memory scale with m.
+    sparse_eval = part.idx is not None and not cfg.full_eval
+    pre_gathered = False
+    if fleet is not None:
+        k_prov = provision.round_key(state.key, cfg)
+        prov_idx = part.idx if sparse_eval else None
+        batches = provision.minibatch(fleet, k_prov, cfg, idx=prov_idx)
+        pre_gathered = prov_idx is not None
 
     # -- constraint query (scalar uplink per client) ------------------------
-    sparse_eval = part.idx is not None and not cfg.full_eval
-    eval_b = participation.gather(part, batches) if sparse_eval else batches
+    eval_b = participation.gather(part, batches) \
+        if (sparse_eval and not pre_gathered) else batches
     f_ev, g_ev = participation.client_vmap(
         lambda b: loss_pair(state.w, b), cfg.client_chunk)(eval_b)
+    w_agg = participation.agg_weights(part)
     if sparse_eval:
-        g_hat = jnp.sum(g_ev) / m
-        f_part = jnp.sum(f_ev) / m
+        w_part = jnp.take(w_agg, part.idx)
+        g_hat = jnp.sum(w_part * g_ev) / m
+        f_part = jnp.sum(w_part * f_ev) / m
     else:
-        g_hat = jnp.sum(part.mask * g_ev) / m
-        f_part = jnp.sum(part.mask * f_ev) / m
+        g_hat = jnp.sum(w_agg * g_ev) / m
+        f_part = jnp.sum(w_agg * f_ev) / m
     g_full, f_full = jnp.mean(g_ev), jnp.mean(f_ev)
 
     sigma = strat.switch_weight(g_hat, cfg)
@@ -142,7 +169,8 @@ def round_step(state: FedState,
         w_E, _ = jax.lax.scan(body, state.w, None, length=E)
         return tree_map(lambda a, b: (a - b) / eta, state.w, w_E)  # Delta_j
 
-    local_b = participation.gather(part, batches)       # [m|n, ...]
+    local_b = batches if pre_gathered else \
+        participation.gather(part, batches)             # [m|n, ...]
     deltas = participation.client_vmap(local_updates, cfg.client_chunk)(local_b)
     deltas = partition.constrain_leading(deltas, "client")
 
@@ -176,7 +204,7 @@ def round_step(state: FedState,
     new_state = FedState(
         w=w_new, x=x_keep, e_up=e_up,
         wbar_sum=wbar_sum, wbar_weight=state.wbar_weight + alpha,
-        t=state.t + 1, key=key)
+        t=state.t + 1, key=key, sampler=samp_state)
     return new_state, metrics
 
 
@@ -192,8 +220,12 @@ def drive(state: FedState, batches, loss_pair: Callable, cfg: FedConfig,
     state buffers, metric offload per ``block`` rounds, and an optional
     host-callback progress hook.
 
-    * ``batches``: fixed per-client data ([n, ...]); with ``per_round=True``
-      a stacked [T, n, ...] pytree scanned one slice per round.
+    * ``batches``: fixed per-client data ([n, ...]), or a
+      :class:`repro.fleet.Fleet` -- each scanned round then provisions
+      fresh per-client minibatches in-jit (no per-round host transfers;
+      set ``cfg.fleet.redraw`` for per-round re-draws); with
+      ``per_round=True`` a stacked [T, n, ...] pytree scanned one slice
+      per round (array batches only).
     * ``block``: rounds per scan segment.  Metrics transfer to the host once
       per segment (device metric memory is O(block), and the per-round
       dispatch stall of the old host loop is amortized away).  0 => one

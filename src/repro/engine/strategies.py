@@ -1,9 +1,12 @@
 """Strategy registry for the engine round.
 
 A :class:`Strategy` supplies only the round's pluggable math; everything
-else -- participation sampling, client vmap/chunking, the EF wire path
-(repro.comm), metrics, averaged-iterate bookkeeping -- is the engine's,
-shared across strategies:
+else -- client sampling (the ``cfg.fleet.sampler`` law, whose aggregation
+weights the engine threads through every participating reduction including
+the v_bar this strategy's ``server_update`` consumes), batch provisioning
+(repro.fleet), client vmap/chunking, the EF wire path (repro.comm),
+metrics, averaged-iterate bookkeeping -- is the engine's, shared across
+strategies:
 
 * ``switch_weight(g_hat, cfg) -> sigma_t``  (the constraint-awareness knob),
 * ``local_objective(loss_pair, sigma, cfg) -> (params, batch) -> scalar``

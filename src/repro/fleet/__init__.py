@@ -1,0 +1,32 @@
+"""repro.fleet -- the federated client-population subsystem (DESIGN.md
+§Fleet).
+
+Third leg of the architecture after ``repro.comm`` (what crosses the wire)
+and ``repro.engine`` (how a round executes): *who* participates and *what
+data they hold*.  Three pluggable registries, all jit-compatible and
+static-shape:
+
+* ``partitions``  -- device-resident non-IID partitioners (iid / dirichlet
+  label-skew / zipf quantity-skew / feature shift) producing padded ragged
+  shards with per-client count masks,
+* ``samplers``    -- client-participation laws (uniform / weighted
+  importance sampling with unbiased reweighting / Markov availability)
+  generalizing ``engine.participation_mask``,
+* ``provision``   -- the :class:`Fleet` pytree + streaming in-jit
+  per-client minibatch provisioning composing with both mask and gather
+  participation.
+"""
+from repro.fleet.partitions import (ClientPartition, Partitioner,
+                                    get_partitioner, partitioner_names,
+                                    register_partitioner)
+from repro.fleet.provision import (Fleet, build_fleet, data_weights,
+                                   from_stacked, minibatch, round_key)
+from repro.fleet.samplers import (ClientSampler, get_sampler,
+                                  register_sampler, sampler_names)
+
+__all__ = [
+    "ClientPartition", "ClientSampler", "Fleet", "Partitioner",
+    "build_fleet", "data_weights", "from_stacked", "get_partitioner",
+    "get_sampler", "minibatch", "partitioner_names", "register_partitioner",
+    "register_sampler", "round_key", "sampler_names",
+]

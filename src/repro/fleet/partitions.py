@@ -1,0 +1,310 @@
+"""Device-resident non-IID client partitioners (repro.fleet, DESIGN.md §Fleet).
+
+A partitioner maps a dataset of n samples onto n_clients padded shards of
+sample *indices* -- a :class:`ClientPartition` of ``idx`` ([J, cap] int32)
+plus a per-client ``count`` mask ([J] int32, valid rows per shard).  All
+partitioners are pure JAX on static shapes: no host numpy, no data-dependent
+Python control flow, so fleet construction composes with jit and stays on
+device (the seed's ``data/synthetic.partition_dirichlet`` pulled the key to
+the host with ``jax.device_get`` and duplicated rows with ``replace=True``
+resampling; both are gone).
+
+Registered partitioners:
+
+* ``iid``        -- equal-size uniform split (bit-identical indices to the
+  seed ``partition_iid`` given the same key),
+* ``dirichlet``  -- label-skew: per-class client proportions ~ Dir(alpha),
+  realized as an *exact* partition (every sample assigned once) via
+  largest-remainder quotas per class; ``balance=True`` re-slices the
+  grouped assignment into equal-size shards (skew approximately preserved,
+  partition stays exact),
+* ``zipf``       -- quantity-skew: client shard sizes follow a Zipf law
+  (client 0 largest), ragged counts under the padded cap,
+* ``shift``      -- feature-shift / covariate drift: IID split plus a
+  per-client Gaussian drift added to the feature leaves at build time.
+
+Ragged shards pad ``idx`` with the shard's own first row, so a padded row
+always gathers the owning client's data; validity is governed by ``count``
+(provisioning only ever draws rows < count).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+tree_map = jax.tree_util.tree_map
+
+_PARTITIONERS: dict = {}
+
+
+def register_partitioner(cls):
+    """Class decorator: register a Partitioner under its ``name``."""
+    _PARTITIONERS[cls.name] = cls
+    return cls
+
+
+def get_partitioner(name: str) -> "Partitioner":
+    try:
+        cls = _PARTITIONERS[name]
+    except KeyError:
+        raise ValueError(f"unknown partitioner {name!r}; "
+                         f"registered: {sorted(_PARTITIONERS)}")
+    return cls()
+
+
+def partitioner_names() -> tuple:
+    return tuple(sorted(_PARTITIONERS))
+
+
+class ClientPartition(NamedTuple):
+    idx: jnp.ndarray        # [n_clients, cap] int32 sample indices (padded)
+    count: jnp.ndarray      # [n_clients] int32 valid rows per shard
+
+
+# ---------------------------------------------------------------------------
+# Functional cores (pure JAX, static shapes)
+# ---------------------------------------------------------------------------
+
+def largest_remainder(raw: jnp.ndarray, total) -> jnp.ndarray:
+    """Integer quotas summing exactly to ``total`` from real targets ``raw``
+    (floor everything, then hand the deficit to the largest remainders)."""
+    base = jnp.floor(raw).astype(jnp.int32)
+    rem = raw - base
+    deficit = jnp.asarray(total, jnp.int32) - base.sum()
+    order = jnp.argsort(-rem)
+    rank = jnp.zeros_like(order).at[order].set(jnp.arange(order.shape[0]))
+    return base + (rank < deficit).astype(jnp.int32)
+
+
+def _group_by_client(client_of: jnp.ndarray) -> jnp.ndarray:
+    """Sample ids grouped by client, original order preserved within a
+    client (two-key stable sort; avoids int overflow of client*n + i)."""
+    n = client_of.shape[0]
+    return jnp.lexsort((jnp.arange(n), client_of))
+
+
+def pack_shards(client_of: jnp.ndarray, n_clients: int,
+                cap: int) -> ClientPartition:
+    """[n] client assignment -> padded per-client index shards.
+
+    Counts clip to ``cap`` (overflow rows are dropped -- raise
+    ``FleetConfig.cap_factor`` if that matters); pad entries repeat the
+    shard's first row so padded gathers stay client-local."""
+    n = client_of.shape[0]
+    order = _group_by_client(client_of)
+    counts = jnp.bincount(client_of, length=n_clients)
+    offsets = jnp.cumsum(counts) - counts
+    k = jnp.arange(cap)
+    flat = jnp.clip(offsets[:, None] + k[None, :], 0, n - 1)
+    idx = order[flat].astype(jnp.int32)
+    count = jnp.minimum(counts, cap).astype(jnp.int32)
+    idx = jnp.where(k[None, :] < jnp.maximum(count, 1)[:, None],
+                    idx, idx[:, :1])
+    return ClientPartition(idx, count)
+
+
+def _ensure_nonempty(client_of: jnp.ndarray, n_clients: int) -> jnp.ndarray:
+    """Reassign one sample from the largest shard to each empty client, so
+    every shard holds >= 1 row (the padded-gather contract: a pad row always
+    belongs to its own client) while the assignment stays an exact
+    partition.  Static shapes: non-stolen slots scatter out of bounds and
+    are dropped."""
+    n = client_of.shape[0]
+    counts = jnp.bincount(client_of, length=n_clients)
+    donor = jnp.argmax(counts)
+    empty = counts == 0
+    rank = jnp.cumsum(empty) - empty.astype(jnp.int32)   # rank among empties
+    steal = jnp.minimum(empty.sum(), counts[donor] - 1)
+    order = _group_by_client(client_of)
+    offsets = jnp.cumsum(counts) - counts
+    rows = order[jnp.clip(offsets[donor] + rank, 0, n - 1)]
+    take = empty & (rank < steal)
+    return client_of.at[jnp.where(take, rows, n)].set(
+        jnp.arange(n_clients, dtype=client_of.dtype), mode="drop")
+
+
+def iid_indices(key: jax.Array, n: int, n_clients: int) -> ClientPartition:
+    """Equal-size uniform split; index-identical to the seed
+    ``partition_iid`` given the same key (remainder samples are dropped)."""
+    per = n // n_clients
+    perm = jax.random.permutation(key, n)
+    idx = perm[: per * n_clients].reshape(n_clients, per).astype(jnp.int32)
+    return ClientPartition(idx, jnp.full((n_clients,), per, jnp.int32))
+
+
+def dirichlet_indices(key: jax.Array, labels: jnp.ndarray, n_clients: int,
+                      alpha: float, n_classes: int, cap: int,
+                      balance: bool = False) -> ClientPartition:
+    """Label-skew exact partition: per-class proportions over clients
+    ~ Dir(alpha), realized with largest-remainder quotas so every sample is
+    assigned exactly once (no duplicate rows, counts sum to n).  Extreme
+    alpha can leave clients with no quota at all; those are rescued with
+    one row each from the largest shard (every client >= 1 row, as zipf
+    guarantees by construction)."""
+    n = labels.shape[0]
+    labels = labels.astype(jnp.int32)
+    props = jax.random.dirichlet(
+        key, jnp.full((n_clients,), float(alpha)), shape=(n_classes,))
+    class_counts = jnp.bincount(labels, length=n_classes)        # [C]
+    quota = jax.vmap(largest_remainder)(
+        props * class_counts[:, None].astype(props.dtype), class_counts)
+    qcum = jnp.cumsum(quota, axis=1)                             # [C, J]
+
+    order_cls = jnp.lexsort((jnp.arange(n), labels))             # by class
+    cls_sorted = labels[order_cls]
+    class_off = jnp.cumsum(class_counts) - class_counts
+    pos_in_class = jnp.arange(n) - class_off[cls_sorted]
+    client_sorted = jax.vmap(
+        lambda c, p: jnp.searchsorted(jnp.take(qcum, c, axis=0), p,
+                                      side="right"))(cls_sorted, pos_in_class)
+    client_of = jnp.zeros((n,), jnp.int32).at[order_cls].set(
+        jnp.clip(client_sorted, 0, n_clients - 1).astype(jnp.int32))
+
+    if balance:
+        # equal-size re-slice of the client-grouped assignment: shard j is
+        # the j-th contiguous slice, so skew is approximately preserved
+        # while sizes equalize and the partition stays exact.
+        per = n // n_clients
+        order = _group_by_client(client_of)
+        idx = order[: per * n_clients].reshape(n_clients, per).astype(jnp.int32)
+        return ClientPartition(idx, jnp.full((n_clients,), per, jnp.int32))
+    return pack_shards(_ensure_nonempty(client_of, n_clients), n_clients, cap)
+
+
+def zipf_indices(key: jax.Array, n: int, n_clients: int, a: float,
+                 cap: int) -> ClientPartition:
+    """Quantity-skew: shard sizes follow size_j ∝ (j+1)^-a (client 0
+    largest, every client >= 1 row), contents drawn from one permutation so
+    the split is an exact partition."""
+    raw = jnp.arange(1, n_clients + 1, dtype=jnp.float32) ** (-float(a))
+    sizes = largest_remainder(raw / raw.sum() * n, n)
+    short = (sizes == 0).astype(jnp.int32)
+    sizes = sizes + short
+    sizes = sizes.at[jnp.argmax(sizes)].add(-short.sum())
+    offsets = jnp.cumsum(sizes) - sizes
+    perm = jax.random.permutation(key, n)
+    k = jnp.arange(cap)
+    flat = jnp.clip(offsets[:, None] + k[None, :], 0, n - 1)
+    idx = perm[flat].astype(jnp.int32)
+    count = jnp.minimum(sizes, cap).astype(jnp.int32)
+    idx = jnp.where(k[None, :] < jnp.maximum(count, 1)[:, None],
+                    idx, idx[:, :1])
+    return ClientPartition(idx, count)
+
+
+def infer_n_classes(labels: jnp.ndarray, configured: int = 0) -> int:
+    """Static class count: the configured value, else inferred from the
+    concrete labels.  Inference reads the label array on the host (shapes
+    must be static under jit), so it works on closure constants inside a
+    trace; *traced* labels need ``FleetConfig.n_classes`` set."""
+    if configured:
+        return int(configured)
+    if isinstance(labels, jax.core.Tracer):
+        raise ValueError(
+            "labels are traced: set FleetConfig.n_classes (a static class "
+            "count) when partitioning under jit")
+    import numpy as np
+    return int(np.max(np.asarray(labels))) + 1
+
+
+# ---------------------------------------------------------------------------
+# Registry entries
+# ---------------------------------------------------------------------------
+
+class Partitioner:
+    """One client-population law: index shards + optional build transform."""
+
+    name: str = "?"
+    ragged: bool = False            # per-client counts vary
+    needs_labels: bool = False
+
+    def cap(self, n: int, n_clients: int, cfg) -> int:
+        """Static shard capacity (rows) for this law under ``cfg``."""
+        return n // n_clients
+
+    def partition(self, key: jax.Array, n: int, n_clients: int, cfg,
+                  labels: Optional[jnp.ndarray] = None) -> ClientPartition:
+        raise NotImplementedError
+
+    def transform(self, key: jax.Array, shards, cfg):
+        """Optional value transform of the gathered [J, cap, ...] shards
+        (covariate drift); identity by default."""
+        return shards
+
+    def _require_labels(self, labels):
+        if labels is None:
+            raise ValueError(
+                f"partitioner {self.name!r} needs labels "
+                "(pass labels= to provision.build_fleet)")
+
+
+@register_partitioner
+class IIDPartitioner(Partitioner):
+    name = "iid"
+
+    def partition(self, key, n, n_clients, cfg, labels=None):
+        return iid_indices(key, n, n_clients)
+
+
+@register_partitioner
+class DirichletPartitioner(Partitioner):
+    name = "dirichlet"
+    ragged = True               # equal-size under cfg.balance
+    needs_labels = True
+
+    def cap(self, n, n_clients, cfg):
+        if cfg.balance:
+            return n // n_clients
+        return min(n, int(math.ceil(cfg.cap_factor * n / n_clients)))
+
+    def partition(self, key, n, n_clients, cfg, labels=None):
+        self._require_labels(labels)
+        n_classes = infer_n_classes(labels, cfg.n_classes)
+        return dirichlet_indices(key, labels, n_clients, cfg.alpha,
+                                 n_classes, self.cap(n, n_clients, cfg),
+                                 balance=cfg.balance)
+
+
+@register_partitioner
+class ZipfPartitioner(Partitioner):
+    name = "zipf"
+    ragged = True
+
+    def cap(self, n, n_clients, cfg):
+        return min(n, int(math.ceil(cfg.cap_factor * n / n_clients)))
+
+    def partition(self, key, n, n_clients, cfg, labels=None):
+        return zipf_indices(key, n, n_clients, cfg.zipf_a,
+                            self.cap(n, n_clients, cfg))
+
+
+@register_partitioner
+class FeatureShiftPartitioner(Partitioner):
+    """IID split + per-client covariate drift: every float feature leaf
+    ([J, cap, ..., d]) gains a client-specific Gaussian offset of scale
+    ``cfg.shift`` along its trailing feature dim.  Labels / masks (float
+    leaves without a feature dim, i.e. ndim <= 2 in the stacked layout) and
+    integer leaves (tokens) are left untouched."""
+
+    name = "shift"
+
+    def partition(self, key, n, n_clients, cfg, labels=None):
+        return iid_indices(key, n, n_clients)
+
+    def transform(self, key, shards, cfg):
+        if not cfg.shift:
+            return shards
+        leaves = jax.tree_util.tree_leaves(shards)
+        keys = iter(jax.random.split(key, max(len(leaves), 1)))
+
+        def drift(leaf):
+            k = next(keys)
+            if leaf.ndim < 3 or not jnp.issubdtype(leaf.dtype, jnp.floating):
+                return leaf
+            shape = (leaf.shape[0],) + (1,) * (leaf.ndim - 2) + leaf.shape[-1:]
+            return leaf + cfg.shift * jax.random.normal(k, shape, leaf.dtype)
+
+        return tree_map(drift, shards)

@@ -1,0 +1,128 @@
+"""Fleet construction + streaming in-jit batch provisioning (DESIGN.md §Fleet).
+
+A :class:`Fleet` is the device-resident client population: the partitioned
+per-client data shards (leading ``[n_clients, cap, ...]`` axis on every
+leaf) plus the per-client valid-row ``count`` mask.  It is a plain pytree,
+so it scans, jits, donates and checkpoints like any other engine state.
+
+:func:`minibatch` is the streaming provider: called *inside* the jitted
+``engine.rounds.round_step``, it draws each client's fresh minibatch from
+its shard via a per-client PRNG stream keyed by ``fold_in(round_key,
+client_id)``.  Keying by client *id* (not row position) makes the gather
+path bit-identical to the mask path: provisioning only the m sampled
+clients (``idx=``) draws exactly the rows the dense path would have drawn
+for those clients, while its FLOPs/memory scale with m, not n.  Rows are
+drawn uniformly with replacement from ``[0, count_j)`` -- padded rows are
+never touched, so ragged shards need no downstream masking.
+
+``FleetConfig.batch_size == 0`` short-circuits to the full shard (the seed's
+fixed-batch behavior, bit-for-bit); ``redraw`` selects whether the round key
+advances per round (fresh draws) or stays pinned to the run seed (a fixed
+subsample, drawn once, every round).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.fleet import partitions
+
+tree_map = jax.tree_util.tree_map
+
+# fold_in tag separating the provisioning stream from the round's
+# sample/uplink/downlink key splits ("prov")
+PROVISION_TAG = 0x70726F76
+
+
+class Fleet(NamedTuple):
+    """The client population: partitioned shards + per-client row counts."""
+    data: object            # pytree, every leaf [n_clients, cap, ...]
+    count: jnp.ndarray      # [n_clients] int32 valid rows per shard
+
+
+def n_clients(fleet: Fleet) -> int:
+    return fleet.count.shape[0]
+
+
+def capacity(fleet: Fleet) -> int:
+    return jax.tree_util.tree_leaves(fleet.data)[0].shape[1]
+
+
+def data_weights(fleet: Fleet) -> jnp.ndarray:
+    """q_j = count_j / sum(count): the data-weighted population weights the
+    weighted sampler's aggregation is unbiased for."""
+    q = fleet.count.astype(jnp.float32)
+    return q / jnp.maximum(q.sum(), 1e-12)
+
+
+def from_stacked(data, count: Optional[jnp.ndarray] = None) -> Fleet:
+    """Fleet over pre-stacked [n_clients, cap, ...] per-client data (LM token
+    pools, CMDP rollout seeds, or the seed repo's partitioned batches --
+    the bit-parity entry point: the shards ARE the caller's arrays)."""
+    leaf = jax.tree_util.tree_leaves(data)[0]
+    J, cap = leaf.shape[0], leaf.shape[1]
+    if count is None:
+        count = jnp.full((J,), cap, jnp.int32)
+    return Fleet(data, jnp.asarray(count, jnp.int32))
+
+
+def build_fleet(key: jax.Array, data, cfg,
+                labels: Optional[jnp.ndarray] = None) -> Fleet:
+    """Partition a dataset (pytree of [n_samples, ...] leaves) into a Fleet
+    per ``cfg.fleet`` (partitioner law + capacity), applying the
+    partitioner's value transform (covariate drift) to the shards.
+
+    ``labels`` feeds the label-skew partitioners; any integer-castable [n]
+    array works (class labels, protected attributes, domain ids)."""
+    fl = cfg.fleet
+    part = partitions.get_partitioner(fl.partitioner)
+    n = jax.tree_util.tree_leaves(data)[0].shape[0]
+    if part.ragged and not fl.balance and fl.batch_size <= 0:
+        raise ValueError(
+            f"partitioner {fl.partitioner!r} produces ragged shards; set "
+            "FleetConfig.batch_size > 0 (masked minibatch provisioning) or "
+            "balance=True (equal-size re-slice)")
+    kp, kt = jax.random.split(key)
+    cp = part.partition(kp, n, cfg.n_clients, fl, labels=labels)
+    shards = tree_map(lambda a: jnp.take(a, cp.idx, axis=0), data)
+    shards = part.transform(kt, shards, fl)
+    return Fleet(shards, cp.count)
+
+
+def minibatch(fleet: Fleet, key: jax.Array, cfg,
+              idx: Optional[jnp.ndarray] = None):
+    """Draw this round's per-client minibatches inside the jitted round.
+
+    ``idx=None`` provisions all n clients ([n, b, ...]); ``idx`` (the sorted
+    participant indices of gather mode) provisions only those m rows
+    ([m, b, ...]) -- per-client streams are keyed by client id, so the two
+    agree bit-for-bit on the provisioned clients.  ``cfg.fleet.batch_size
+    <= 0`` returns the full shards unchanged (valid for equal-count fleets
+    only; ragged construction enforces batch_size > 0)."""
+    b = cfg.fleet.batch_size
+    data, count = fleet.data, fleet.count
+    if idx is not None:
+        data = tree_map(lambda a: jnp.take(a, idx, axis=0), data)
+        count = jnp.take(count, idx)
+        cids = idx
+    else:
+        cids = jnp.arange(count.shape[0], dtype=jnp.int32)
+    if b <= 0:
+        return data
+
+    def draw(cid, cnt, shard):
+        kj = jax.random.fold_in(key, cid)
+        rows = jax.random.randint(kj, (b,), 0, jnp.maximum(cnt, 1))
+        return tree_map(lambda a: jnp.take(a, rows, axis=0), shard)
+
+    return jax.vmap(draw)(cids, count, data)
+
+
+def round_key(state_key: jax.Array, cfg) -> jax.Array:
+    """The provisioning stream for one round: advances with the engine key
+    under ``redraw`` (fresh draws every round), else pinned to the run seed
+    (one fixed subsample, re-drawn identically each round)."""
+    base = state_key if cfg.fleet.redraw else jax.random.PRNGKey(cfg.seed)
+    return jax.random.fold_in(base, PROVISION_TAG)

@@ -1,0 +1,195 @@
+"""Pluggable client samplers (repro.fleet, DESIGN.md §Fleet).
+
+A :class:`ClientSampler` generalizes ``engine.participation_mask``: it draws
+the round's participant set S_t as a 0/1 ``mask`` ([n], exactly m ones --
+the engine's static-shape contract) plus per-client aggregation ``weights``
+([n], zero off-support), and may carry per-run ``state`` through the round
+scan (``FedState.sampler``).  The engine aggregates every per-client
+quantity as ``sum_j weights_j * x_j / m`` -- with ``weights == mask`` (the
+uniform law) that is bit-for-bit the pre-fleet masked mean, and a sampler
+makes its own estimator unbiased by baking the reweighting into ``weights``.
+
+Registered samplers:
+
+* ``uniform``  -- m of n without replacement, uniform; ``weights = mask``.
+  Bit-identical draw to the seed ``participation_mask`` under the same key.
+* ``weighted`` -- importance sampling ∝ shard size (``fleet.count``; uniform
+  probabilities without a fleet) via Madow systematic sampling, whose
+  inclusion probabilities are *exactly* pi_j = min-capped m·p_j, with the
+  matching Horvitz-Thompson reweighting ``weights_j = m·q_j / pi_j`` so the
+  aggregate is unbiased for the data-weighted population mean Σ_j q_j x_j
+  (q_j = count_j / Σcount).
+* ``markov``   -- a two-state availability chain per client
+  (P(stay available) = ``fleet.avail_stay``, P(return) =
+  ``fleet.avail_return``); each round samples m clients uniformly among the
+  available ones (falling back to unavailable clients only when fewer than
+  m are up), ``weights = mask`` (the participating mean, time-correlated
+  participation -- the estimator the paper's partial-participation analysis
+  stresses).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.engine.participation import participation_mask
+
+_SAMPLERS: dict = {}
+
+
+def register_sampler(cls):
+    """Class decorator: register a ClientSampler under its ``name``."""
+    _SAMPLERS[cls.name] = cls
+    return cls
+
+
+def get_sampler(name: str) -> "ClientSampler":
+    try:
+        cls = _SAMPLERS[name]
+    except KeyError:
+        raise ValueError(f"unknown client sampler {name!r}; "
+                         f"registered: {sorted(_SAMPLERS)}")
+    return cls()
+
+
+def sampler_names() -> tuple:
+    return tuple(sorted(_SAMPLERS))
+
+
+# ---------------------------------------------------------------------------
+# Systematic (Madow) sampling: exactly m distinct picks with *exact*
+# inclusion probabilities pi_j -- the property the weighted sampler's
+# unbiasedness (and its property test) rests on.
+# ---------------------------------------------------------------------------
+
+def capped_inclusion(p: jnp.ndarray, m: int, iters: int = 4) -> jnp.ndarray:
+    """Inclusion probabilities pi = m*p, iteratively capped at 1 with the
+    excess redistributed proportionally (sum stays m while any mass < 1)."""
+    pi = m * p
+    for _ in range(iters):
+        over = pi >= 1.0
+        excess = jnp.sum(jnp.where(over, pi - 1.0, 0.0))
+        free = jnp.sum(jnp.where(over, 0.0, pi))
+        pi = jnp.where(over, 1.0,
+                       pi * (1.0 + excess / jnp.maximum(free, 1e-12)))
+    return jnp.minimum(pi, 1.0)
+
+
+def systematic_pick(key: jax.Array, pi: jnp.ndarray, m: int) -> jnp.ndarray:
+    """Madow systematic sampling: m distinct sorted indices with inclusion
+    probability exactly pi_j (requires pi <= 1, sum ~= m).  One uniform u
+    places the m unit-spaced points u, u+1, ..., u+m-1 on the cumsum of pi;
+    each interval of length <= 1 catches at most one point, so the picks
+    are always distinct and exactly m."""
+    c = jnp.cumsum(pi)
+    c = c.at[-1].set(jnp.asarray(m, c.dtype))   # close float drift exactly
+    pts = jax.random.uniform(key, ()) + jnp.arange(m, dtype=c.dtype)
+    idx = jnp.searchsorted(c, pts, side="right").astype(jnp.int32)
+    return jnp.clip(idx, 0, pi.shape[0] - 1)
+
+
+# ---------------------------------------------------------------------------
+# Registry entries
+# ---------------------------------------------------------------------------
+
+class ClientSampler:
+    """One client-participation law (see module docstring)."""
+
+    name: str = "?"
+    stateful: bool = False
+
+    def init(self, cfg, key: jax.Array):
+        """Per-run sampler state (``FedState.sampler``); None if stateless
+        -- the parity point adds no pytree leaves to FedState."""
+        return None
+
+    def inclusion_probs(self, cfg, fleet=None) -> jnp.ndarray:
+        """Per-client inclusion probability of one round's draw."""
+        n = cfg.n_clients
+        return jnp.full((n,), min(cfg.m, n) / n, jnp.float32)
+
+    def sample(self, key: jax.Array, cfg, fleet=None, state=None
+               ) -> Tuple[jnp.ndarray, jnp.ndarray, Optional[object]]:
+        """Draw S_t: ``(mask [n], weights [n], new_state)``."""
+        raise NotImplementedError
+
+
+@register_sampler
+class UniformSampler(ClientSampler):
+    """m of n uniform without replacement -- the seed law, bit-for-bit
+    (same key -> same permutation -> same mask; weights IS the mask array,
+    so the engine's weighted aggregation is the identical computation)."""
+
+    name = "uniform"
+
+    def sample(self, key, cfg, fleet=None, state=None):
+        mask = participation_mask(key, cfg.n_clients, cfg.m)
+        return mask, mask, state
+
+
+@register_sampler
+class WeightedSampler(ClientSampler):
+    """Importance sampling ∝ shard size with Horvitz-Thompson reweighting
+    (see module docstring).  Without a fleet the probabilities are uniform
+    and the weights reduce to the mask."""
+
+    name = "weighted"
+
+    def _probs(self, cfg, fleet):
+        n = cfg.n_clients
+        if fleet is None:
+            return jnp.full((n,), 1.0 / n, jnp.float32)
+        from repro.fleet.provision import data_weights
+        return data_weights(fleet)
+
+    def inclusion_probs(self, cfg, fleet=None):
+        return capped_inclusion(self._probs(cfg, fleet), min(cfg.m, cfg.n_clients))
+
+    def sample(self, key, cfg, fleet=None, state=None):
+        n, m = cfg.n_clients, min(cfg.m, cfg.n_clients)
+        q = self._probs(cfg, fleet)
+        pi = capped_inclusion(q, m)
+        idx = systematic_pick(key, pi, m)
+        mask = jnp.zeros((n,), jnp.float32).at[idx].set(1.0)
+        weights = mask * (m * q / jnp.maximum(pi, 1e-12))
+        return mask, weights, state
+
+
+@register_sampler
+class MarkovSampler(ClientSampler):
+    """Two-state availability chain per client; m drawn uniformly among the
+    available set each round (see module docstring)."""
+
+    name = "markov"
+    stateful = True
+
+    def _stationary(self, cfg) -> float:
+        fl = cfg.fleet
+        return fl.avail_return / max(fl.avail_return + 1.0 - fl.avail_stay,
+                                     1e-9)
+
+    def init(self, cfg, key):
+        p = self._stationary(cfg)
+        return (jax.random.uniform(key, (cfg.n_clients,)) < p
+                ).astype(jnp.float32)
+
+    def inclusion_probs(self, cfg, fleet=None):
+        # stationary approximation: m spread over the expected available set
+        n = cfg.n_clients
+        avail = self._stationary(cfg)
+        return jnp.full((n,), min(1.0, cfg.m / max(avail * n, 1e-9)),
+                        jnp.float32) * avail
+
+    def sample(self, key, cfg, fleet=None, state=None):
+        n, m = cfg.n_clients, cfg.m
+        if state is None:                 # restored / hand-built FedState
+            state = jnp.ones((n,), jnp.float32)
+        k_flip, k_pick = jax.random.split(key)
+        p = jnp.where(state > 0, cfg.fleet.avail_stay, cfg.fleet.avail_return)
+        avail = (jax.random.uniform(k_flip, (n,)) < p).astype(jnp.float32)
+        score = avail * 2.0 + jax.random.uniform(k_pick, (n,))
+        order = jnp.argsort(-score)
+        mask = jnp.zeros((n,), jnp.float32).at[order[:m]].set(1.0)
+        return mask, mask, avail

@@ -25,7 +25,7 @@ def run_one(arch: str, shape_name: str, mesh_kind: str, comm: str = "dense",
             local_steps: int = 1, uplink_ratio: float = 0.1,
             dtype: str = None, seq_shard: bool = False,
             participation: str = "mask", client_chunk: int = 0,
-            verbose: bool = True) -> dict:
+            sampler: str = "uniform", verbose: bool = True) -> dict:
     import jax
     from repro import configs
     from repro.launch import roofline, steps
@@ -38,7 +38,7 @@ def run_one(arch: str, shape_name: str, mesh_kind: str, comm: str = "dense",
            "chips": chips, "comm": comm, "local_steps": local_steps,
            "uplink_ratio": uplink_ratio, "dtype": dtype or "default",
            "seq_shard": seq_shard, "participation": participation,
-           "client_chunk": client_chunk}
+           "client_chunk": client_chunk, "sampler": sampler}
 
     reason = steps.skip_reason(arch, shape_name)
     if reason:
@@ -49,7 +49,7 @@ def run_one(arch: str, shape_name: str, mesh_kind: str, comm: str = "dense",
                             local_steps=local_steps, dtype=dtype,
                             seq_shard=seq_shard, uplink_ratio=uplink_ratio,
                             participation=participation,
-                            client_chunk=client_chunk) \
+                            client_chunk=client_chunk, sampler=sampler) \
         if shape_name == "train_4k" else \
         steps.build_case(arch, shape_name, mesh, dtype=dtype)
     with mesh:
@@ -135,6 +135,10 @@ def main():
                     help="engine client-sampling execution (DESIGN.md §Engine)")
     ap.add_argument("--client-chunk", type=int, default=0,
                     help="lax.map over chunks of this many vmapped clients")
+    ap.add_argument("--sampler", default="uniform",
+                    choices=["uniform", "weighted"],
+                    help="client-sampling law (repro.fleet.samplers; the "
+                         "stateless laws lower under the abstract dry-run)")
     ap.add_argument("--dtype", default=None, choices=[None, "float32", "bfloat16"])
     ap.add_argument("--seq-shard", action="store_true")
     ap.add_argument("--append", default=None, help="append JSONL record here")
@@ -160,7 +164,7 @@ def main():
                       uplink_ratio=args.uplink_ratio,
                       dtype=args.dtype, seq_shard=args.seq_shard,
                       participation=args.participation,
-                      client_chunk=args.client_chunk)
+                      client_chunk=args.client_chunk, sampler=args.sampler)
     except Exception as e:  # noqa: BLE001
         rec = {"arch": args.arch, "shape": args.shape, "mesh": args.mesh,
                "comm": args.comm, "status": "error",

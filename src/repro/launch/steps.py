@@ -16,8 +16,8 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro import configs
-from repro.configs.base import (CompressorConfig, FedConfig, InputShape,
-                                ModelConfig, SwitchConfig)
+from repro.configs.base import (CompressorConfig, FedConfig, FleetConfig,
+                                InputShape, ModelConfig, SwitchConfig)
 from repro.core import fedsgm
 from repro.models import build
 from repro.sharding import partition
@@ -68,20 +68,27 @@ def _client_prefix(spec: P, client_axis: Optional[str]) -> P:
 def fed_config_for(cfg: ModelConfig, mesh: Mesh, local_steps: int = 1,
                    comm: str = "dense", uplink_ratio: float = 0.1,
                    partial: bool = True, participation: str = "mask",
-                   client_chunk: int = 0) -> FedConfig:
+                   client_chunk: int = 0,
+                   sampler: str = "uniform") -> FedConfig:
     """Default FedSGM policy per architecture class (DESIGN.md §5).
 
     ``comm`` selects the transport backend (DESIGN.md §Transport):
     dense -> ref, packed -> payload collectives, pallas -> fused kernels.
     ``participation``/``client_chunk`` select the engine's client-sampling
     execution (DESIGN.md §Engine): gather makes local-step FLOPs scale with
-    m instead of n; client_chunk bounds per-step memory when n >> devices."""
+    m instead of n; client_chunk bounds per-step memory when n >> devices.
+    ``sampler`` selects the client-sampling *law* (repro.fleet.samplers,
+    DESIGN.md §Fleet) -- the stateless laws (uniform/weighted) lower under
+    the abstract dry-run state; markov needs an engine-built FedState."""
     from repro import comm as comm_layer
     from repro.engine import participation as part_layer
+    from repro.fleet import samplers as sampler_layer
     comm_layer.backend_for(comm)    # validate early, before lowering
+    sampler_layer.get_sampler(sampler)
     if participation not in part_layer.MODES:
         raise ValueError(f"unknown participation mode {participation!r}; "
                          f"expected one of {part_layer.MODES}")
+    fleet = FleetConfig(sampler=sampler)
     axes = dict(zip(mesh.axis_names, mesh.devices.shape))
     shards = axes.get("model", 1)   # shard-local compression blocks (§Perf A0)
     if cfg.name in GIANTS:
@@ -94,7 +101,7 @@ def fed_config_for(cfg: ModelConfig, mesh: Mesh, local_steps: int = 1,
             downlink=CompressorConfig(kind="none"),
             comm=comm, client_axis="pod" if "pod" in axes else None,
             track_wbar=False, participation=participation,
-            client_chunk=client_chunk)
+            client_chunk=client_chunk, fleet=fleet)
     n = axes.get("data", 1)
     m = max(1, int(0.75 * n)) if partial else n
     return FedConfig(
@@ -105,7 +112,7 @@ def fed_config_for(cfg: ModelConfig, mesh: Mesh, local_steps: int = 1,
         downlink=CompressorConfig(kind="topk", ratio=uplink_ratio,
                                   block=2048, shards=shards),
         comm=comm, client_axis="data", track_wbar=False,
-        participation=participation, client_chunk=client_chunk)
+        participation=participation, client_chunk=client_chunk, fleet=fleet)
 
 
 def _activate(cfg: ModelConfig, mesh: Mesh, kind: str, fed: Optional[FedConfig]):
@@ -155,14 +162,16 @@ def build_train_case(cfg: ModelConfig, shape: InputShape, mesh: Mesh,
                      seq_shard: bool = False,
                      uplink_ratio: float = 0.1,
                      participation: str = "mask",
-                     client_chunk: int = 0) -> Case:
+                     client_chunk: int = 0,
+                     sampler: str = "uniform") -> Case:
     if dtype:
         cfg = dataclasses.replace(cfg, param_dtype=dtype)
     fns = build(cfg)
     fed = fed or fed_config_for(cfg, mesh, local_steps=local_steps, comm=comm,
                                 uplink_ratio=uplink_ratio,
                                 participation=participation,
-                                client_chunk=client_chunk)
+                                client_chunk=client_chunk,
+                                sampler=sampler)
     _activate(cfg, mesh, "train", fed)
     if seq_shard:
         # sequence parallelism for the residual stream (hillclimb knob):

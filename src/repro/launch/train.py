@@ -14,7 +14,8 @@ import time
 import jax
 
 from repro import configs
-from repro.configs.base import CompressorConfig, FedConfig, SwitchConfig
+from repro.configs.base import (CompressorConfig, FedConfig, FleetConfig,
+                                SwitchConfig)
 from repro.core import fedsgm
 from repro.data import synthetic
 from repro.models import build
@@ -45,6 +46,15 @@ def main():
                          "the m sampled clients")
     ap.add_argument("--client-chunk", type=int, default=0,
                     help="lax.map over chunks of this many vmapped clients")
+    ap.add_argument("--fleet", action="store_true",
+                    help="device-resident client fleet with in-jit minibatch "
+                         "provisioning (repro.fleet): the whole multi-round "
+                         "driver runs jitted, no per-round host batches")
+    ap.add_argument("--fleet-pool", type=int, default=8,
+                    help="token sequences held per client (fleet mode)")
+    ap.add_argument("--sampler", default="uniform",
+                    choices=["uniform", "weighted", "markov"],
+                    help="client-sampling law (repro.fleet.samplers)")
     ap.add_argument("--multi-pod", action="store_true",
                     help="use the production mesh (needs devices)")
     ap.add_argument("--ckpt-dir", default=None,
@@ -72,7 +82,9 @@ def main():
         uplink=CompressorConfig(kind=args.uplink, ratio=args.ratio),
         downlink=CompressorConfig(kind="none"),
         comm=args.comm, strategy=args.strategy,
-        participation=args.participation, client_chunk=args.client_chunk)
+        participation=args.participation, client_chunk=args.client_chunk,
+        fleet=FleetConfig(sampler=args.sampler, batch_size=args.batch,
+                          redraw=True) if args.fleet else FleetConfig())
     loss_pair = lm.make_loss_pair(fns.forward, cfg, budget=6.0,
                                   aux_constraint=cfg.moe is not None)
     state = fedsgm.init_state(params, fed)
@@ -84,6 +96,28 @@ def main():
             state, start_round = restored, t0
             print(f"restored checkpoint at round {t0}")
 
+    t0 = time.time()
+    if args.fleet:
+        if cfg.family in ("vlm", "audio"):
+            raise SystemExit("--fleet covers token-only archs (media pools "
+                             "are an open item, ROADMAP.md)")
+        fleet = lm.make_fleet(jax.random.PRNGKey(1), fed,
+                              pool=args.fleet_pool, seq_len=args.seq,
+                              vocab=cfg.vocab, hetero=0.5)
+        for chunk in range(max(args.rounds // 10, 1)):
+            state, hist = fedsgm.drive(state, fleet, loss_pair, fed, T=10)
+            done = start_round + 10 * (chunk + 1)
+            print(f"round {done:4d}: f={float(hist.f[-1]):.4f} "
+                  f"g={float(hist.g_hat[-1]):+.4f} "
+                  f"sigma={float(hist.sigma[-1]):.2f} "
+                  f"({(time.time()-t0)/(done-start_round):.2f}s/round)")
+            if args.ckpt_dir:
+                from repro import checkpoint
+                checkpoint.save_round(args.ckpt_dir, done, state,
+                                      metadata={"arch": cfg.name},
+                                      fleet=fleet, cfg=fed)
+        return
+
     def batch_fn(t, k):
         toks, mask = synthetic.client_token_batches(
             k, n, args.batch, args.seq, cfg.vocab, hetero=0.5)
@@ -94,7 +128,6 @@ def main():
                 k, (n, args.batch, M, cfg.d_media or cfg.d_model)) * 0.02
         return lm.LMBatch(tokens=toks, minority_mask=mask, media=media)
 
-    t0 = time.time()
     for chunk in range(max(args.rounds // 10, 1)):
         state, hist = fedsgm.run_rounds(state, batch_fn, loss_pair, fed, T=10)
         done = start_round + 10 * (chunk + 1)

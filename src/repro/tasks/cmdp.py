@@ -162,6 +162,33 @@ def client_budgets(n_clients: int, lo: float = 25.0, hi: float = 35.0):
     return jnp.linspace(lo, hi, n_clients)
 
 
+def make_fleet(key, cfg, pool: int = 64, lo: float = 25.0, hi: float = 35.0):
+    """Client population for the CMDP task (repro.fleet): each client's
+    shard is a pool of rollout PRNG seeds paired with its safety budget
+    d_j, so in-jit provisioning (``fleet.batch_size=1, redraw=True``) hands
+    every round a fresh on-policy rollout key per client -- the host-side
+    ``batch_fn`` key loop folded into the jitted driver.  Use with
+    :func:`fleet_loss_pair`."""
+    from repro.fleet import provision
+    n = cfg.n_clients
+    seeds = jax.random.split(key, n * pool).reshape(n, pool, 2)
+    budgets = jnp.broadcast_to(
+        client_budgets(n, lo, hi)[:, None], (n, pool))
+    return provision.from_stacked((seeds, budgets))
+
+
+def fleet_loss_pair(n_episodes: int = 5, horizon: int = 200, **kw):
+    """loss_pair over fleet-provisioned batches: rows of (rollout seed,
+    budget); the first drawn row drives this round's rollout."""
+    base = make_loss_pair(n_episodes, horizon, **kw)
+
+    def loss_pair(params, batch):
+        seeds, budgets = batch
+        return base(params, (seeds[0], budgets[0]))
+
+    return loss_pair
+
+
 def eval_policy(params, key, n_episodes: int = 10, horizon: int = 200):
     traj = rollout(params, key, n_episodes, horizon)
     return {"reward": float(traj.rewards.sum(-1).mean()),

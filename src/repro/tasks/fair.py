@@ -69,3 +69,16 @@ def make_dataset(key, n_clients: int, alpha: float = 2.0):
         xs.append(np.asarray(x)[idx]); ys.append(np.asarray(y)[idx]); as_.append(np.asarray(a)[idx])
     return (jnp.asarray(np.stack(xs)), jnp.asarray(np.stack(ys)),
             jnp.asarray(np.stack(as_))), (x, y, a)
+
+
+def make_fleet(key, cfg):
+    """Client population per ``cfg.fleet`` (repro.fleet), skewed over the
+    *protected attribute*: the Dirichlet partitioner's ``labels`` are the
+    group memberships a, so low alpha concentrates protected-group members
+    on few clients -- the regime where per-client DP surrogates and the
+    global statistic diverge.  Returns ``(fleet, (x, y, a))``."""
+    from repro.fleet import provision
+    kd, kp = jax.random.split(key)
+    x, y, a = synthetic.adult_like(kd)
+    fleet = provision.build_fleet(kp, (x, y, a), cfg, labels=a)
+    return fleet, (x, y, a)

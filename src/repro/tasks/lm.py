@@ -22,6 +22,21 @@ class LMBatch(NamedTuple):
     media: object = None         # [B, M, d_media] stub embeddings (vlm/audio)
 
 
+def make_fleet(key, fed_cfg, pool: int, seq_len: int, vocab: int,
+               hetero: float = 0.5):
+    """Client population for LM training (repro.fleet): each client holds a
+    pool of ``pool`` token sequences from its own Zipf-shifted stream
+    (quantity ``hetero`` spreads the zipf exponent across clients), and the
+    fleet's in-jit provisioning draws ``fed_cfg.fleet.batch_size`` fresh
+    sequences per round -- replacing the host-side per-round regeneration
+    so the whole multi-round driver (engine.rounds.drive) stays jitted."""
+    from repro.data import synthetic
+    from repro.fleet import provision
+    toks, mask = synthetic.client_token_batches(
+        key, fed_cfg.n_clients, pool, seq_len, vocab, hetero=hetero)
+    return provision.from_stacked(LMBatch(tokens=toks, minority_mask=mask))
+
+
 def make_loss_pair(model_forward, cfg: ModelConfig, budget: float = 0.0,
                    aux_constraint: bool = False, mtp_weight: float = 0.3):
     """Return loss_pair(params, batch) -> (f, g) for fedsgm.round_step.

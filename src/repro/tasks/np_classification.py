@@ -53,3 +53,18 @@ def make_dataset(key, n_clients: int, hetero: bool = False):
     else:
         xs, ys = synthetic.partition_iid(kp, xt, yt, n_clients)
     return (xs, ys), (x[n_train:], y[n_train:])
+
+
+def make_fleet(key, cfg, test_frac: float = 0.2):
+    """Client population per ``cfg.fleet`` (repro.fleet): partition the
+    breast-cancer-like train split by the configured law (IID / Dirichlet
+    label-skew / Zipf quantity-skew / feature shift) into a device-resident
+    Fleet whose minibatches stream inside the jitted round.  Returns
+    ``(fleet, (x_test, y_test))``."""
+    from repro.fleet import provision
+    kd, kp = jax.random.split(key)
+    x, y = synthetic.breast_cancer_like(kd)
+    n_train = int((1.0 - test_frac) * x.shape[0])
+    xt, yt = x[:n_train], y[:n_train]
+    fleet = provision.build_fleet(kp, (xt, yt), cfg, labels=yt)
+    return fleet, (x[n_train:], y[n_train:])

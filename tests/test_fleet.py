@@ -1,0 +1,487 @@
+"""Fleet-subsystem tests (ISSUE 3): partitioners are true partitions,
+sampler inclusion frequencies match their probabilities (and the weighted
+estimator is unbiased), in-jit provisioning is valid-row-only and bit-equal
+across participation modes, fleet defaults reproduce the pre-fleet
+trajectories bit-for-bit for every strategy x compressor x backend, and the
+extended checkpoint round-trips a mid-run state + fleet exactly."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint
+from repro.configs.base import (CompressorConfig, FedConfig, FleetConfig,
+                                SwitchConfig)
+from repro.data import synthetic
+from repro.engine import participation, rounds
+from repro.fleet import partitions, provision, samplers
+from repro.tasks import np_classification as npc
+
+EPS = 0.35
+N = 10
+
+KINDS = {
+    "none": CompressorConfig(kind="none"),
+    "topk": CompressorConfig(kind="topk", ratio=0.25, block=8),
+    "randk": CompressorConfig(kind="randk", ratio=0.25, block=8),
+    "quant": CompressorConfig(kind="quant", bits=8, block=8),
+    "natural": CompressorConfig(kind="natural"),
+}
+STRATS = ("fedsgm", "fedsgm-soft", "penalty-fedavg")
+
+
+def _cfg(**kw):
+    base = dict(n_clients=N, m=5, local_steps=2, lr=0.1,
+                switch=SwitchConfig(mode="hard", eps=EPS),
+                uplink=CompressorConfig(kind="none"),
+                downlink=CompressorConfig(kind="none"))
+    base.update(kw)
+    return FedConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def np_data():
+    key = jax.random.PRNGKey(0)
+    (xs, ys), _ = npc.make_dataset(key, n_clients=N)
+    return xs, ys
+
+
+@pytest.fixture(scope="module")
+def params(np_data):
+    xs, _ = np_data
+    return npc.init_params(jax.random.PRNGKey(1), xs.shape[-1])
+
+
+@pytest.fixture(scope="module")
+def labelled():
+    key = jax.random.PRNGKey(7)
+    x = jax.random.normal(key, (201, 6))
+    y = (jax.random.uniform(jax.random.fold_in(key, 1), (201,)) < 0.4
+         ).astype(jnp.float32)
+    return x, y
+
+
+def _traj(cfg, params, batches, T=3):
+    state = rounds.init_state(params, cfg)
+    step = jax.jit(lambda s, b: rounds.round_step(s, b, npc.loss_pair, cfg))
+    mets = []
+    for _ in range(T):
+        state, m = step(state, batches)
+        mets.append(m)
+    return state, mets
+
+
+def _assert_trees_equal(a, b):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def _valid_indices(cp):
+    return [np.asarray(cp.idx[j, :int(cp.count[j])])
+            for j in range(cp.count.shape[0])]
+
+
+# ---------------------------------------------------------------------------
+# Partitioners
+# ---------------------------------------------------------------------------
+
+class TestPartitioners:
+    J = 8
+
+    def _partition(self, name, labelled, **fl_kw):
+        x, y = labelled
+        fl = FleetConfig(partitioner=name, **fl_kw)
+        part = partitions.get_partitioner(name)
+        return part.partition(jax.random.PRNGKey(3), x.shape[0], self.J,
+                              fl, labels=y)
+
+    @pytest.mark.parametrize("name,kw", [
+        ("iid", {}),
+        ("dirichlet", dict(alpha=0.5, cap_factor=8.0)),
+        ("dirichlet", dict(alpha=0.5, balance=True)),
+        ("zipf", dict(zipf_a=1.5, cap_factor=8.0)),
+        ("shift", dict(shift=1.0)),
+    ])
+    def test_no_duplicate_assignment(self, labelled, name, kw):
+        cp = self._partition(name, labelled, **kw)
+        allv = np.concatenate(_valid_indices(cp))
+        assert len(allv) == len(set(allv.tolist())), \
+            f"{name}: duplicated sample indices across shards"
+        assert allv.min() >= 0 and allv.max() < labelled[0].shape[0]
+
+    @pytest.mark.parametrize("name,kw", [
+        ("dirichlet", dict(alpha=0.5, cap_factor=8.0)),
+        ("zipf", dict(zipf_a=1.5, cap_factor=8.0)),
+    ])
+    def test_exact_partition_under_ample_cap(self, labelled, name, kw):
+        """With cap >= the largest shard, the ragged partitioners cover the
+        dataset exactly: counts sum to n and the union is all of it."""
+        n = labelled[0].shape[0]
+        cp = self._partition(name, labelled, **kw)
+        assert int(cp.count.sum()) == n
+        allv = np.concatenate(_valid_indices(cp))
+        assert set(allv.tolist()) == set(range(n))
+
+    def test_iid_matches_seed_partition(self, labelled):
+        """build_fleet IID shards are value-identical to the seed
+        partition_iid given the same (split) key."""
+        x, y = labelled
+        key = jax.random.PRNGKey(11)
+        cfg = _cfg(n_clients=self.J, fleet=FleetConfig())
+        fleet = provision.build_fleet(key, (x, y), cfg, labels=y)
+        kp, _ = jax.random.split(key)
+        xs, ys = synthetic.partition_iid(kp, x, y, self.J)
+        np.testing.assert_array_equal(np.asarray(fleet.data[0]),
+                                      np.asarray(xs.reshape(fleet.data[0].shape)))
+        np.testing.assert_array_equal(np.asarray(fleet.data[1]), np.asarray(ys))
+        assert int(fleet.count[0]) == x.shape[0] // self.J
+
+    def test_dirichlet_extreme_alpha_no_empty_shards(self, labelled):
+        """Quota-less clients are rescued with a row from the largest
+        shard: pads stay client-local, no client trains on foreign data."""
+        for seed in range(4):
+            x, y = labelled
+            fl = FleetConfig(partitioner="dirichlet", alpha=0.05,
+                             cap_factor=8.0)
+            cp = partitions.get_partitioner("dirichlet").partition(
+                jax.random.PRNGKey(seed), x.shape[0], 20, fl, labels=y)
+            counts = np.asarray(cp.count)
+            assert counts.min() >= 1, counts
+            assert counts.sum() == x.shape[0]
+            allv = np.concatenate([np.asarray(cp.idx[j, :c])
+                                   for j, c in enumerate(counts)])
+            assert len(allv) == len(set(allv.tolist()))
+
+    def test_dirichlet_low_alpha_skews_labels(self, labelled):
+        x, y = labelled
+        cp = self._partition("dirichlet", labelled, alpha=0.1, balance=True)
+        fracs = np.asarray([np.asarray(y)[v].mean()
+                            for v in _valid_indices(cp)])
+        assert fracs.std() > 0.05, "alpha=0.1 must produce label skew"
+
+    def test_zipf_quantity_skew(self, labelled):
+        cp = self._partition("zipf", labelled, zipf_a=1.5, cap_factor=8.0)
+        counts = np.asarray(cp.count)
+        assert (np.diff(counts) <= 0).all(), "client 0 holds the most"
+        assert counts.min() >= 1
+        assert counts.max() / counts.min() > 4
+
+    def test_feature_shift_moves_client_means(self, labelled):
+        x, y = labelled
+        key = jax.random.PRNGKey(5)
+        mk = lambda s: provision.build_fleet(
+            key, (x, y), _cfg(n_clients=self.J, fleet=FleetConfig(
+                partitioner="shift", shift=s)), labels=y)
+        plain, shifted = mk(0.0), mk(2.0)
+        spread = lambda f: float(np.asarray(
+            f.data[0].mean(axis=(1, 2))).std())
+        assert spread(shifted) > 5 * spread(plain)
+        # labels (ndim-2 float leaves) are untouched
+        np.testing.assert_array_equal(np.asarray(plain.data[1]),
+                                      np.asarray(shifted.data[1]))
+
+    def test_ragged_requires_batched_provisioning(self, labelled):
+        x, y = labelled
+        cfg = _cfg(fleet=FleetConfig(partitioner="dirichlet"))
+        with pytest.raises(ValueError, match="ragged"):
+            provision.build_fleet(jax.random.PRNGKey(0), (x, y), cfg,
+                                  labels=y)
+
+    def test_registry(self):
+        assert {"iid", "dirichlet", "zipf", "shift"} <= set(
+            partitions.partitioner_names())
+        with pytest.raises(ValueError, match="unknown partitioner"):
+            partitions.get_partitioner("sorted")
+
+    def test_partition_dirichlet_shim_is_exact(self, labelled):
+        """Satellite: the deprecation shim no longer duplicates rows."""
+        x, y = labelled
+        xs, ys = synthetic.partition_dirichlet(
+            jax.random.PRNGKey(2), x, y, 5, alpha=0.3)
+        per = x.shape[0] // 5
+        assert xs.shape == (5, per, x.shape[-1])
+        flat = np.asarray(xs).reshape(-1, x.shape[-1])
+        uniq = np.unique(flat, axis=0)
+        assert uniq.shape[0] == flat.shape[0], "shim duplicated rows"
+
+    def test_partition_dirichlet_shim_traceable(self, labelled):
+        """The seed implementation device_get the key (broke under jit)."""
+        x, y = labelled
+        f = jax.jit(lambda k: synthetic.partition_dirichlet(
+            k, x, y, 5, alpha=0.5))
+        xs, ys = f(jax.random.PRNGKey(2))
+        assert xs.shape[0] == 5
+
+
+# ---------------------------------------------------------------------------
+# Samplers
+# ---------------------------------------------------------------------------
+
+class TestSamplers:
+    def test_registry(self):
+        assert {"uniform", "weighted", "markov"} <= set(
+            samplers.sampler_names())
+        with pytest.raises(ValueError, match="unknown client sampler"):
+            samplers.get_sampler("greedy")
+
+    def test_uniform_is_seed_law(self):
+        key, cfg = jax.random.PRNGKey(0), _cfg()
+        mask, w, _ = samplers.get_sampler("uniform").sample(key, cfg)
+        np.testing.assert_array_equal(
+            np.asarray(mask),
+            np.asarray(participation.participation_mask(key, N, cfg.m)))
+        assert w is mask        # the parity contract: same array, same ops
+
+    @pytest.mark.parametrize("name", ("uniform", "weighted", "markov"))
+    def test_exactly_m_distinct(self, name):
+        cfg = _cfg()
+        s = samplers.get_sampler(name)
+        st = s.init(cfg, jax.random.PRNGKey(1))
+        for i in range(8):
+            mask, w, st = s.sample(jax.random.PRNGKey(i), cfg, state=st)
+            assert float(mask.sum()) == cfg.m
+            assert ((np.asarray(mask) == 0) | (np.asarray(mask) == 1)).all()
+            idx = participation.mask_indices(mask, cfg.m)
+            assert len(set(np.asarray(idx).tolist())) == cfg.m
+
+    def test_weighted_inclusion_frequencies(self):
+        """Property (satellite): empirical inclusion frequency of every
+        client matches the sampler's stated inclusion probability."""
+        cfg = _cfg()
+        fleet = provision.from_stacked(
+            (jnp.zeros((N, 16, 3)),),
+            count=jnp.arange(1, N + 1, dtype=jnp.int32))
+        s = samplers.get_sampler("weighted")
+        pi = np.asarray(s.inclusion_probs(cfg, fleet))
+        masks = jax.vmap(lambda k: s.sample(k, cfg, fleet=fleet)[0])(
+            jax.random.split(jax.random.PRNGKey(0), 4000))
+        emp = np.asarray(masks.mean(0))
+        np.testing.assert_allclose(emp, pi, atol=0.03)
+        assert pi.sum() == pytest.approx(cfg.m, abs=1e-4)
+
+    def test_weighted_aggregation_unbiased(self):
+        """Horvitz-Thompson reweighting: E[sum_j w_j x_j / m] equals the
+        data-weighted population mean sum_j q_j x_j."""
+        cfg = _cfg()
+        count = jnp.arange(1, N + 1, dtype=jnp.int32)
+        fleet = provision.from_stacked((jnp.zeros((N, 16, 3)),), count=count)
+        s = samplers.get_sampler("weighted")
+        xs = jnp.linspace(-2.0, 3.0, N)
+
+        def agg(k):
+            mask, w, _ = s.sample(k, cfg, fleet=fleet)
+            return jnp.sum(w * xs) / cfg.m
+
+        est = float(jax.vmap(agg)(
+            jax.random.split(jax.random.PRNGKey(0), 4000)).mean())
+        q = np.asarray(count, np.float64) / float(count.sum())
+        target = float((q * np.asarray(xs)).sum())
+        assert est == pytest.approx(target, abs=0.05)
+
+    def test_markov_availability_is_sticky(self):
+        """A frozen chain (stay=1, return=0) keeps the same participant
+        pool every round; a mixing chain does not."""
+        cfg = _cfg(fleet=FleetConfig(sampler="markov", avail_stay=1.0,
+                                     avail_return=0.0))
+        s = samplers.get_sampler("markov")
+        st = jnp.asarray([1, 1, 1, 1, 1, 0, 0, 0, 0, 0], jnp.float32)
+        pools = []
+        for i in range(6):
+            mask, _, st = s.sample(jax.random.PRNGKey(i), cfg, state=st)
+            pools.append(frozenset(np.flatnonzero(np.asarray(mask)).tolist()))
+        assert all(p == pools[0] for p in pools), \
+            "frozen availability must pin the participant set"
+        assert pools[0] == {0, 1, 2, 3, 4}
+
+    def test_markov_state_threads_through_rounds(self, np_data, params):
+        cfg = _cfg(fleet=FleetConfig(sampler="markov"))
+        state = rounds.init_state(params, cfg)
+        assert state.sampler is not None and state.sampler.shape == (N,)
+        state2, _ = _traj(cfg, params, np_data, T=2)
+        assert state2.sampler.shape == (N,)
+
+
+# ---------------------------------------------------------------------------
+# Provisioning
+# ---------------------------------------------------------------------------
+
+class TestProvisioning:
+    def _fleet(self, poison=False):
+        # ragged counts; padded rows poisoned to catch invalid draws
+        data = jnp.tile(jnp.arange(8.0)[:, None, None], (1, 6, 3))
+        count = jnp.asarray([6, 4, 2, 1, 6, 3, 5, 2], jnp.int32)
+        if poison:
+            k = jnp.arange(6)[None, :, None]
+            data = jnp.where(k >= count[:, None, None], jnp.nan, data)
+        return provision.from_stacked((data,), count=count)
+
+    def test_shapes_and_client_identity(self):
+        fleet = self._fleet()
+        cfg = _cfg(n_clients=8, fleet=FleetConfig(batch_size=4))
+        (b,) = provision.minibatch(fleet, jax.random.PRNGKey(0), cfg)
+        assert b.shape == (8, 4, 3)
+        # every drawn row belongs to its own client (data row j == j)
+        np.testing.assert_array_equal(
+            np.asarray(b[:, :, 0]),
+            np.tile(np.arange(8.0)[:, None], (1, 4)))
+
+    def test_draws_only_valid_rows(self):
+        (b,) = provision.minibatch(
+            self._fleet(poison=True), jax.random.PRNGKey(3),
+            _cfg(n_clients=8, fleet=FleetConfig(batch_size=32)))
+        assert np.isfinite(np.asarray(b)).all(), \
+            "provisioning drew a padded (>= count) row"
+
+    def test_gather_provisioning_matches_mask(self):
+        """Per-client streams key on client id: provisioning only the m
+        gathered clients draws exactly the dense path's rows for them."""
+        fleet = self._fleet()
+        cfg = _cfg(n_clients=8, fleet=FleetConfig(batch_size=5))
+        key = jax.random.PRNGKey(9)
+        idx = jnp.asarray([1, 3, 6], jnp.int32)
+        (full,) = provision.minibatch(fleet, key, cfg)
+        (part,) = provision.minibatch(fleet, key, cfg, idx=idx)
+        np.testing.assert_array_equal(np.asarray(full)[np.asarray(idx)],
+                                      np.asarray(part))
+
+    def test_batch_size_zero_returns_shards(self):
+        fleet = self._fleet()
+        cfg = _cfg(n_clients=8, fleet=FleetConfig(batch_size=0))
+        (b,) = provision.minibatch(fleet, jax.random.PRNGKey(0), cfg)
+        assert b is fleet.data[0]
+
+    def test_redraw_vs_pinned_round_keys(self):
+        cfg_re = _cfg(fleet=FleetConfig(batch_size=4, redraw=True))
+        cfg_pin = cfg_re.replace(fleet=FleetConfig(batch_size=4))
+        k1, k2 = jax.random.PRNGKey(1), jax.random.PRNGKey(2)
+        assert not np.array_equal(
+            np.asarray(provision.round_key(k1, cfg_re)),
+            np.asarray(provision.round_key(k2, cfg_re)))
+        np.testing.assert_array_equal(
+            np.asarray(provision.round_key(k1, cfg_pin)),
+            np.asarray(provision.round_key(k2, cfg_pin)))
+
+
+# ---------------------------------------------------------------------------
+# Engine parity (acceptance criterion)
+# ---------------------------------------------------------------------------
+
+class TestFleetParity:
+    """FleetConfig defaults (IID + uniform + full-shard + no redraw)
+    reproduce the pre-fleet trajectories bit-for-bit."""
+
+    @pytest.mark.parametrize("strategy", STRATS)
+    @pytest.mark.parametrize("kind", sorted(KINDS))
+    def test_bit_for_bit_vs_raw_batches(self, np_data, params, strategy,
+                                        kind):
+        comp = KINDS[kind]
+        cfg = _cfg(strategy=strategy, uplink=comp, downlink=comp)
+        s_raw, m_raw = _traj(cfg, params, np_data)
+        s_fl, m_fl = _traj(cfg, params, provision.from_stacked(np_data))
+        _assert_trees_equal(s_raw, s_fl)
+        _assert_trees_equal(m_raw, m_fl)
+
+    @pytest.mark.parametrize("comm", ("packed", "pallas"))
+    @pytest.mark.parametrize("mode", ("mask", "gather"))
+    def test_bit_for_bit_wire_backends(self, np_data, params, comm, mode):
+        cfg = _cfg(comm=comm, participation=mode,
+                   uplink=CompressorConfig(kind="topk", ratio=0.25, block=8),
+                   downlink=CompressorConfig(kind="quant", bits=8, block=8))
+        s_raw, m_raw = _traj(cfg, params, np_data)
+        s_fl, m_fl = _traj(cfg, params, provision.from_stacked(np_data))
+        _assert_trees_equal(s_raw, s_fl)
+        _assert_trees_equal(m_raw, m_fl)
+
+    def test_provisioned_gather_matches_mask(self, np_data, params):
+        """Fresh in-jit minibatch provisioning keeps the engine's gather ==
+        mask bit-parity (per-client streams key on client id)."""
+        fl = FleetConfig(batch_size=8, redraw=True)
+        fleet = provision.from_stacked(np_data)
+        cfg = _cfg(fleet=fl, uplink=KINDS["topk"], downlink=KINDS["topk"])
+        s_mask, m_mask = _traj(cfg, params, fleet)
+        s_gath, m_gath = _traj(cfg.replace(participation="gather"),
+                               params, fleet)
+        _assert_trees_equal(s_mask, s_gath)
+        _assert_trees_equal(m_mask, m_gath)
+
+    def test_weighted_full_participation_reweights(self, np_data, params):
+        """m = n with ragged counts: every client participates and the
+        weighted aggregate is the data-weighted mean (weights != mask)."""
+        count = jnp.arange(1, N + 1, dtype=jnp.int32)
+        fleet = provision.from_stacked(np_data, count=count)
+        cfg = _cfg(m=N, fleet=FleetConfig(sampler="weighted", batch_size=4,
+                                          redraw=True))
+        state, mets = _traj(cfg, params, fleet, T=2)
+        assert np.isfinite(float(mets[-1].f))
+        samp = samplers.get_sampler("weighted")
+        _, w, _ = samp.sample(jax.random.PRNGKey(0), cfg, fleet=fleet)
+        assert float(w.max()) > 1.0 > float(w.min())
+        assert float(w.sum()) == pytest.approx(N, rel=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint round-trip (satellite)
+# ---------------------------------------------------------------------------
+
+class TestCheckpoint:
+    def _cfg(self):
+        # exercise every optional FedState member: uplink EF residuals,
+        # downlink server center, wbar accumulator, markov sampler state
+        return _cfg(uplink=KINDS["topk"], downlink=KINDS["quant"],
+                    fleet=FleetConfig(sampler="markov", batch_size=8,
+                                      redraw=True))
+
+    def test_save_restore_continue_equals_straight_run(self, np_data,
+                                                       params, tmp_path):
+        cfg = self._cfg()
+        fleet = provision.from_stacked(np_data)
+        step = jax.jit(lambda s, b: rounds.round_step(s, b, npc.loss_pair,
+                                                      cfg))
+        straight = rounds.init_state(params, cfg)
+        for _ in range(6):
+            straight, _ = step(straight, fleet)
+
+        state = rounds.init_state(params, cfg)
+        for _ in range(3):
+            state, _ = step(state, fleet)
+        checkpoint.save_round(str(tmp_path), 3, state, fleet=fleet, cfg=cfg)
+
+        like = rounds.init_state(params, cfg)
+        (restored, fleet_r), t = checkpoint.restore_round(
+            str(tmp_path), like, like_fleet=fleet)
+        assert t == 3
+        _assert_trees_equal(state, restored)
+        _assert_trees_equal(fleet, fleet_r)
+        assert int(restored.t) == 3
+        for _ in range(3):
+            restored, _ = step(restored, fleet_r)
+        _assert_trees_equal(straight, restored)
+
+    def test_fleet_metadata_in_sidecar(self, np_data, params, tmp_path):
+        import json
+        cfg = self._cfg()
+        fleet = provision.from_stacked(np_data)
+        state = rounds.init_state(params, cfg)
+        checkpoint.save_round(str(tmp_path), 1, state, fleet=fleet, cfg=cfg)
+        meta = json.load(open(tmp_path / "round_1.json"))["metadata"]
+        assert meta["fleet"]["sampler"] == "markov"
+        assert meta["fleet"]["count"] == [np_data[0].shape[1]] * N
+
+    def test_gc_keeps_fleet_sidecars_paired(self, np_data, params,
+                                            tmp_path):
+        import os
+        cfg = self._cfg()
+        fleet = provision.from_stacked(np_data)
+        state = rounds.init_state(params, cfg)
+        for t in (1, 2, 3, 4, 5):
+            checkpoint.save_round(str(tmp_path), t, state, keep=2,
+                                  fleet=fleet, cfg=cfg)
+        names = sorted(os.listdir(tmp_path))
+        assert "round_4.npz" in names and "round_5_fleet.npz" in names
+        assert not any(n.startswith(("round_1", "round_2", "round_3"))
+                       for n in names)
+        assert checkpoint.latest_round(str(tmp_path)) == 5
