@@ -1,0 +1,238 @@
+"""Async-round benchmark: round time vs straggler fraction (ISSUE 4,
+DESIGN.md §Async).
+
+The synchronous round is an implicit barrier: its wall-clock is gated by
+the *slowest* sampled client, so one straggler at slowdown kappa stretches
+the whole round by ~kappa.  The async round closes at the fast clients'
+pace -- stragglers depart, park their compressed uplink in the staleness
+buffer, and merge later -- paying only the engine-side buffer overhead.
+
+Two record families, written to BENCH_async.json:
+
+* ``straggler``: for participation (mask / gather) x backend (dense /
+  pallas) x straggler fraction in {0, 0.25, 0.5}: the *measured* us/round
+  of the jitted sync vs async engine step (the buffer's device-side
+  overhead), and the *modeled* round time under the standard
+  straggler model -- per-client compute tau (proxied by the measured
+  barrier-free round), stragglers kappa=4x slower, sync barrier
+  E[t] = tau * (kappa - (kappa-1) * (1-fs)^m) (the round is slow unless
+  *no* sampled client straggles), async t = tau * (1 + overhead).  The
+  headline ``throughput_gain`` is their ratio.
+* ``staleness_laws``: NP-task convergence at 40% departures for the
+  constant / poly / constraint laws vs the synchronous reference --
+  buffered merging keeps converging where dropped-update FedAvg loses the
+  stragglers' mass.
+
+``--smoke`` is the CI regression guard (job ``async-smoke``): bit-parity
+of the disabled buffer vs the synchronous drive (mask AND gather), the
+constant-law mass-conservation identity on a live buffered run, and the
+modeled throughput gain > 1 at 25% stragglers.
+
+    PYTHONPATH=src python -m benchmarks.async_bench [--smoke] [--out F.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timed
+from benchmarks.engine_bench import D, _init_params, _loss_pair
+from repro.configs.base import (AsyncConfig, CompressorConfig, FedConfig,
+                                FleetConfig, SwitchConfig)
+from repro.engine import async_rounds, rounds
+
+N, M, E, PER = 64, 16, 8, 32
+KAPPA = 4.0          # straggler slowdown in the round-time model
+
+
+def _batches(key, n):
+    kx, ky = jax.random.split(key)
+    x = jax.random.normal(kx, (n, PER, D))
+    y = (jax.random.uniform(ky, (n, PER)) < 0.3).astype(jnp.float32)
+    return x, y
+
+
+def _cfg(mode="mask", comm="dense", depart=0.25, enabled=True,
+         max_staleness=4, staleness="constant", n=N, m=M):
+    return FedConfig(
+        n_clients=n, m=m, local_steps=E, lr=0.05,
+        switch=SwitchConfig(mode="soft", eps=0.35, beta=6.0),
+        uplink=CompressorConfig(kind="topk", ratio=0.25, block=32),
+        downlink=CompressorConfig(kind="quant", bits=8, block=32),
+        comm=comm, participation=mode, full_eval=(mode == "mask"),
+        track_wbar=False,
+        async_=AsyncConfig(enabled=enabled, depart=depart,
+                           max_staleness=max_staleness,
+                           staleness=staleness))
+
+
+def _time_sync(cfg, params, batches, iters=3):
+    state = rounds.init_state(params, cfg)
+    step = jax.jit(lambda s, b: rounds.round_step(s, b, _loss_pair, cfg))
+    us, _ = timed(step, state, batches, warmup=2, iters=iters)
+    return us
+
+
+def _time_async(cfg, params, batches, iters=3):
+    state = rounds.init_state(params, cfg)
+    buf = async_rounds.init_buffer(state.w, cfg)
+    step = jax.jit(lambda s, bf, b: async_rounds.async_round_step(
+        s, bf, b, _loss_pair, cfg))
+    us, _ = timed(step, state, buf, batches, warmup=2, iters=iters)
+    return us
+
+
+def modeled_round_times(us_sync, us_async, fs, m, kappa=KAPPA):
+    """The straggler model (module docstring): returns
+    ``(t_sync, t_async)`` in units of the barrier-free round time tau."""
+    t_sync = kappa - (kappa - 1.0) * (1.0 - fs) ** m
+    overhead = max(us_async / us_sync - 1.0, 0.0)
+    t_async = 1.0 + overhead
+    return t_sync, t_async
+
+
+def straggler_records(iters=3):
+    key = jax.random.PRNGKey(0)
+    params = _init_params(key)
+    batches = _batches(jax.random.fold_in(key, 1), N)
+    records = []
+    for comm in ("dense", "pallas"):
+        for mode in ("mask", "gather"):
+            us_sync = _time_sync(_cfg(mode, comm, enabled=False),
+                                 params, batches, iters)
+            for fs in (0.0, 0.25, 0.5):
+                us_async = _time_async(_cfg(mode, comm, depart=fs),
+                                       params, batches, iters)
+                t_sync, t_async = modeled_round_times(us_sync, us_async,
+                                                      fs, M)
+                rec = {"bench": "straggler", "comm": comm,
+                       "participation": mode, "straggler_frac": fs,
+                       "kappa": KAPPA, "n": N, "m": M,
+                       "us_sync_step": round(us_sync, 1),
+                       "us_async_step": round(us_async, 1),
+                       "engine_overhead": round(us_async / us_sync - 1.0, 3),
+                       "modeled_round_sync": round(t_sync, 3),
+                       "modeled_round_async": round(t_async, 3),
+                       "throughput_gain": round(t_sync / t_async, 2)}
+                records.append(rec)
+                emit(f"async_{comm}_{mode}_fs{fs}", us_async,
+                     f"sync={us_sync:.0f}us;gain={rec['throughput_gain']}")
+    return records
+
+
+def staleness_records(T=40):
+    key = jax.random.PRNGKey(0)
+    params = _init_params(key)
+    batches = _batches(jax.random.fold_in(key, 1), N)
+    records = []
+    state0 = rounds.init_state(params, _cfg(enabled=False))
+    us, (s_sync, h_sync) = timed(
+        lambda: rounds.drive(state0, batches, _loss_pair,
+                             _cfg(enabled=False), T=T), warmup=0, iters=1)
+    records.append({"bench": "staleness_laws", "law": "sync-barrier",
+                    "T": T, "f_final": round(float(h_sync.f[-1]), 4),
+                    "us_per_round": round(us / T, 1)})
+    for law in ("constant", "poly", "constraint"):
+        cfg = _cfg(depart=0.4, staleness=law)
+        state = rounds.init_state(params, cfg)
+        us, (s, b, h) = timed(
+            lambda cfg=cfg, state=state: async_rounds.async_drive(
+                state, batches, _loss_pair, cfg, T=T), warmup=0, iters=1)
+        rec = {"bench": "staleness_laws", "law": law, "T": T,
+               "depart": 0.4,
+               "f_final": round(float(h.round.f[-1]), 4),
+               "merged": int(h.merged.sum()),
+               "dropped": int(h.dropped.sum()),
+               "us_per_round": round(us / T, 1)}
+        records.append(rec)
+        emit(f"async_law_{law}", us / T,
+             f"f={rec['f_final']};merged={rec['merged']}")
+    return records
+
+
+def async_table(out: str = "BENCH_async.json"):
+    records = straggler_records() + staleness_records()
+    with open(out, "w") as f:
+        json.dump({"bench": "async", "records": records}, f, indent=1)
+    return records
+
+
+def smoke() -> int:
+    """CI guard (fast): disabled-buffer bit-parity, constant-law mass
+    conservation, and modeled async throughput > sync at 25% stragglers."""
+    key = jax.random.PRNGKey(0)
+    params = _init_params(key)
+    batches = _batches(jax.random.fold_in(key, 1), N)
+
+    # (a) parity: async_drive with the buffer disabled == synchronous drive
+    for mode in ("mask", "gather"):
+        cfg = _cfg(mode, enabled=False)
+        state = rounds.init_state(params, cfg)
+        s1, h1 = rounds.drive(state, batches, _loss_pair, cfg, T=3)
+        s2, buf, h2 = async_rounds.async_drive(state, batches, _loss_pair,
+                                               cfg, T=3)
+        assert buf is None
+        for a, b in zip(jax.tree_util.tree_leaves((s1, h1)),
+                        jax.tree_util.tree_leaves((s2, h2.round))):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        print(f"smoke: async_drive(disabled) == drive [{mode}] "
+              "(bit-for-bit) .. ok")
+
+    # (b) constant-law conservation on a live buffered run
+    cfg = _cfg(depart=0.5, max_staleness=100)
+    state = rounds.init_state(params, cfg)
+    _, buf, h = async_rounds.async_drive(state, batches, _loss_pair, cfg,
+                                         T=8)
+    lost = abs(float(h.departed_weight.sum())
+               - float(h.stale_weight.sum())
+               - float(h.dropped_weight.sum())
+               - float(jnp.sum(buf.weight * buf.occupied)))
+    print(f"smoke: constant-law HT-mass conservation residual={lost:.2e} "
+          f"(departed={int(h.departed.sum())}, merged={int(h.merged.sum())},"
+          f" dropped={int(h.dropped.sum())})")
+    if lost > 1e-4 or float(h.departed.sum()) == 0:
+        print("smoke: FAIL -- buffered delivery lost or duplicated mass")
+        return 1
+
+    # (c) the straggler model: async beats the barrier at fs=0.25
+    us_sync = min(_time_sync(_cfg(enabled=False), params, batches)
+                  for _ in range(2))
+    us_async = min(_time_async(_cfg(depart=0.25), params, batches)
+                   for _ in range(2))
+    t_sync, t_async = modeled_round_times(us_sync, us_async, 0.25, M)
+    gain = t_sync / t_async
+    print(f"smoke: fs=0.25 sync_step={us_sync:.0f}us "
+          f"async_step={us_async:.0f}us modeled gain={gain:.2f} "
+          "(must be > 1)")
+    if gain <= 1.0:
+        print("smoke: FAIL -- async round throughput does not beat the "
+              "synchronous barrier at 25% stragglers")
+        return 1
+    print("smoke: ok")
+    return 0
+
+
+ALL = [async_table]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI regression guard (parity + conservation + "
+                         "straggler model)")
+    ap.add_argument("--out", default="BENCH_async.json")
+    args = ap.parse_args()
+    if args.smoke:
+        sys.exit(smoke())
+    print("name,us_per_call,derived")
+    records = async_table(args.out)
+    print(f"wrote {args.out} ({len(records)} records)", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -9,12 +9,12 @@ from repro.comm.payloads import (PackedLeaf, QuantPayload, block_geometry,
                                  choose_block, packed_bytes,
                                  payload_wire_bytes)
 from repro.comm.transports import (BACKENDS, Transport, backend_for,
-                                   get_transport, masked_mean, register,
-                                   scatter_rows, transport_kinds)
+                                   get_transport, mask_where, masked_mean,
+                                   register, scatter_rows, transport_kinds)
 
 __all__ = [
     "BACKENDS", "PackedLeaf", "QuantPayload", "Transport", "backend_for",
-    "block_geometry", "choose_block", "get_transport", "masked_mean",
-    "packed_bytes", "payload_wire_bytes", "register", "scatter_rows",
-    "transport_kinds",
+    "block_geometry", "choose_block", "get_transport", "mask_where",
+    "masked_mean", "packed_bytes", "payload_wire_bytes", "register",
+    "scatter_rows", "transport_kinds",
 ]

@@ -81,14 +81,20 @@ def masked_mean(tree, mask, m):
         tree)
 
 
-def _mask_where(mask, new, old):
-    """Per-client select: participants take ``new``, the rest keep ``old``."""
+def mask_where(mask, new, old):
+    """Per-client row select on stacked [n, ...] pytrees (payload trees
+    included): rows with ``mask > 0`` take ``new``, the rest keep ``old``.
+    Used for EF-residual gating here and buffer-slot writes in
+    engine.async_rounds."""
     n = mask.shape[0]
 
     def one(en, eo):
         m = mask.reshape((n,) + (1,) * (en.ndim - 1))
         return jnp.where(m > 0, en, eo)
     return tree_map(one, new, old)
+
+
+_mask_where = mask_where        # internal alias (pre-async name)
 
 
 def scatter_rows(tree, idx, n: int):
@@ -136,7 +142,21 @@ def transport_kinds() -> tuple:
 # ---------------------------------------------------------------------------
 
 class Transport:
-    """One direction of the compressed wire path (see module docstring)."""
+    """One direction of the compressed wire path (see module docstring).
+
+    Law: a transport owns compressor math, wire representation, exact
+    ``wire_bytes`` and the fused EF14 step for its direction; the engine
+    talks to it only through ``transmit``/``broadcast`` (synchronous
+    barrier) or ``encode``/``reduce`` (async buffered rounds).
+
+    Usage::
+
+        >>> t = get_transport(CompressorConfig(kind="topk", ratio=0.1),
+        ...                   backend="packed")
+        >>> msg = t.compress(delta)            # wire-format payload
+        >>> dense = t.decompress(msg, like=delta)
+        >>> v_bar, e_new = t.transmit(e, deltas, mask, m, like=params)
+    """
 
     kind: str = "?"
     needs_key: bool = False         # stochastic compressor (randk/natural)
@@ -172,6 +192,8 @@ class Transport:
     # -- wire-level primitives (unstacked pytrees) --------------------------
 
     def compress(self, tree, key: Optional[jax.Array] = None):
+        """Wire message for a dense pytree (the operator C of Assumption
+        3); ``key`` feeds stochastic kinds (``needs_key``)."""
         raise NotImplementedError
 
     def decompress(self, message, like):
@@ -208,35 +230,38 @@ class Transport:
 
     # -- round-level call sites ---------------------------------------------
 
-    def transmit(self, e, deltas, mask, m, like, key: Optional[jax.Array] = None):
-        """Per-client EF14 + masked mean over the client axis.
+    def encode(self, e, deltas, mask, like, key: Optional[jax.Array] = None):
+        """Per-client EF14 encode, no aggregation: returns ``(msgs, e_new)``
+        where ``msgs`` is the stacked *wire representation* of every
+        client's message ([n, ...] leading axis on each payload leaf) and
+        non-participants (mask == 0) keep their residual untouched.
 
-        ``e``/``deltas`` carry a leading [n_clients] axis; non-participants
-        (mask == 0) keep their residual untouched.  Returns
-        ``(v_bar, e_new)``."""
+        This is the buffer-facing half of :meth:`transmit`: the async
+        engine parks rows of ``msgs`` in its staleness buffer (compressed
+        bytes, not dense deltas) and aggregates with :meth:`reduce`."""
         from repro.sharding import partition
         msgs, e_stack = self._ef_clients(e, deltas, like, key)
-        e_stack = partition.constrain_leading(e_stack, "client")
-        e_out = _mask_where(mask, e_stack, e)
+        e_out = e
+        if e is not None:
+            e_stack = partition.constrain_leading(e_stack, "client")
+            e_out = _mask_where(mask, e_stack, e)
         if self.wire == "dense":
             msgs = partition.constrain_leading(msgs, "client")
-            v_bar = masked_mean(msgs, mask, m)
-        else:
-            v_bar = self._aggregate_packed(msgs, mask, m, like)
-        return v_bar, e_out
+        return msgs, e_out
 
-    def transmit_gathered(self, e, deltas, idx, mask, m, like,
-                          key: Optional[jax.Array] = None):
-        """Compute-sparse variant of :meth:`transmit` (engine.participation
-        ``gather`` mode): ``deltas`` carries only the m participants'
-        rows ([m, ...], sorted by client index ``idx``); ``e`` keeps the
-        full [n, ...] layout.
+    def encode_gathered(self, e, deltas, idx, mask, like,
+                        key: Optional[jax.Array] = None):
+        """Compute-sparse variant of :meth:`encode` (engine.participation
+        ``gather`` mode): ``deltas`` carries only the m participants' rows
+        ([m, ...], sorted by client index ``idx``); ``e`` keeps the full
+        [n, ...] layout.
 
         The EF14 step runs over m rows (per-client results identical to the
         mask path's, incl. per-client PRNG keys), residuals scatter back in
-        place, and messages scatter into the full layout so the aggregation
-        is the same op as :meth:`transmit` -- trajectories match the mask
-        path bit-for-bit while EF compute and state traffic scale with m."""
+        place, and messages scatter into the full [n, ...] layout so
+        downstream aggregation/buffering is the same op as the mask
+        path's -- trajectories match bit-for-bit while EF compute and state
+        traffic scale with m."""
         from repro.sharding import partition
         n = mask.shape[0]
         e_part = None if e is None else \
@@ -252,10 +277,36 @@ class Transport:
         msgs = scatter_rows(msgs, idx, n)
         if self.wire == "dense":
             msgs = partition.constrain_leading(msgs, "client")
-            v_bar = masked_mean(msgs, mask, m)
-        else:
-            v_bar = self._aggregate_packed(msgs, mask, m, like)
-        return v_bar, e_out
+        return msgs, e_out
+
+    def reduce(self, msgs, weights, m, like):
+        """Weighted aggregation of stacked wire messages:
+        ``sum_j weights_j * decompress(msgs_j) / m``.
+
+        ``weights`` is any [n] array (a 0/1 mask, the sampler's HT weights,
+        or the async engine's staleness-composed weights); zero rows
+        contribute nothing, so garbage payloads in unoccupied buffer slots
+        or unsampled mask rows are harmless."""
+        if self.wire == "dense":
+            return masked_mean(msgs, weights, m)
+        return self._aggregate_packed(msgs, weights, m, like)
+
+    def transmit(self, e, deltas, mask, m, like, key: Optional[jax.Array] = None):
+        """Per-client EF14 + masked mean over the client axis
+        (:meth:`encode` then :meth:`reduce`).
+
+        ``e``/``deltas`` carry a leading [n_clients] axis; non-participants
+        (mask == 0) keep their residual untouched.  Returns
+        ``(v_bar, e_new)``."""
+        msgs, e_out = self.encode(e, deltas, mask, like, key)
+        return self.reduce(msgs, mask, m, like), e_out
+
+    def transmit_gathered(self, e, deltas, idx, mask, m, like,
+                          key: Optional[jax.Array] = None):
+        """Compute-sparse variant of :meth:`transmit`
+        (:meth:`encode_gathered` then :meth:`reduce`)."""
+        msgs, e_out = self.encode_gathered(e, deltas, idx, mask, like, key)
+        return self.reduce(msgs, mask, m, like), e_out
 
     def broadcast(self, w, x_new, key: Optional[jax.Array] = None):
         """Primal-EF21 downlink: w' = w + C(x_new - w)."""
@@ -328,6 +379,12 @@ class IdentityTransport(Transport):
     def _wire_bytes(self, like) -> int:
         return int(sum(l.size * jnp.dtype(l.dtype).itemsize
                        for l in jax.tree_util.tree_leaves(like)))
+
+    def encode(self, e, deltas, mask, like, key=None):
+        return deltas, e
+
+    def encode_gathered(self, e, deltas, idx, mask, like, key=None):
+        return scatter_rows(deltas, idx, mask.shape[0]), e
 
     def transmit(self, e, deltas, mask, m, like, key=None):
         return masked_mean(deltas, mask, m), e

@@ -3,8 +3,10 @@ from __future__ import annotations
 
 import importlib
 
-from repro.configs.base import (INPUT_SHAPES, CompressorConfig, FedConfig,  # noqa: F401
-                                InputShape, ModelConfig, SwitchConfig, reduce_model)
+from repro.configs.base import (INPUT_SHAPES, AsyncConfig,  # noqa: F401
+                                CompressorConfig, FedConfig, FleetConfig,
+                                InputShape, ModelConfig, SwitchConfig,
+                                reduce_model)
 
 ARCHS = [
     "qwen3_4b", "deepseek_v3_671b", "mamba2_130m", "minitron_4b",

@@ -186,6 +186,45 @@ class SwitchConfig:
 
 
 @dataclass(frozen=True)
+class AsyncConfig:
+    """Asynchronous buffered rounds (repro.engine.async_rounds, DESIGN.md
+    §Async).
+
+    Law: a sampled client that departs mid-round parks its *compressed*
+    uplink in a per-client staleness buffer slot; the payload merges into a
+    later server update with weight ``lambda(s) * w_origin`` (s = age in
+    rounds, ``w_origin`` = the sampler's Horvitz-Thompson weight at the
+    round it was computed), or is dropped once ``s >= max_staleness``.
+
+    Usage::
+
+        >>> fed = FedConfig(async_=AsyncConfig(enabled=True, staleness="poly"))
+        >>> state, buf, hist = async_rounds.async_drive(
+        ...     state, batches, loss_pair, fed, T=100)
+
+    ``enabled=False`` (the default) is the bit-parity point: ``async_drive``
+    reproduces the synchronous ``drive`` trajectories exactly.
+    """
+    enabled: bool = False
+    max_staleness: int = 4          # a payload may merge up to this age;
+                                    # undelivered entries expire at it
+    staleness: str = "constant"     # constant | poly | constraint
+                                    # (async_rounds.staleness_law registry)
+    decay: float = 1.0              # poly/constraint exponent:
+                                    # lambda(s) = (1+s)^-decay
+    depart: float = 0.25            # mid-round departure probability for
+                                    # samplers without an availability model
+                                    # (markov uses its own chain instead)
+    rejoin: float = 0.5             # per-round delivery probability for a
+                                    # parked payload under those samplers
+                                    # (geometric away-times, mean 1/rejoin;
+                                    # markov delivers on chain return)
+    boundary_width: float = 0.0     # constraint law: width of the
+                                    # feasibility-boundary window (0 =>
+                                    # max(switch.eps, 1e-3))
+
+
+@dataclass(frozen=True)
 class FleetConfig:
     """The client-population axis (repro.fleet, DESIGN.md §Fleet).
 
@@ -237,6 +276,8 @@ class FedConfig:
     rho: float = 1.0                # penalty-fedavg strength (strategy knob)
     # -- fleet knobs (repro.fleet, DESIGN.md §Fleet) ------------------------
     fleet: FleetConfig = field(default_factory=FleetConfig)
+    # -- async buffered rounds (engine.async_rounds, DESIGN.md §Async) ------
+    async_: AsyncConfig = field(default_factory=AsyncConfig)
 
     def replace(self, **kw) -> "FedConfig":
         return dataclasses.replace(self, **kw)

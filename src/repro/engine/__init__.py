@@ -9,14 +9,23 @@ Owns everything between "here is a FedState" and "here is the next one":
   penalty-fedavg / centralized-sgm), each supplying only the round's math,
 * ``rounds``        -- the strategy-pluggable :func:`round_step`, the
   fully-jitted multi-round :func:`drive`, and the ``run_rounds`` /
-  ``run_rounds_scan`` compatibility shims.
+  ``run_rounds_scan`` compatibility shims,
+* ``async_rounds``  -- asynchronous buffered rounds (DESIGN.md §Async):
+  clients lost mid-round park their compressed uplink in a scan-carried
+  staleness buffer and merge into a later server update under a pluggable
+  staleness-decay law; bit-parity with the synchronous drive when the
+  buffer is disabled.
 
 ``core.fedsgm`` and ``core.baselines.penalty_round`` are thin wrappers over
 this package.
 """
-from repro.engine import participation, strategies
+from repro.engine import async_rounds, participation, strategies
+from repro.engine.async_rounds import (AsyncMetrics, StaleBuffer,
+                                       async_drive, async_round_step,
+                                       get_staleness_law, init_buffer,
+                                       staleness_law, staleness_law_names)
 from repro.engine.participation import (Participation, client_vmap,
-                                        participation_mask)
+                                        compose_weights, participation_mask)
 from repro.engine.rounds import (FedState, RoundMetrics, averaged_iterate,
                                  drive, init_state, round_bytes, round_step,
                                  run_rounds, run_rounds_scan, transports_for)
@@ -24,9 +33,12 @@ from repro.engine.strategies import (Strategy, get_strategy,
                                      register_strategy, strategy_names)
 
 __all__ = [
-    "FedState", "Participation", "RoundMetrics", "Strategy",
-    "averaged_iterate", "client_vmap", "drive", "get_strategy", "init_state",
-    "participation", "participation_mask", "register_strategy",
-    "round_bytes", "round_step", "run_rounds", "run_rounds_scan",
+    "AsyncMetrics", "FedState", "Participation", "RoundMetrics",
+    "StaleBuffer", "Strategy", "async_drive", "async_round_step",
+    "async_rounds", "averaged_iterate", "client_vmap", "compose_weights",
+    "drive", "get_staleness_law", "get_strategy", "init_buffer",
+    "init_state", "participation", "participation_mask",
+    "register_strategy", "round_bytes", "round_step", "run_rounds",
+    "run_rounds_scan", "staleness_law", "staleness_law_names",
     "strategies", "strategy_names", "transports_for",
 ]

@@ -1,0 +1,327 @@
+"""Asynchronous buffered rounds: staleness-weighted aggregation on the
+fleet's availability model (DESIGN.md §Async).
+
+The synchronous engine round (engine.rounds) is an implicit barrier: every
+sampled client's uplink must arrive before the server steps.  This module
+makes round time a *modeled* quantity instead -- the fourth architecture
+leg after comm (what crosses the wire), engine (how a round executes) and
+fleet (who participates and what they hold):
+
+* a sampled client that goes unavailable mid-round (the sampler's
+  :class:`repro.fleet.samplers.Events` law -- for ``markov``, a chain
+  transition *within* the round) still computes its E local steps and
+  compresses its delta, but the payload misses the aggregation barrier and
+  parks in a :class:`StaleBuffer` slot instead,
+* the buffer is a static-shape pytree ring keyed by client id, carried
+  through the round scan (buffer-in-carry): the *wire-format* message
+  (compressed bytes via ``Transport.encode``, never dense deltas), the
+  origin round, the switch-phase weight sigma it was computed under, and
+  the sampler's Horvitz-Thompson weight at origin,
+* a parked payload delivers at the client's first arrival event within
+  ``max_staleness`` rounds, merged into that round's server update with
+  weight ``lambda(s) * w_origin`` where ``lambda`` is a pluggable
+  staleness-decay law (:func:`staleness_law` registry: ``constant`` /
+  ``poly`` / ``constraint``-aware) and s the age in rounds; older entries
+  drop.
+
+Weight composition (the unbiasedness story, DESIGN.md §Async): the fresh
+fraction keeps the sampler's HT weights untouched --
+``participation.compose_weights(part, 1 - depart)`` only zeroes departed
+rows -- so conditioned on the departure pattern the fresh aggregate is the
+same HT estimator over the surviving sub-sample.  Under the ``constant``
+law every departed payload re-enters exactly once with its origin weight
+(or is dropped and counted), so total HT mass is conserved across the run:
+``sum_t fresh_weight_t + stale_weight_t + dropped_weight_t + final buffer
+mass == sum_t sampled mass`` (tested in tests/test_async.py).
+
+``AsyncConfig.enabled=False`` is the bit-parity point: :func:`async_round_step`
+IS ``rounds.round_step`` (same function, the untouched buffer rides the
+carry), so :func:`async_drive` reproduces the synchronous ``drive``
+trajectories bit-for-bit for every strategy x compressor x backend x
+participation mode (tests/test_async.py, ``benchmarks/async_bench.py
+--smoke``).
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import comm
+from repro.configs.base import FedConfig
+from repro.engine import participation, rounds, strategies
+from repro.engine.rounds import FedState, RoundMetrics, transports_for
+from repro.fleet import samplers
+
+tree_map = jax.tree_util.tree_map
+
+
+# ---------------------------------------------------------------------------
+# Staleness-decay laws
+# ---------------------------------------------------------------------------
+
+_LAWS: dict = {}
+
+
+def staleness_law(name: str):
+    """Decorator: register ``fn(s, sigma_origin, g_hat, cfg) -> lambda`` as
+    a staleness-decay law.  ``s`` is the payload age in rounds (>= 1 at any
+    delivery), ``sigma_origin`` the switch weight it was computed under,
+    ``g_hat`` the current constraint estimate.  All laws are elementwise
+    over [n] slots."""
+    def deco(fn):
+        _LAWS[name] = fn
+        return fn
+    return deco
+
+
+def get_staleness_law(name: str) -> Callable:
+    try:
+        return _LAWS[name]
+    except KeyError:
+        raise ValueError(f"unknown staleness law {name!r}; "
+                         f"registered: {sorted(_LAWS)}")
+
+
+def staleness_law_names() -> tuple:
+    return tuple(sorted(_LAWS))
+
+
+@staleness_law("constant")
+def _constant(s, sigma_origin, g_hat, cfg):
+    """lambda(s) = 1: FedBuff without decay -- delayed payloads merge with
+    their full origin weight, so total HT mass is conserved (the
+    unbiasedness reference point)."""
+    return jnp.ones_like(s)
+
+
+@staleness_law("poly")
+def _poly(s, sigma_origin, g_hat, cfg):
+    """lambda(s) = (1+s)^-decay: the FedBuff polynomial law -- older
+    payloads were computed against an older model, so their contribution
+    shrinks polynomially in the age."""
+    return (1.0 + s) ** (-cfg.async_.decay)
+
+
+@staleness_law("constraint")
+def _constraint(s, sigma_origin, g_hat, cfg):
+    """Constraint-aware decay: near the feasibility boundary, a stale
+    *objective*-phase payload (sigma_origin ~ 0) is the dangerous one -- it
+    pushes along f while the constraint is about to bind -- so its
+    effective decay exponent doubles there; a stale *constraint*-phase
+    payload (sigma_origin ~ 1) keeps the plain polynomial law.
+
+        lambda(s) = (1+s)^-(decay * (1 + (1-sigma_origin) * near))
+        near      = exp(-|g_hat - eps| / width)
+
+    ``width`` is ``AsyncConfig.boundary_width`` (0 => max(eps, 1e-3)), so
+    far from the boundary (|g_hat - eps| >> width) the law reduces to
+    ``poly`` for both phases."""
+    eps = cfg.switch.eps
+    width = cfg.async_.boundary_width or max(abs(eps), 1e-3)
+    near = jnp.exp(-jnp.abs(g_hat - eps) / width)
+    exponent = cfg.async_.decay * (1.0 + (1.0 - sigma_origin) * near)
+    return (1.0 + s) ** (-exponent)
+
+
+# ---------------------------------------------------------------------------
+# The staleness buffer
+# ---------------------------------------------------------------------------
+
+class StaleBuffer(NamedTuple):
+    """Device-resident staleness buffer: one slot per client id (static
+    shape, scan-carried).  ``msgs`` holds the *wire representation* of each
+    parked uplink ([n, ...] leading axis on every payload leaf -- dense
+    tensors on the ref backend, PackedLeaf / QuantPayload pytrees on the
+    packed wire), so buffered traffic costs compressed bytes, not dense
+    deltas.  Unoccupied slots hold zeros / stale garbage; every read is
+    gated by ``occupied``."""
+    msgs: object            # wire-format payload pytree, leading axis [n]
+    origin: jnp.ndarray     # [n] int32 round the payload was computed at
+    sigma: jnp.ndarray      # [n] f32 switch weight at origin (phase bit)
+    weight: jnp.ndarray     # [n] f32 sampler HT weight at origin
+    occupied: jnp.ndarray   # [n] f32 0/1
+
+
+class AsyncMetrics(NamedTuple):
+    """Per-round async metrics wrapping the synchronous
+    :class:`RoundMetrics` (the ``round`` leaf).  Counts are f32 scalars;
+    when the buffer is disabled they take their nominal synchronous values
+    (``fresh = fresh_weight = m``, everything else 0)."""
+    round: RoundMetrics
+    fresh: jnp.ndarray          # uplinks merged at the round barrier
+    departed: jnp.ndarray       # sampled clients lost mid-round (buffered)
+    merged: jnp.ndarray         # parked payloads delivered this round
+    dropped: jnp.ndarray        # buffer entries expired or overwritten
+    occupancy: jnp.ndarray      # occupied slots after the round
+    fresh_weight: jnp.ndarray   # HT mass merged fresh
+    departed_weight: jnp.ndarray  # HT mass entering the buffer
+    stale_weight: jnp.ndarray   # lambda-weighted HT mass merged stale
+    dropped_weight: jnp.ndarray  # HT mass lost to expiry/overwrite
+    buffered_weight: jnp.ndarray  # HT mass parked after the round
+    max_age: jnp.ndarray        # oldest occupied entry, rounds (post-round)
+
+
+def init_buffer(params, cfg: FedConfig) -> Optional[StaleBuffer]:
+    """A fresh (empty) buffer whose ``msgs`` leaves have the uplink
+    transport's exact wire shapes for a ``params``-shaped model ([n]
+    leading axis); None when the buffer is disabled -- the carry gains no
+    pytree leaves at the parity point."""
+    if not cfg.async_.enabled:
+        return None
+    uplink, _ = transports_for(cfg)
+    n = cfg.n_clients
+    stacked = tree_map(
+        lambda p: jax.ShapeDtypeStruct((n,) + p.shape, p.dtype), params)
+    e_sds = stacked if uplink.needs_residual else None
+    ones = jnp.ones((n,), jnp.float32)
+    key0 = jax.random.PRNGKey(0)
+    msg_sds, _ = jax.eval_shape(
+        lambda e, d: uplink.encode(e, d, ones, like=params, key=key0),
+        e_sds, stacked)
+    return StaleBuffer(
+        msgs=tree_map(lambda s: jnp.zeros(s.shape, s.dtype), msg_sds),
+        origin=jnp.zeros((n,), jnp.int32),
+        sigma=jnp.zeros((n,), jnp.float32),
+        weight=jnp.zeros((n,), jnp.float32),
+        occupied=jnp.zeros((n,), jnp.float32))
+
+
+def _nominal_metrics(mets: RoundMetrics, cfg: FedConfig) -> AsyncMetrics:
+    m = jnp.asarray(float(cfg.m), jnp.float32)
+    z = jnp.zeros((), jnp.float32)
+    return AsyncMetrics(round=mets, fresh=m, departed=z, merged=z,
+                        dropped=z, occupancy=z, fresh_weight=m,
+                        departed_weight=z, stale_weight=z, dropped_weight=z,
+                        buffered_weight=z, max_age=z)
+
+
+# ---------------------------------------------------------------------------
+# The asynchronous round
+# ---------------------------------------------------------------------------
+
+def async_round_step(state: FedState, buf: Optional[StaleBuffer], batches,
+                     loss_pair: Callable, cfg: FedConfig
+                     ) -> tuple[FedState, Optional[StaleBuffer], AsyncMetrics]:
+    """One asynchronous engine round (see module docstring).
+
+    With ``cfg.async_.enabled == False`` this IS the synchronous
+    ``rounds.round_step`` -- the same function runs, the untouched buffer
+    rides along -- so trajectories are bit-for-bit the synchronous ones.
+    Enabled, the round composes the same stage helpers
+    (``rounds.sample_round`` / ``eval_round`` / ``local_deltas``) with the
+    event draw, the split encode/reduce wire path, and the buffer merge."""
+    if not cfg.async_.enabled:
+        new_state, mets = rounds.round_step(state, batches, loss_pair, cfg)
+        return new_state, buf, _nominal_metrics(mets, cfg)
+
+    strat = strategies.get_strategy(cfg.strategy)
+    strat.validate(cfg)
+    m = cfg.m
+    acfg = cfg.async_
+    key, k_part, k_up, k_down, k_evt = jax.random.split(state.key, 5)
+
+    part, samp_state, fleet = rounds.sample_round(state, batches, k_part, cfg)
+    samp = samplers.get_sampler(cfg.fleet.sampler)
+    ev, samp_state = samp.events(k_evt, cfg, part.mask, samp_state)
+
+    batches, pre_gathered, f_part, g_hat, g_full, f_full = rounds.eval_round(
+        state, batches, fleet, part, loss_pair, cfg)
+
+    sigma = strat.switch_weight(g_hat, cfg)
+    deltas = rounds.local_deltas(state, batches, part, strat, loss_pair,
+                                 sigma, cfg, pre_gathered)
+
+    # -- uplink: encode everyone (departing clients still compute and
+    #    compress; EF residuals are client-local state, so they update for
+    #    every participant), aggregate only the fresh fraction ------------
+    uplink, downlink = transports_for(cfg)
+    msgs, e_up = participation.encode(
+        uplink, state.e_up, deltas, part, like=state.w, key=k_up)
+
+    fresh = part.mask * (1.0 - ev.depart)
+    part_fresh = participation.compose_weights(part, 1.0 - ev.depart)
+    w_fresh = participation.agg_weights(part_fresh)
+    v_bar = uplink.reduce(msgs, w_fresh, m, like=state.w)
+
+    # -- staleness buffer: deliver, expire, park --------------------------
+    age = (state.t - buf.origin).astype(jnp.float32)
+    deliver = buf.occupied * ev.arrive
+    lam = strat.staleness_weight(age, buf.sigma, g_hat, cfg)
+    w_stale = buf.weight * lam * deliver
+    v_stale = uplink.reduce(buf.msgs, w_stale, m, like=state.w)
+    v_bar = tree_map(jnp.add, v_bar, v_stale)
+
+    remaining = buf.occupied * (1.0 - deliver)
+    expired = remaining * (age >= acfg.max_staleness).astype(jnp.float32)
+    remaining = remaining * (1.0 - expired)
+    overwritten = remaining * ev.depart
+    dropped = expired + overwritten
+    occupied = remaining * (1.0 - ev.depart) + ev.depart
+
+    w_agg = participation.agg_weights(part)
+    buf_new = StaleBuffer(
+        msgs=comm.mask_where(ev.depart, msgs, buf.msgs),
+        origin=jnp.where(ev.depart > 0, state.t, buf.origin),
+        sigma=jnp.where(ev.depart > 0, sigma, buf.sigma),
+        weight=jnp.where(ev.depart > 0, w_agg, buf.weight),
+        occupied=occupied)
+
+    # -- server update + downlink + bookkeeping: the synchronous round's
+    #    shared tail, applied to the buffer-merged direction.  The fresh
+    #    participation feeds the delta_norm metric so it reports the mass
+    #    that actually reached this round's barrier, not the departed rows
+    new_state, round_metrics = rounds.finish_round(
+        state, strat, cfg, part_fresh, deltas, v_bar, e_up, uplink,
+        downlink, samp_state, key, k_down, f_part, g_hat, g_full, f_full,
+        sigma)
+
+    metrics = AsyncMetrics(
+        round=round_metrics,
+        fresh=jnp.sum(fresh),
+        departed=jnp.sum(ev.depart),
+        merged=jnp.sum(deliver),
+        dropped=jnp.sum(dropped),
+        occupancy=jnp.sum(occupied),
+        fresh_weight=jnp.sum(w_fresh),
+        departed_weight=jnp.sum(w_agg * ev.depart),
+        stale_weight=jnp.sum(w_stale),
+        dropped_weight=jnp.sum(buf.weight * dropped),
+        buffered_weight=jnp.sum(buf_new.weight * occupied),
+        max_age=jnp.max(occupied * (state.t - buf_new.origin)
+                        ).astype(jnp.float32))
+    return new_state, buf_new, metrics
+
+
+def async_drive(state: FedState, batches, loss_pair: Callable,
+                cfg: FedConfig, T: int, *, buf: Optional[StaleBuffer] = None,
+                per_round: bool = False, block: int = 0,
+                progress: Optional[Callable] = None,
+                donate: Optional[bool] = None):
+    """Fully-jitted multi-round async driver: the ``rounds.drive`` scan
+    with the staleness buffer in the carry.
+
+    Same knobs as ``drive`` (``per_round`` / ``block`` metric offload /
+    ``progress`` host callback / ``donate``); ``buf=None`` starts from a
+    fresh :func:`init_buffer` (None when disabled -- no extra carry
+    leaves).  Returns ``(final_state, final_buffer, metrics)`` with
+    :class:`AsyncMetrics` stacked on the host ([T] leading axis, numpy);
+    ``metrics.round`` is the synchronous metric tree, bit-for-bit the
+    ``drive`` metrics at the parity point."""
+    if buf is None:
+        buf = init_buffer(state.w, cfg)
+    (state, buf), mets = rounds._drive_loop(
+        lambda c, b: _step_carry(c, b, loss_pair, cfg),
+        (state, buf), batches, T, per_round=per_round, block=block,
+        progress=progress,
+        progress_of=lambda c, mets: (c[0].t, mets.round.f,
+                                     mets.round.g_hat, mets.round.sigma),
+        donate=donate)
+    return state, buf, mets
+
+
+def _step_carry(carry, batches, loss_pair, cfg):
+    state, buf = carry
+    state, buf, mets = async_round_step(state, buf, batches, loss_pair, cfg)
+    return (state, buf), mets

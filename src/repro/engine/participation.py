@@ -112,6 +112,27 @@ def aggregate(part: Participation, deltas):
     return masked_mean(scatter_rows(part, deltas), w, part.m)
 
 
+def compose_weights(part: Participation, factor: jnp.ndarray) -> Participation:
+    """Participation with the sampler's aggregation weights multiplied by a
+    per-client ``factor`` ([n]) -- the async engine composes the HT weights
+    with event masks (fresh fraction) without touching the sample itself,
+    so HT-unbiasedness of whatever survives the composition is preserved:
+    the reduction stays ``sum_j (weights_j * factor_j) x_j / m``."""
+    return part._replace(weights=agg_weights(part) * factor)
+
+
+def encode(transport, e, deltas, part: Participation, like, key=None):
+    """The async engine's uplink encode call site: per-client *wire-format*
+    messages ([n, ...] stacked) + EF residual update, without aggregation,
+    dispatched to the transport's dense-mask or gathered execution (mirrors
+    :func:`transmit`; aggregation happens later via ``transport.reduce`` so
+    departing clients' payloads can park in the staleness buffer)."""
+    if part.idx is None:
+        return transport.encode(e, deltas, part.mask, like, key)
+    return transport.encode_gathered(e, deltas, part.idx, part.mask,
+                                     like, key)
+
+
 def transmit(transport, e, deltas, part: Participation, like, key=None):
     """The engine's single uplink call site: dispatch the EF14 + aggregation
     to the transport's dense-mask or gathered execution.  The sampler's

@@ -113,24 +113,23 @@ def averaged_iterate(state: FedState):
         lambda s, w: jnp.where(has, s / wgt, w), state.wbar_sum, state.w)
 
 
-def round_step(state: FedState,
-               batches,
-               loss_pair: Callable,   # (params, batch) -> (f_j, g_j) scalars
-               cfg: FedConfig) -> tuple[FedState, RoundMetrics]:
-    """One engine round.  ``batches`` has leading axis [n_clients], or is a
-    :class:`repro.fleet.Fleet` -- then this round's per-client minibatches
-    are provisioned in-jit from the fleet's shards (fleet.provision)."""
-    strat = strategies.get_strategy(cfg.strategy)
-    strat.validate(cfg)
-    n, m, E, eta = cfg.n_clients, cfg.m, cfg.local_steps, cfg.lr
-    key, k_part, k_up, k_down = jax.random.split(state.key, 4)
-
+def sample_round(state: FedState, batches, key: jax.Array, cfg: FedConfig):
+    """Stage 1: draw S_t via the configured sampler law.  Returns
+    ``(part, samp_state, fleet-or-None)``."""
     fleet = batches if isinstance(batches, provision.Fleet) else None
     samp = samplers.get_sampler(cfg.fleet.sampler)
-    mask, weights, samp_state = samp.sample(k_part, cfg, fleet=fleet,
+    mask, weights, samp_state = samp.sample(key, cfg, fleet=fleet,
                                             state=state.sampler)
-    part = participation.finalize(mask, weights, cfg)
+    return participation.finalize(mask, weights, cfg), samp_state, fleet
 
+
+def eval_round(state: FedState, batches, fleet, part, loss_pair: Callable,
+               cfg: FedConfig):
+    """Stage 2: in-jit fleet provisioning + the constraint query (scalar
+    uplink per client).  Returns ``(batches, pre_gathered, f_part, g_hat,
+    g_full, f_full)`` where ``batches`` are this round's provisioned
+    minibatches (gathered to the m participants when sparse)."""
+    m = cfg.m
     # -- in-jit batch provisioning (fleet only) -----------------------------
     # Gather mode without the full-n eval provisions only the m sampled
     # clients' minibatches, so provisioning FLOPs/memory scale with m.
@@ -142,7 +141,6 @@ def round_step(state: FedState,
         batches = provision.minibatch(fleet, k_prov, cfg, idx=prov_idx)
         pre_gathered = prov_idx is not None
 
-    # -- constraint query (scalar uplink per client) ------------------------
     eval_b = participation.gather(part, batches) \
         if (sparse_eval and not pre_gathered) else batches
     f_ev, g_ev = participation.client_vmap(
@@ -156,10 +154,15 @@ def round_step(state: FedState,
         g_hat = jnp.sum(w_agg * g_ev) / m
         f_part = jnp.sum(w_agg * f_ev) / m
     g_full, f_full = jnp.mean(g_ev), jnp.mean(f_ev)
+    return batches, pre_gathered, f_part, g_hat, g_full, f_full
 
-    sigma = strat.switch_weight(g_hat, cfg)
 
-    # -- E local steps on the strategy's local objective --------------------
+def local_deltas(state: FedState, batches, part, strat, loss_pair: Callable,
+                 sigma, cfg: FedConfig, pre_gathered: bool = False):
+    """Stage 4: E local steps per participating client on the strategy's
+    local objective; returns the per-client Delta_j = (w_t - w_{j,E}) / eta
+    stack ([m, ...] in gather mode, [n, ...] in mask mode)."""
+    E, eta = cfg.local_steps, cfg.lr
     grad_fn = jax.grad(strat.local_objective(loss_pair, sigma, cfg))
 
     def local_updates(batch):
@@ -172,22 +175,21 @@ def round_step(state: FedState,
     local_b = batches if pre_gathered else \
         participation.gather(part, batches)             # [m|n, ...]
     deltas = participation.client_vmap(local_updates, cfg.client_chunk)(local_b)
-    deltas = partition.constrain_leading(deltas, "client")
+    return partition.constrain_leading(deltas, "client")
 
-    # -- the wire path: exactly one uplink and one downlink call site -------
-    # All compressor / backend / wire-format dispatch lives inside the
-    # transport layer (repro.comm); participation-mode dispatch lives in
-    # engine.participation.
-    uplink, downlink = transports_for(cfg)
 
+def finish_round(state: FedState, strat, cfg: FedConfig, part, deltas,
+                 v_bar, e_up, uplink, downlink, samp_state, key, k_down,
+                 f_part, g_hat, g_full, f_full, sigma
+                 ) -> tuple[FedState, RoundMetrics]:
+    """Stages 6-7 + bookkeeping, shared with the asynchronous round: server
+    update on the aggregated direction, primal-EF21 downlink broadcast,
+    averaged-iterate accounting (Theorems 1/2), metrics, next FedState."""
     x_cur = state.x if state.x is not None else state.w
-    v_bar, e_up = participation.transmit(
-        uplink, state.e_up, deltas, part, like=state.w, key=k_up)
     x_new = strat.server_update(x_cur, v_bar, cfg)
     w_new = downlink.broadcast(state.w, x_new, key=k_down)
     x_keep = x_new if downlink.tracks_center else None
 
-    # -- averaged iterate bookkeeping (Theorems 1/2) -------------------------
     alpha = strat.iterate_weight(g_hat, cfg)
     wbar_sum = (tree_axpy(alpha, state.w, state.wbar_sum)
                 if state.wbar_sum is not None else None)
@@ -206,6 +208,44 @@ def round_step(state: FedState,
         wbar_sum=wbar_sum, wbar_weight=state.wbar_weight + alpha,
         t=state.t + 1, key=key, sampler=samp_state)
     return new_state, metrics
+
+
+def round_step(state: FedState,
+               batches,
+               loss_pair: Callable,   # (params, batch) -> (f_j, g_j) scalars
+               cfg: FedConfig) -> tuple[FedState, RoundMetrics]:
+    """One engine round.  ``batches`` has leading axis [n_clients], or is a
+    :class:`repro.fleet.Fleet` -- then this round's per-client minibatches
+    are provisioned in-jit from the fleet's shards (fleet.provision).
+
+    The round is a composition of the stage helpers above
+    (:func:`sample_round` / :func:`eval_round` / :func:`local_deltas` /
+    :func:`finish_round`), shared with the asynchronous round in
+    engine.async_rounds -- only the wire path between the stages differs
+    there (split encode/reduce with the staleness-buffer merge)."""
+    strat = strategies.get_strategy(cfg.strategy)
+    strat.validate(cfg)
+    key, k_part, k_up, k_down = jax.random.split(state.key, 4)
+
+    part, samp_state, fleet = sample_round(state, batches, k_part, cfg)
+    batches, pre_gathered, f_part, g_hat, g_full, f_full = eval_round(
+        state, batches, fleet, part, loss_pair, cfg)
+
+    sigma = strat.switch_weight(g_hat, cfg)
+    deltas = local_deltas(state, batches, part, strat, loss_pair, sigma,
+                          cfg, pre_gathered)
+
+    # -- the wire path: exactly one uplink and one downlink call site -------
+    # All compressor / backend / wire-format dispatch lives inside the
+    # transport layer (repro.comm); participation-mode dispatch lives in
+    # engine.participation.
+    uplink, downlink = transports_for(cfg)
+    v_bar, e_up = participation.transmit(
+        uplink, state.e_up, deltas, part, like=state.w, key=k_up)
+
+    return finish_round(state, strat, cfg, part, deltas, v_bar, e_up,
+                        uplink, downlink, samp_state, key, k_down,
+                        f_part, g_hat, g_full, f_full, sigma)
 
 
 # ---------------------------------------------------------------------------
@@ -241,23 +281,40 @@ def drive(state: FedState, batches, loss_pair: Callable, cfg: FedConfig,
     Returns ``(final_state, metrics)`` with metrics stacked on the host
     ([T] leading axis, numpy).
     """
+    return _drive_loop(
+        lambda c, b: round_step(c, b, loss_pair, cfg),
+        state, batches, T, per_round=per_round, block=block,
+        progress=progress,
+        progress_of=lambda c, mets: (c.t, mets.f, mets.g_hat, mets.sigma),
+        donate=donate)
+
+
+def _drive_loop(step: Callable, carry, batches, T: int, *,
+                per_round: bool = False, block: int = 0,
+                progress: Optional[Callable] = None,
+                progress_of: Optional[Callable] = None,
+                donate: Optional[bool] = None):
+    """The shared scan machinery behind :func:`drive` and
+    ``async_rounds.async_drive``: lax.scan segments over ``step(carry, b)
+    -> (carry, mets)`` with donated carry buffers, per-``block`` metric
+    offload, and the ``jax.debug.callback`` progress hook
+    (``progress(*progress_of(carry, mets))`` per round)."""
     if donate is None:
         donate = jax.default_backend() != "cpu"
     if donate:
-        state = tree_map(jnp.copy, state)
+        carry = tree_map(jnp.copy, carry)
     block = int(block) if block else T
     block = max(1, min(block, T))
 
     def segment(length: int):
-        def run(s, xs):
+        def run(c, xs):
             def body(carry, x):
                 b = x if per_round else batches
-                carry, mets = round_step(carry, b, loss_pair, cfg)
+                carry, mets = step(carry, b)
                 if progress is not None:
-                    jax.debug.callback(progress, carry.t, mets.f,
-                                       mets.g_hat, mets.sigma)
+                    jax.debug.callback(progress, *progress_of(carry, mets))
                 return carry, mets
-            return jax.lax.scan(body, s, xs,
+            return jax.lax.scan(body, c, xs,
                                 length=None if per_round else length)
         kw = {"donate_argnums": (0,)} if donate else {}
         return jax.jit(run, **kw)
@@ -272,11 +329,11 @@ def drive(state: FedState, batches, loss_pair: Callable, cfg: FedConfig,
         xs = None
         if per_round:
             xs = tree_map(lambda x: x[t:t + L], batches)
-        state, mets = runners[L](state, xs)
+        carry, mets = runners[L](carry, xs)
         chunks.append(jax.device_get(mets))     # offload one segment
         t += L
     stacked = tree_map(lambda *xs: np.concatenate(xs, axis=0), *chunks)
-    return state, stacked
+    return carry, stacked
 
 
 def run_rounds(state: FedState, batch_fn: Callable, loss_pair: Callable,

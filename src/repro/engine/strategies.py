@@ -56,7 +56,19 @@ def strategy_names() -> tuple:
 
 
 class Strategy:
-    """Pluggable round math (see module docstring)."""
+    """Pluggable round math (see module docstring).
+
+    Law: a strategy supplies only the four round hooks (switch weight,
+    local objective, server update, iterate weight) plus the async
+    ``staleness_weight`` law; sampling, provisioning, the wire path and
+    all bookkeeping belong to the engine and are shared across strategies.
+
+    Usage::
+
+        >>> strat = get_strategy("fedsgm")
+        >>> sigma = strat.switch_weight(g_hat, cfg)
+        >>> grads = jax.grad(strat.local_objective(loss_pair, sigma, cfg))
+    """
 
     name: str = "?"
 
@@ -76,6 +88,18 @@ class Strategy:
 
     def iterate_weight(self, g_hat, cfg):
         raise NotImplementedError
+
+    def staleness_weight(self, s, sigma_origin, g_hat, cfg):
+        """lambda(s): down-weight of a buffered uplink of age ``s`` rounds
+        at delivery time (async rounds, DESIGN.md §Async).
+
+        ``sigma_origin`` is the switching weight the payload was computed
+        under (its phase bit) and ``g_hat`` the *current* constraint
+        estimate -- the constraint-aware law uses both.  Default: dispatch
+        the ``cfg.async_.staleness`` law from the async_rounds registry."""
+        from repro.engine.async_rounds import get_staleness_law
+        return get_staleness_law(cfg.async_.staleness)(
+            s, sigma_origin, g_hat, cfg)
 
 
 @register_strategy
@@ -133,6 +157,16 @@ class PenaltyFedAvg(FedSGM):
 
     def iterate_weight(self, g_hat, cfg):
         return jnp.ones(())
+
+    def staleness_weight(self, s, sigma_origin, g_hat, cfg):
+        """Penalty-FedAvg has no switching phases, so the constraint-aware
+        law degenerates: force the phase-agnostic polynomial decay instead
+        (``constant`` stays constant)."""
+        from repro.engine.async_rounds import get_staleness_law
+        law = cfg.async_.staleness
+        if law == "constraint":
+            law = "poly"
+        return get_staleness_law(law)(s, sigma_origin, g_hat, cfg)
 
 
 @register_strategy

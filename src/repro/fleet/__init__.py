@@ -21,11 +21,11 @@ from repro.fleet.partitions import (ClientPartition, Partitioner,
                                     register_partitioner)
 from repro.fleet.provision import (Fleet, build_fleet, data_weights,
                                    from_stacked, minibatch, round_key)
-from repro.fleet.samplers import (ClientSampler, get_sampler,
+from repro.fleet.samplers import (ClientSampler, Events, get_sampler,
                                   register_sampler, sampler_names)
 
 __all__ = [
-    "ClientPartition", "ClientSampler", "Fleet", "Partitioner",
+    "ClientPartition", "ClientSampler", "Events", "Fleet", "Partitioner",
     "build_fleet", "data_weights", "from_stacked", "get_partitioner",
     "get_sampler", "minibatch", "partitioner_names", "register_partitioner",
     "register_sampler", "round_key", "sampler_names",

@@ -243,6 +243,9 @@ class Partitioner:
 
 @register_partitioner
 class IIDPartitioner(Partitioner):
+    """Uniform random permutation into n_clients equal shards -- the
+    homogeneous baseline every heterogeneity sweep is measured against."""
+
     name = "iid"
 
     def partition(self, key, n, n_clients, cfg, labels=None):
@@ -251,6 +254,10 @@ class IIDPartitioner(Partitioner):
 
 @register_partitioner
 class DirichletPartitioner(Partitioner):
+    """Label skew: per-class client proportions ~ Dir(alpha), realized as
+    an *exact* partition via largest-remainder quotas (no duplicated rows,
+    counts sum to n); low alpha packs classes onto few clients."""
+
     name = "dirichlet"
     ragged = True               # equal-size under cfg.balance
     needs_labels = True
@@ -270,6 +277,9 @@ class DirichletPartitioner(Partitioner):
 
 @register_partitioner
 class ZipfPartitioner(Partitioner):
+    """Quantity skew: shard sizes ∝ (j+1)^-a (every client keeps >= 1
+    row) -- heavy-tailed client populations at a single knob."""
+
     name = "zipf"
     ragged = True
 

@@ -37,7 +37,18 @@ PROVISION_TAG = 0x70726F76
 
 
 class Fleet(NamedTuple):
-    """The client population: partitioned shards + per-client row counts."""
+    """The client population: partitioned shards + per-client row counts.
+
+    Law: a plain pytree (every ``data`` leaf [n_clients, cap, ...]) that
+    scans, jits, donates and checkpoints like engine state; padded rows
+    beyond ``count_j`` are never provisioned.
+
+    Usage::
+
+        >>> fleet = build_fleet(key, (x, y), cfg, labels=y)   # partitioned
+        >>> fleet = from_stacked((x_stacked, y_stacked))      # pre-sharded
+        >>> state, hist = engine.drive(state, fleet, loss_pair, cfg, T=100)
+    """
     data: object            # pytree, every leaf [n_clients, cap, ...]
     count: jnp.ndarray      # [n_clients] int32 valid rows per shard
 

@@ -26,10 +26,18 @@ Registered samplers:
   m are up), ``weights = mask`` (the participating mean, time-correlated
   participation -- the estimator the paper's partial-participation analysis
   stresses).
+
+For asynchronous buffered rounds (engine.async_rounds, DESIGN.md §Async) a
+sampler additionally emits mid-round :class:`Events` -- departures (a
+sampled client drops out before the aggregation barrier) and arrivals (a
+client able to deliver a parked payload).  The default law draws i.i.d.
+departures at ``cfg.async_.depart`` and i.i.d. per-round rejoins at
+``cfg.async_.rejoin`` (geometric away-times); ``markov`` derives both from
+its availability chain.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -37,6 +45,19 @@ import jax.numpy as jnp
 from repro.engine.participation import participation_mask
 
 _SAMPLERS: dict = {}
+
+
+class Events(NamedTuple):
+    """One round's arrival/departure events (engine.async_rounds, DESIGN.md
+    §Async).  Both are [n] 0/1 float masks:
+
+    * ``depart`` -- sampled clients that go unavailable *mid-round*: their
+      compressed uplink misses the round's aggregation barrier and parks in
+      the staleness buffer instead,
+    * ``arrive`` -- clients able to deliver a parked payload this round
+      (for availability-model samplers: the client is back up)."""
+    depart: jnp.ndarray
+    arrive: jnp.ndarray
 
 
 def register_sampler(cls):
@@ -95,7 +116,20 @@ def systematic_pick(key: jax.Array, pi: jnp.ndarray, m: int) -> jnp.ndarray:
 # ---------------------------------------------------------------------------
 
 class ClientSampler:
-    """One client-participation law (see module docstring)."""
+    """One client-participation law (see module docstring).
+
+    Law: ``sample`` draws the round's 0/1 mask (exactly m ones) plus the
+    per-client aggregation weights making the engine's reduction
+    ``sum_j weights_j x_j / m`` unbiased for the law's target functional;
+    ``events`` adds the async engine's mid-round arrival/departure model.
+
+    Usage::
+
+        >>> samp = get_sampler(cfg.fleet.sampler)
+        >>> mask, weights, s = samp.sample(key, cfg, fleet=fleet,
+        ...                                state=state.sampler)
+        >>> ev, s = samp.events(k_evt, cfg, mask, s)   # async rounds only
+    """
 
     name: str = "?"
     stateful: bool = False
@@ -114,6 +148,28 @@ class ClientSampler:
                ) -> Tuple[jnp.ndarray, jnp.ndarray, Optional[object]]:
         """Draw S_t: ``(mask [n], weights [n], new_state)``."""
         raise NotImplementedError
+
+    def events(self, key: jax.Array, cfg, mask: jnp.ndarray, state=None
+               ) -> Tuple[Events, Optional[object]]:
+        """Draw this round's arrival/departure events (async rounds only;
+        the synchronous engine never calls this).
+
+        Law (default, for samplers without an availability model): each
+        sampled client departs mid-round i.i.d. with probability
+        ``cfg.async_.depart``, and a departed client rejoins (delivers its
+        parked payload) i.i.d. with probability ``cfg.async_.rejoin`` per
+        round -- geometric away-times with mean ``1/rejoin``, so payload
+        ages actually spread and the staleness-decay laws bite.  ``state``
+        is the post-:meth:`sample` sampler state and may be updated (a
+        departing client's availability chain starts the next round
+        down)."""
+        n = cfg.n_clients
+        k_dep, k_arr = jax.random.split(key)
+        u = jax.random.uniform(k_dep, (n,))
+        depart = mask * (u < cfg.async_.depart).astype(jnp.float32)
+        arrive = (jax.random.uniform(k_arr, (n,))
+                  < cfg.async_.rejoin).astype(jnp.float32)
+        return Events(depart, arrive), state
 
 
 @register_sampler
@@ -193,3 +249,22 @@ class MarkovSampler(ClientSampler):
         order = jnp.argsort(-score)
         mask = jnp.zeros((n,), jnp.float32).at[order[:m]].set(1.0)
         return mask, mask, avail
+
+    def events(self, key, cfg, mask, state=None):
+        """Mid-round chain step: a sampled *available* client departs with
+        the chain's leave probability ``1 - avail_stay`` (the same law that
+        governs round-to-round availability, applied within the round); a
+        sampled client whose chain is already down (the sampler's
+        fewer-than-m fallback) departs with probability 1 -- it was never
+        up, so its uplink cannot make the barrier and always parks.
+        Arrivals are the clients whose chain state is up this round.  A
+        departing client's chain flips down, so the next round's
+        :meth:`sample` sees it unavailable -- the departure *is* a chain
+        transition, not an independent event source."""
+        n = cfg.n_clients
+        avail = state if state is not None else jnp.ones((n,), jnp.float32)
+        u = jax.random.uniform(key, (n,))
+        leave = (u < 1.0 - cfg.fleet.avail_stay).astype(jnp.float32)
+        depart = mask * jnp.maximum(leave, 1.0 - avail)
+        up = avail * (1.0 - depart)
+        return Events(depart, up), up

@@ -25,7 +25,8 @@ def run_one(arch: str, shape_name: str, mesh_kind: str, comm: str = "dense",
             local_steps: int = 1, uplink_ratio: float = 0.1,
             dtype: str = None, seq_shard: bool = False,
             participation: str = "mask", client_chunk: int = 0,
-            sampler: str = "uniform", verbose: bool = True) -> dict:
+            sampler: str = "uniform", async_buffer: bool = False,
+            staleness: str = "constant", verbose: bool = True) -> dict:
     import jax
     from repro import configs
     from repro.launch import roofline, steps
@@ -38,7 +39,8 @@ def run_one(arch: str, shape_name: str, mesh_kind: str, comm: str = "dense",
            "chips": chips, "comm": comm, "local_steps": local_steps,
            "uplink_ratio": uplink_ratio, "dtype": dtype or "default",
            "seq_shard": seq_shard, "participation": participation,
-           "client_chunk": client_chunk, "sampler": sampler}
+           "client_chunk": client_chunk, "sampler": sampler,
+           "async_buffer": async_buffer, "staleness": staleness}
 
     reason = steps.skip_reason(arch, shape_name)
     if reason:
@@ -49,7 +51,8 @@ def run_one(arch: str, shape_name: str, mesh_kind: str, comm: str = "dense",
                             local_steps=local_steps, dtype=dtype,
                             seq_shard=seq_shard, uplink_ratio=uplink_ratio,
                             participation=participation,
-                            client_chunk=client_chunk, sampler=sampler) \
+                            client_chunk=client_chunk, sampler=sampler,
+                            async_buffer=async_buffer, staleness=staleness) \
         if shape_name == "train_4k" else \
         steps.build_case(arch, shape_name, mesh, dtype=dtype)
     with mesh:
@@ -139,6 +142,13 @@ def main():
                     choices=["uniform", "weighted"],
                     help="client-sampling law (repro.fleet.samplers; the "
                          "stateless laws lower under the abstract dry-run)")
+    ap.add_argument("--async-buffer", action="store_true",
+                    help="lower the asynchronous buffered round "
+                         "(engine.async_rounds): staleness buffer becomes "
+                         "an extra abstract input")
+    ap.add_argument("--staleness", default="constant",
+                    choices=["constant", "poly", "constraint"],
+                    help="staleness-decay law for the async round")
     ap.add_argument("--dtype", default=None, choices=[None, "float32", "bfloat16"])
     ap.add_argument("--seq-shard", action="store_true")
     ap.add_argument("--append", default=None, help="append JSONL record here")
@@ -164,7 +174,9 @@ def main():
                       uplink_ratio=args.uplink_ratio,
                       dtype=args.dtype, seq_shard=args.seq_shard,
                       participation=args.participation,
-                      client_chunk=args.client_chunk, sampler=args.sampler)
+                      client_chunk=args.client_chunk, sampler=args.sampler,
+                      async_buffer=args.async_buffer,
+                      staleness=args.staleness)
     except Exception as e:  # noqa: BLE001
         rec = {"arch": args.arch, "shape": args.shape, "mesh": args.mesh,
                "comm": args.comm, "status": "error",

@@ -16,8 +16,9 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro import configs
-from repro.configs.base import (CompressorConfig, FedConfig, FleetConfig,
-                                InputShape, ModelConfig, SwitchConfig)
+from repro.configs.base import (AsyncConfig, CompressorConfig, FedConfig,
+                                FleetConfig, InputShape, ModelConfig,
+                                SwitchConfig)
 from repro.core import fedsgm
 from repro.models import build
 from repro.sharding import partition
@@ -69,7 +70,9 @@ def fed_config_for(cfg: ModelConfig, mesh: Mesh, local_steps: int = 1,
                    comm: str = "dense", uplink_ratio: float = 0.1,
                    partial: bool = True, participation: str = "mask",
                    client_chunk: int = 0,
-                   sampler: str = "uniform") -> FedConfig:
+                   sampler: str = "uniform",
+                   async_buffer: bool = False,
+                   staleness: str = "constant") -> FedConfig:
     """Default FedSGM policy per architecture class (DESIGN.md §5).
 
     ``comm`` selects the transport backend (DESIGN.md §Transport):
@@ -79,16 +82,21 @@ def fed_config_for(cfg: ModelConfig, mesh: Mesh, local_steps: int = 1,
     m instead of n; client_chunk bounds per-step memory when n >> devices.
     ``sampler`` selects the client-sampling *law* (repro.fleet.samplers,
     DESIGN.md §Fleet) -- the stateless laws (uniform/weighted) lower under
-    the abstract dry-run state; markov needs an engine-built FedState."""
+    the abstract dry-run state; markov needs an engine-built FedState.
+    ``async_buffer``/``staleness`` enable the asynchronous buffered round
+    (engine.async_rounds, DESIGN.md §Async): the lowered step becomes
+    ``async_round_step`` with the staleness buffer as an extra input."""
     from repro import comm as comm_layer
-    from repro.engine import participation as part_layer
+    from repro.engine import async_rounds, participation as part_layer
     from repro.fleet import samplers as sampler_layer
     comm_layer.backend_for(comm)    # validate early, before lowering
     sampler_layer.get_sampler(sampler)
+    async_rounds.get_staleness_law(staleness)
     if participation not in part_layer.MODES:
         raise ValueError(f"unknown participation mode {participation!r}; "
                          f"expected one of {part_layer.MODES}")
     fleet = FleetConfig(sampler=sampler)
+    async_ = AsyncConfig(enabled=async_buffer, staleness=staleness)
     axes = dict(zip(mesh.axis_names, mesh.devices.shape))
     shards = axes.get("model", 1)   # shard-local compression blocks (§Perf A0)
     if cfg.name in GIANTS:
@@ -101,7 +109,7 @@ def fed_config_for(cfg: ModelConfig, mesh: Mesh, local_steps: int = 1,
             downlink=CompressorConfig(kind="none"),
             comm=comm, client_axis="pod" if "pod" in axes else None,
             track_wbar=False, participation=participation,
-            client_chunk=client_chunk, fleet=fleet)
+            client_chunk=client_chunk, fleet=fleet, async_=async_)
     n = axes.get("data", 1)
     m = max(1, int(0.75 * n)) if partial else n
     return FedConfig(
@@ -112,7 +120,8 @@ def fed_config_for(cfg: ModelConfig, mesh: Mesh, local_steps: int = 1,
         downlink=CompressorConfig(kind="topk", ratio=uplink_ratio,
                                   block=2048, shards=shards),
         comm=comm, client_axis="data", track_wbar=False,
-        participation=participation, client_chunk=client_chunk, fleet=fleet)
+        participation=participation, client_chunk=client_chunk, fleet=fleet,
+        async_=async_)
 
 
 def _activate(cfg: ModelConfig, mesh: Mesh, kind: str, fed: Optional[FedConfig]):
@@ -163,7 +172,9 @@ def build_train_case(cfg: ModelConfig, shape: InputShape, mesh: Mesh,
                      uplink_ratio: float = 0.1,
                      participation: str = "mask",
                      client_chunk: int = 0,
-                     sampler: str = "uniform") -> Case:
+                     sampler: str = "uniform",
+                     async_buffer: bool = False,
+                     staleness: str = "constant") -> Case:
     if dtype:
         cfg = dataclasses.replace(cfg, param_dtype=dtype)
     fns = build(cfg)
@@ -171,7 +182,8 @@ def build_train_case(cfg: ModelConfig, shape: InputShape, mesh: Mesh,
                                 uplink_ratio=uplink_ratio,
                                 participation=participation,
                                 client_chunk=client_chunk,
-                                sampler=sampler)
+                                sampler=sampler, async_buffer=async_buffer,
+                                staleness=staleness)
     _activate(cfg, mesh, "train", fed)
     if seq_shard:
         # sequence parallelism for the residual stream (hillclimb knob):
@@ -217,6 +229,29 @@ def build_train_case(cfg: ModelConfig, shape: InputShape, mesh: Mesh,
     loss_pair = lm.make_loss_pair(
         fns.forward, cfg, budget=(cfg.moe.balance_budget if cfg.moe else 4.0),
         aux_constraint=cfg.moe is not None)
+
+    if fed.async_.enabled:
+        # Asynchronous buffered round: the staleness buffer is an extra
+        # abstract input.  Its wire-format message shapes come from the
+        # uplink transport (no allocation -- nested eval_shape); all buffer
+        # leaves carry the [n] client axis leading, sharded like e_up.
+        from repro.engine import async_rounds
+
+        buf_shapes = jax.eval_shape(
+            lambda: async_rounds.init_buffer(params_sds, fed))
+        buf_sds = jax.tree_util.tree_map(
+            lambda s: jax.ShapeDtypeStruct(
+                s.shape, s.dtype, sharding=NamedSharding(mesh, P(ca))),
+            buf_shapes,
+            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+        def astep(state, buf, b):
+            return async_rounds.async_round_step(state, buf, b, loss_pair,
+                                                 fed)
+
+        return Case(astep, (state_sds, buf_sds, batches),
+                    dict(kind="train", fed=fed, arch=cfg.name,
+                         shape=shape.name, async_buffer=True))
 
     def step(state, b):
         return fedsgm.round_step(state, b, loss_pair, fed)

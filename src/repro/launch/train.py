@@ -14,8 +14,8 @@ import time
 import jax
 
 from repro import configs
-from repro.configs.base import (CompressorConfig, FedConfig, FleetConfig,
-                                SwitchConfig)
+from repro.configs.base import (AsyncConfig, CompressorConfig, FedConfig,
+                                FleetConfig, SwitchConfig)
 from repro.core import fedsgm
 from repro.data import synthetic
 from repro.models import build
@@ -55,6 +55,22 @@ def main():
     ap.add_argument("--sampler", default="uniform",
                     choices=["uniform", "weighted", "markov"],
                     help="client-sampling law (repro.fleet.samplers)")
+    ap.add_argument("--async-buffer", action="store_true",
+                    help="asynchronous buffered rounds (engine.async_rounds,"
+                         " DESIGN.md §Async): clients lost mid-round park "
+                         "their compressed uplink in a staleness buffer and "
+                         "merge into a later server update")
+    ap.add_argument("--staleness", default="constant",
+                    choices=["constant", "poly", "constraint"],
+                    help="staleness-decay law for buffered uplinks")
+    ap.add_argument("--max-staleness", type=int, default=4,
+                    help="a buffered uplink may merge up to this age "
+                         "(rounds); entries that reach it undelivered "
+                         "expire")
+    ap.add_argument("--depart", type=float, default=0.25,
+                    help="mid-round departure probability for samplers "
+                         "without an availability model (markov uses its "
+                         "own chain)")
     ap.add_argument("--multi-pod", action="store_true",
                     help="use the production mesh (needs devices)")
     ap.add_argument("--ckpt-dir", default=None,
@@ -84,7 +100,12 @@ def main():
         comm=args.comm, strategy=args.strategy,
         participation=args.participation, client_chunk=args.client_chunk,
         fleet=FleetConfig(sampler=args.sampler, batch_size=args.batch,
-                          redraw=True) if args.fleet else FleetConfig())
+                          redraw=True) if args.fleet else FleetConfig(
+                              sampler=args.sampler),
+        async_=AsyncConfig(enabled=args.async_buffer,
+                           staleness=args.staleness,
+                           max_staleness=args.max_staleness,
+                           depart=args.depart))
     loss_pair = lm.make_loss_pair(fns.forward, cfg, budget=6.0,
                                   aux_constraint=cfg.moe is not None)
     state = fedsgm.init_state(params, fed)
@@ -99,18 +120,38 @@ def main():
     t0 = time.time()
     if args.fleet:
         if cfg.family in ("vlm", "audio"):
-            raise SystemExit("--fleet covers token-only archs (media pools "
-                             "are an open item, ROADMAP.md)")
+            raise SystemExit(
+                f"--fleet does not support --arch {args.arch} yet: "
+                f"repro.tasks.lm.make_fleet builds token-only pools, and "
+                f"{cfg.family} archs need per-client media-embedding shards "
+                "that no fleet partitioner provides (ROADMAP.md open item "
+                "'Media pools'; limitation documented in README.md).  "
+                "Either drop --fleet to use the host batch_fn path, which "
+                "synthesizes media embeddings per round, or pick a "
+                "token-only arch (e.g. --arch smollm-360m, qwen3-4b, "
+                "mamba2-130m).")
+        from repro.engine import async_rounds
         fleet = lm.make_fleet(jax.random.PRNGKey(1), fed,
                               pool=args.fleet_pool, seq_len=args.seq,
                               vocab=cfg.vocab, hetero=0.5)
+        buf = async_rounds.init_buffer(state.w, fed)
         for chunk in range(max(args.rounds // 10, 1)):
-            state, hist = fedsgm.drive(state, fleet, loss_pair, fed, T=10)
+            if args.async_buffer:
+                state, buf, ahist = async_rounds.async_drive(
+                    state, fleet, loss_pair, fed, T=10, buf=buf)
+                hist, extra = ahist.round, (
+                    f" buffered={int(ahist.occupancy[-1])} "
+                    f"merged={int(ahist.merged.sum())}")
+            else:
+                state, hist = fedsgm.drive(state, fleet, loss_pair, fed,
+                                           T=10)
+                extra = ""
             done = start_round + 10 * (chunk + 1)
             print(f"round {done:4d}: f={float(hist.f[-1]):.4f} "
                   f"g={float(hist.g_hat[-1]):+.4f} "
                   f"sigma={float(hist.sigma[-1]):.2f} "
-                  f"({(time.time()-t0)/(done-start_round):.2f}s/round)")
+                  f"({(time.time()-t0)/(done-start_round):.2f}s/round)"
+                  f"{extra}")
             if args.ckpt_dir:
                 from repro import checkpoint
                 checkpoint.save_round(args.ckpt_dir, done, state,
@@ -128,11 +169,29 @@ def main():
                 k, (n, args.batch, M, cfg.d_media or cfg.d_model)) * 0.02
         return lm.LMBatch(tokens=toks, minority_mask=mask, media=media)
 
+    astep = buf = None
+    if args.async_buffer:
+        from repro.engine import async_rounds
+        buf = async_rounds.init_buffer(state.w, fed)
+        astep = jax.jit(lambda s, b, batch: async_rounds.async_round_step(
+            s, b, batch, loss_pair, fed))
+
     for chunk in range(max(args.rounds // 10, 1)):
-        state, hist = fedsgm.run_rounds(state, batch_fn, loss_pair, fed, T=10)
+        if args.async_buffer:
+            key = jax.random.PRNGKey(fed.seed + 1 + chunk)
+            for t in range(10):
+                key, sub = jax.random.split(key)
+                state, buf, hist = astep(state, buf, batch_fn(t, sub))
+            hist = hist.round
+        else:
+            state, hist = fedsgm.run_rounds(state, batch_fn, loss_pair,
+                                            fed, T=10)
         done = start_round + 10 * (chunk + 1)
-        print(f"round {done:4d}: f={float(hist.f[-1]):.4f} "
-              f"g={float(hist.g_hat[-1]):+.4f} sigma={float(hist.sigma[-1]):.2f} "
+        f_last, g_last, s_last = (
+            (hist.f, hist.g_hat, hist.sigma) if args.async_buffer else
+            (hist.f[-1], hist.g_hat[-1], hist.sigma[-1]))
+        print(f"round {done:4d}: f={float(f_last):.4f} "
+              f"g={float(g_last):+.4f} sigma={float(s_last):.2f} "
               f"({(time.time()-t0)/(done-start_round):.2f}s/round)")
         if args.ckpt_dir:
             from repro import checkpoint

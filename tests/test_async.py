@@ -1,0 +1,363 @@
+"""Async buffered-round tests (ISSUE 4, DESIGN.md §Async).
+
+* buffer-disabled bit-parity: ``async_drive`` == the synchronous ``drive``
+  for every strategy x compressor kind x participation mode (plus the
+  packed/pallas wire backends, the markov sampler, and an in-jit
+  provisioned Fleet),
+* staleness-weight unbiasedness under the constant law: delayed delivery
+  conserves Horvitz-Thompson mass exactly (nothing lost, nothing double
+  counted), and a preloaded buffer slot contributes exactly
+  ``lambda * w_origin * decompress(payload) / m`` to the server step,
+* a Markov-chain integration run where clients depart mid-round and every
+  buffered update lands (or drops) within max_staleness rounds.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import (AsyncConfig, CompressorConfig, FedConfig,
+                                FleetConfig, SwitchConfig)
+from repro.engine import async_rounds, participation, rounds, strategies
+from repro.fleet import provision, samplers
+from repro.tasks import np_classification as npc
+
+EPS = 0.35
+N = 8
+
+KINDS = {
+    "none": CompressorConfig(kind="none"),
+    "topk": CompressorConfig(kind="topk", ratio=0.25, block=8),
+    "randk": CompressorConfig(kind="randk", ratio=0.25, block=8),
+    "quant": CompressorConfig(kind="quant", bits=8, block=8),
+    "natural": CompressorConfig(kind="natural"),
+}
+STRATS = ("fedsgm", "fedsgm-soft", "penalty-fedavg")
+MODES = ("mask", "gather")
+
+
+@pytest.fixture(scope="module")
+def np_data():
+    key = jax.random.PRNGKey(0)
+    (xs, ys), _ = npc.make_dataset(key, n_clients=N)
+    return xs, ys
+
+
+@pytest.fixture(scope="module")
+def params(np_data):
+    xs, _ = np_data
+    return npc.init_params(jax.random.PRNGKey(1), xs.shape[-1])
+
+
+def _cfg(**kw):
+    base = dict(n_clients=N, m=4, local_steps=2, lr=0.1,
+                switch=SwitchConfig(mode="hard", eps=EPS),
+                uplink=CompressorConfig(kind="none"),
+                downlink=CompressorConfig(kind="none"))
+    base.update(kw)
+    return FedConfig(**base)
+
+
+def _async(**kw):
+    base = dict(enabled=True, max_staleness=3, staleness="constant",
+                depart=0.5)
+    base.update(kw)
+    return AsyncConfig(**base)
+
+
+def _assert_trees_equal(a, b):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def _parity(cfg, params, batches, T=2):
+    """drive vs async_drive (buffer disabled) must agree bit-for-bit."""
+    state = rounds.init_state(params, cfg)
+    s_sync, h_sync = rounds.drive(state, batches, npc.loss_pair, cfg, T=T)
+    s_async, buf, h_async = async_rounds.async_drive(
+        state, batches, npc.loss_pair, cfg, T=T)
+    assert buf is None                    # no buffer leaves at parity point
+    _assert_trees_equal(s_sync, s_async)
+    _assert_trees_equal(h_sync, h_async.round)
+    # nominal async metrics: everything fresh, nothing buffered
+    assert np.all(np.asarray(h_async.fresh) == cfg.m)
+    assert np.all(np.asarray(h_async.occupancy) == 0)
+
+
+class TestDisabledParity:
+    @pytest.mark.parametrize("mode", MODES)
+    @pytest.mark.parametrize("strategy", STRATS)
+    @pytest.mark.parametrize("kind", sorted(KINDS))
+    def test_bit_for_bit(self, np_data, params, strategy, kind, mode):
+        comp = KINDS[kind]
+        _parity(_cfg(strategy=strategy, uplink=comp, downlink=comp,
+                     participation=mode), params, np_data)
+
+    @pytest.mark.parametrize("comm", ("packed", "pallas"))
+    def test_wire_backends(self, np_data, params, comm):
+        _parity(_cfg(comm=comm,
+                     uplink=CompressorConfig(kind="topk", ratio=0.25, block=8),
+                     downlink=CompressorConfig(kind="quant", bits=8, block=8)),
+                params, np_data)
+
+    @pytest.mark.parametrize("sampler", ("weighted", "markov"))
+    def test_samplers(self, np_data, params, sampler):
+        _parity(_cfg(uplink=KINDS["topk"],
+                     fleet=FleetConfig(sampler=sampler, avail_stay=0.8,
+                                       avail_return=0.5)),
+                params, np_data, T=3)
+
+    @pytest.mark.parametrize("mode", MODES)
+    def test_provisioned_fleet(self, np_data, params, mode):
+        """In-jit fleet provisioning under the async driver stays parity."""
+        fleet = provision.from_stacked(np_data)
+        _parity(_cfg(participation=mode, uplink=KINDS["quant"],
+                     fleet=FleetConfig(batch_size=8, redraw=True)),
+                params, fleet)
+
+
+class TestStalenessLaws:
+    def test_registry(self):
+        assert set(async_rounds.staleness_law_names()) >= {
+            "constant", "poly", "constraint"}
+        with pytest.raises(ValueError, match="unknown staleness law"):
+            async_rounds.get_staleness_law("exponential")
+
+    def test_constant_is_one(self):
+        cfg = _cfg(async_=_async())
+        law = async_rounds.get_staleness_law("constant")
+        s = jnp.asarray([1.0, 3.0, 10.0])
+        np.testing.assert_array_equal(
+            np.asarray(law(s, jnp.zeros(3), jnp.zeros(()), cfg)), 1.0)
+
+    def test_poly_decays(self):
+        cfg = _cfg(async_=_async(staleness="poly", decay=1.0))
+        law = async_rounds.get_staleness_law("poly")
+        s = jnp.asarray([1.0, 2.0, 4.0])
+        lam = np.asarray(law(s, jnp.zeros(3), jnp.zeros(()), cfg))
+        np.testing.assert_allclose(lam, [0.5, 1 / 3, 0.2])
+        assert np.all(np.diff(lam) < 0)
+
+    def test_constraint_law_phase_asymmetry(self):
+        """Near the boundary, stale objective-phase (sigma=0) payloads decay
+        strictly harder than constraint-phase (sigma=1) ones; far from the
+        boundary both reduce to the plain polynomial law."""
+        cfg = _cfg(async_=_async(staleness="constraint", decay=1.0))
+        law = async_rounds.get_staleness_law("constraint")
+        s = jnp.asarray(3.0)
+        at_boundary = jnp.asarray(EPS)        # g_hat == eps
+        far = jnp.asarray(EPS + 100.0)
+        obj_near = float(law(s, jnp.asarray(0.0), at_boundary, cfg))
+        con_near = float(law(s, jnp.asarray(1.0), at_boundary, cfg))
+        poly = float(async_rounds.get_staleness_law("poly")(
+            s, jnp.asarray(0.0), at_boundary, cfg))
+        assert obj_near < con_near
+        np.testing.assert_allclose(con_near, poly, rtol=1e-6)
+        np.testing.assert_allclose(
+            float(law(s, jnp.asarray(0.0), far, cfg)), poly, rtol=1e-4)
+
+    def test_penalty_strategy_forces_phase_agnostic_law(self):
+        """penalty-fedavg has no switching phases: its staleness_weight
+        degrades 'constraint' to 'poly' (and keeps 'constant' constant)."""
+        cfg = _cfg(strategy="penalty-fedavg",
+                   async_=_async(staleness="constraint", decay=1.0))
+        strat = strategies.get_strategy("penalty-fedavg")
+        s = jnp.asarray(2.0)
+        got = float(strat.staleness_weight(s, jnp.asarray(0.0),
+                                           jnp.asarray(EPS), cfg))
+        poly = float(async_rounds.get_staleness_law("poly")(
+            s, jnp.asarray(0.0), jnp.asarray(EPS), cfg))
+        np.testing.assert_allclose(got, poly)
+
+
+class TestConstantLawUnbiasedness:
+    def test_mass_conservation(self, np_data, params):
+        """Under the constant law, delayed delivery conserves HT mass
+        exactly: every departed payload's weight either re-enters through
+        exactly one later merge or is *counted* as dropped (expiry is
+        impossible at max_staleness=100; a re-departing client overwriting
+        its still-parked slot is the only drop source) -- nothing lost,
+        nothing double counted, so the estimator keeps the synchronous HT
+        expectation in the Cesaro sense up to the counted drop mass."""
+        cfg = _cfg(uplink=KINDS["topk"],
+                   async_=_async(max_staleness=100, depart=0.6))
+        state = rounds.init_state(params, cfg)
+        _, buf, h = async_rounds.async_drive(
+            state, np_data, npc.loss_pair, cfg, T=12)
+        assert float(h.departed.sum()) > 0          # the run exercised it
+        assert float(h.merged.sum()) > 0
+        # count conservation
+        np.testing.assert_allclose(
+            h.departed.sum(),
+            h.merged.sum() + h.dropped.sum() + float(jnp.sum(buf.occupied)))
+        # HT-mass conservation (lambda == 1: stale_weight is origin mass)
+        np.testing.assert_allclose(
+            h.departed_weight.sum(),
+            h.stale_weight.sum() + h.dropped_weight.sum()
+            + float(jnp.sum(buf.weight * buf.occupied)),
+            rtol=1e-6)
+        # fresh fraction: every sampled, non-departed client merged with its
+        # untouched HT weight (uniform law: weight 1 each)
+        np.testing.assert_allclose(np.asarray(h.fresh_weight),
+                                   np.asarray(h.fresh))
+        # the default rejoin law actually ages payloads (staleness alive)
+        assert float(np.max(np.asarray(h.max_age))) >= 1.0
+
+    def test_preloaded_slot_merges_exact_law(self, np_data, params):
+        """A hand-loaded buffer slot shifts the server step by exactly
+        lambda * w_origin * payload / m (identity transport: the payload is
+        the dense delta)."""
+        cfg = _cfg(async_=_async(depart=0.0, staleness="constant",
+                                 rejoin=1.0))
+        state = rounds.init_state(params, cfg)
+        buf0 = async_rounds.init_buffer(state.w, cfg)
+        payload = jax.tree_util.tree_map(
+            lambda l: jnp.zeros((N,) + l.shape, l.dtype), state.w)
+        payload = {"w": payload["w"].at[2].set(1.0),
+                   "b": payload["b"].at[2].set(2.0)}
+        w_origin = 1.0
+        loaded = buf0._replace(
+            msgs=payload,
+            occupied=buf0.occupied.at[2].set(1.0),
+            weight=buf0.weight.at[2].set(w_origin),
+            origin=buf0.origin.at[2].set(-1))       # age 1 at t=0
+        step = jax.jit(lambda s, b: async_rounds.async_round_step(
+            s, b, np_data, npc.loss_pair, cfg))
+        s_empty, _, _ = step(state, buf0)
+        s_load, buf1, mets = step(state, loaded)
+        assert float(mets.merged) == 1.0
+        assert float(jnp.sum(buf1.occupied)) == 0.0
+        # server_update: x' = x - lr * v_bar, so the slot's contribution to
+        # w is -lr * w_origin * payload / m (downlink 'none': w == x)
+        for leaf, p in (("w", payload["w"][2]), ("b", payload["b"][2])):
+            np.testing.assert_allclose(
+                np.asarray(s_load.w[leaf] - s_empty.w[leaf]),
+                np.asarray(-cfg.lr * w_origin * p / cfg.m),
+                rtol=1e-5, atol=1e-7)
+
+
+class TestMarkovIntegration:
+    def test_departed_updates_land_within_max_staleness(self, np_data,
+                                                        params):
+        """Clients depart mid-round per the availability chain; each parked
+        payload merges at the client's first arrival or drops -- and no
+        buffer entry ever outlives max_staleness rounds."""
+        ms = 3
+        cfg = _cfg(uplink=KINDS["topk"], m=5,
+                   fleet=FleetConfig(sampler="markov", avail_stay=0.6,
+                                     avail_return=0.5),
+                   async_=_async(max_staleness=ms))
+        state = rounds.init_state(params, cfg)
+        _, buf, h = async_rounds.async_drive(
+            state, np_data, npc.loss_pair, cfg, T=24)
+        dep, mer, dro = (float(h.departed.sum()), float(h.merged.sum()),
+                         float(h.dropped.sum()))
+        assert dep > 0 and mer > 0                  # chain exercised both
+        # every departure resolves: merged, dropped, or still parked
+        np.testing.assert_allclose(
+            dep, mer + dro + float(jnp.sum(buf.occupied)))
+        # the landing bound: post-round, no occupied entry is older than
+        # max_staleness - 1, so a payload merges or drops by age ms
+        assert np.all(np.asarray(h.max_age) <= ms - 1)
+        np.testing.assert_allclose(
+            h.departed_weight.sum(),
+            h.stale_weight.sum() + h.dropped_weight.sum()
+            + float(jnp.sum(buf.weight * buf.occupied)), rtol=1e-6)
+
+    def test_down_but_sampled_always_departs(self):
+        """A sampled client whose chain is down (the fewer-than-m
+        fallback) can never reach the barrier: it departs with probability
+        1 even at avail_stay=1, keeping the availability model
+        self-consistent."""
+        cfg = _cfg(fleet=FleetConfig(sampler="markov", avail_stay=1.0,
+                                     avail_return=0.0),
+                   async_=_async())
+        samp = samplers.get_sampler("markov")
+        mask = jnp.ones((N,), jnp.float32)
+        down = jnp.zeros((N,), jnp.float32)
+        ev, _ = samp.events(jax.random.PRNGKey(0), cfg, mask, down)
+        np.testing.assert_array_equal(np.asarray(ev.depart), 1.0)
+
+    def test_availability_feedback(self):
+        """A mid-round departure is a chain transition: the departing
+        client starts the next round unavailable."""
+        cfg = _cfg(fleet=FleetConfig(sampler="markov", avail_stay=0.0,
+                                     avail_return=0.0),
+                   async_=_async())
+        samp = samplers.get_sampler("markov")
+        mask = jnp.ones((N,), jnp.float32)
+        avail = jnp.ones((N,), jnp.float32)
+        ev, state_out = samp.events(jax.random.PRNGKey(0), cfg, mask, avail)
+        np.testing.assert_array_equal(np.asarray(ev.depart), 1.0)
+        np.testing.assert_array_equal(np.asarray(state_out), 0.0)
+        np.testing.assert_array_equal(np.asarray(ev.arrive), 0.0)
+
+
+class TestEventsAPI:
+    def test_default_events_support(self):
+        cfg = _cfg(async_=_async(depart=1.0, rejoin=1.0))
+        samp = samplers.get_sampler("uniform")
+        mask = (jnp.arange(N) < 3).astype(jnp.float32)
+        ev, _ = samp.events(jax.random.PRNGKey(3), cfg, mask, None)
+        np.testing.assert_array_equal(np.asarray(ev.depart),
+                                      np.asarray(mask))   # p=1: all sampled
+        np.testing.assert_array_equal(np.asarray(ev.arrive), 1.0)
+        ev, _ = samp.events(jax.random.PRNGKey(3),
+                            _cfg(async_=_async(rejoin=0.0)), mask, None)
+        np.testing.assert_array_equal(np.asarray(ev.arrive), 0.0)
+
+    def test_zero_depart_probability(self):
+        cfg = _cfg(async_=_async(depart=0.0))
+        samp = samplers.get_sampler("uniform")
+        ev, _ = samp.events(jax.random.PRNGKey(3), cfg,
+                            jnp.ones((N,), jnp.float32), None)
+        np.testing.assert_array_equal(np.asarray(ev.depart), 0.0)
+
+
+class TestBufferPlumbing:
+    def test_disabled_has_no_buffer(self, params):
+        assert async_rounds.init_buffer(params, _cfg()) is None
+
+    @pytest.mark.parametrize("comm,kind", (("dense", "topk"),
+                                           ("packed", "topk"),
+                                           ("packed", "quant")))
+    def test_buffer_stores_wire_format(self, params, comm, kind):
+        """Buffer message leaves have the uplink transport's wire shapes
+        ([n] leading) -- compressed payloads on the packed wire, not dense
+        deltas."""
+        from repro.comm.payloads import PackedLeaf, QuantPayload
+        cfg = _cfg(comm=comm, uplink=KINDS[kind], async_=_async())
+        buf = async_rounds.init_buffer(params, cfg)
+        for leaf in jax.tree_util.tree_leaves(buf.msgs):
+            assert leaf.shape[0] == N
+        if comm == "packed":
+            flat = jax.tree_util.tree_flatten(
+                buf.msgs, is_leaf=lambda x: isinstance(
+                    x, (PackedLeaf, QuantPayload)))[0]
+            assert any(isinstance(x, (PackedLeaf, QuantPayload))
+                       for x in flat)
+        assert float(jnp.sum(buf.occupied)) == 0.0
+
+    def test_async_drive_block_offload_equal(self, np_data, params):
+        cfg = _cfg(uplink=KINDS["quant"], async_=_async(depart=0.4))
+        state = rounds.init_state(params, cfg)
+        s1, b1, h1 = async_rounds.async_drive(
+            state, np_data, npc.loss_pair, cfg, T=5)
+        s2, b2, h2 = async_rounds.async_drive(
+            state, np_data, npc.loss_pair, cfg, T=5, block=2)
+        _assert_trees_equal((s1, b1, h1), (s2, b2, h2))
+
+    def test_compose_weights(self):
+        part = participation.Participation(
+            jnp.asarray([1, 0, 1, 1], jnp.float32), None, 4, 3,
+            jnp.asarray([2.0, 0.0, 1.0, 1.0]))
+        out = participation.compose_weights(
+            part, jnp.asarray([1.0, 1.0, 0.0, 1.0]))
+        np.testing.assert_array_equal(np.asarray(out.weights),
+                                      [2.0, 0.0, 0.0, 1.0])
+        np.testing.assert_array_equal(np.asarray(out.mask),
+                                      np.asarray(part.mask))

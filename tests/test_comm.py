@@ -298,8 +298,13 @@ class TestRoundStepIntegration:
             assert np.isfinite(float(mets.f)), comm_mode
 
     def test_round_step_has_no_compressor_branching(self):
-        """Acceptance guard: kind/blockwise dispatch lives in repro.comm."""
-        src = inspect.getsource(fedsgm.round_step)
+        """Acceptance guard: kind/blockwise dispatch lives in repro.comm.
+        The synchronous round is composed of round_step + the shared
+        finish_round tail (engine.rounds); across the composition there is
+        exactly one uplink and one downlink call site."""
+        from repro.engine import rounds as engine_rounds
+        src = (inspect.getsource(fedsgm.round_step)
+               + inspect.getsource(engine_rounds.finish_round))
         assert "blockwise" not in src
         assert ".kind" not in src
         assert src.count(".transmit(") == 1

@@ -1,0 +1,121 @@
+#!/usr/bin/env python
+"""Markdown link check (CI job ``docs-lint``): every relative link and
+intra-repo anchor in the repo's markdown files must resolve.
+
+* relative path targets (``[x](docs/api.md)``, ``[x](../README.md)``) must
+  exist on disk, resolved against the linking file's directory;
+* anchor targets (``[x](DESIGN.md#async...)``, ``[x](#local-anchor)``)
+  must match a heading slug of the target file (GitHub slugification:
+  lowercase, punctuation stripped, spaces -> hyphens);
+* absolute URLs (http/https/mailto) are *not* fetched -- this is an
+  offline structural check.
+
+    python tools/check_links.py [paths...]    # default: tracked *.md
+"""
+from __future__ import annotations
+
+import re
+import subprocess
+import sys
+from pathlib import Path
+
+LINK_RE = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+HEADING_RE = re.compile(r"^(#{1,6})\s+(.*)$")
+CODE_FENCE_RE = re.compile(r"^(```|~~~)")
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug for a heading line."""
+    text = re.sub(r"`([^`]*)`", r"\1", heading.strip())     # drop code ticks
+    text = text.lower()
+    text = re.sub(r"[^\w\- ]", "", text)        # strip punctuation (keeps _-)
+    return text.replace(" ", "-")
+
+
+def headings_of(path: Path) -> set:
+    slugs: dict = {}
+    out = set()
+    in_fence = False
+    for line in path.read_text(encoding="utf-8").splitlines():
+        if CODE_FENCE_RE.match(line):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        m = HEADING_RE.match(line)
+        if not m:
+            continue
+        slug = github_slug(m.group(2))
+        n = slugs.get(slug, 0)
+        slugs[slug] = n + 1
+        out.add(slug if n == 0 else f"{slug}-{n}")
+    return out
+
+
+def links_of(path: Path):
+    in_fence = False
+    for lineno, line in enumerate(
+            path.read_text(encoding="utf-8").splitlines(), 1):
+        if CODE_FENCE_RE.match(line):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        for m in LINK_RE.finditer(line):
+            yield lineno, m.group(1)
+
+
+def check_file(path: Path, root: Path) -> list:
+    errors = []
+    for lineno, target in links_of(path):
+        if re.match(r"^[a-z][a-z0-9+.-]*:", target):    # http:, mailto:, ...
+            continue
+        raw, _, anchor = target.partition("#")
+        dest = path if not raw else (path.parent / raw).resolve()
+        loc = f"{path.relative_to(root)}:{lineno}"
+        if raw:
+            if not dest.is_relative_to(root):
+                errors.append(f"{loc}: link escapes the repo -> {target}")
+                continue
+            if not dest.exists():
+                errors.append(f"{loc}: broken link -> {target} "
+                              f"(no such file {raw})")
+                continue
+        if anchor and dest.suffix == ".md":
+            if anchor not in headings_of(dest):
+                errors.append(f"{loc}: broken anchor -> {target} "
+                              f"(no heading #{anchor} in "
+                              f"{dest.relative_to(root)})")
+    return errors
+
+
+def tracked_markdown(root: Path) -> list:
+    try:
+        out = subprocess.run(
+            ["git", "ls-files", "--cached", "--others",
+             "--exclude-standard", "*.md", "**/*.md"],
+            cwd=root, capture_output=True, text=True,
+            check=True).stdout.split()
+        if out:
+            return sorted({root / p for p in out})
+    except (subprocess.CalledProcessError, FileNotFoundError):
+        pass
+    return sorted(root.glob("**/*.md"))
+
+
+def main(argv) -> int:
+    root = Path(__file__).resolve().parent.parent
+    files = ([Path(a).resolve() for a in argv]
+             if argv else tracked_markdown(root))
+    errors = []
+    for f in files:
+        errors += check_file(f, root)
+    for e in errors:
+        print(e)
+    print(f"checked {len(files)} markdown files: "
+          f"{'FAIL (' + str(len(errors)) + ' broken)' if errors else 'ok'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
