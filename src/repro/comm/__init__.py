@@ -5,16 +5,21 @@ three backends (ref/packed/pallas).  ``fedsgm.round_step`` talks to this
 package through exactly two call sites: ``uplink.transmit(...)`` and
 ``downlink.broadcast(...)``.  See DESIGN.md §Transport.
 """
-from repro.comm.payloads import (PackedLeaf, QuantPayload, block_geometry,
-                                 choose_block, packed_bytes,
-                                 payload_wire_bytes)
+from repro.comm.payloads import (FlatPacked, FlatQuant, PackedLeaf,
+                                 QuantPayload, block_geometry, choose_block,
+                                 pack_codes, packed_bytes,
+                                 payload_wire_bytes, unpack_codes)
 from repro.comm.transports import (BACKENDS, Transport, backend_for,
                                    get_transport, mask_where, masked_mean,
                                    register, scatter_rows, transport_kinds)
+from repro.comm.flat import (FlatSpec, FlatTransport, flat_transports_for,
+                             flatten, spec_of, unflatten, wire_layout)
 
 __all__ = [
-    "BACKENDS", "PackedLeaf", "QuantPayload", "Transport", "backend_for",
-    "block_geometry", "choose_block", "get_transport", "mask_where",
-    "masked_mean", "packed_bytes", "payload_wire_bytes", "register",
-    "scatter_rows", "transport_kinds",
+    "BACKENDS", "FlatPacked", "FlatQuant", "FlatSpec", "FlatTransport",
+    "PackedLeaf", "QuantPayload", "Transport", "backend_for",
+    "block_geometry", "choose_block", "flat_transports_for", "flatten",
+    "get_transport", "mask_where", "masked_mean", "pack_codes",
+    "packed_bytes", "payload_wire_bytes", "register", "scatter_rows",
+    "spec_of", "transport_kinds", "unflatten", "unpack_codes",
 ]

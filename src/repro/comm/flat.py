@@ -1,0 +1,656 @@
+"""The flat hot path: contiguous parameter buffers + flat wire codecs.
+
+Why this layer exists (DESIGN.md §Hotpath): the engine round used to run
+every elementwise stage -- the E-local-step updates, the per-client delta,
+the EF14 residual arithmetic, the server step -- as a ``tree_map`` over the
+model pytree, i.e. one kernel launch per leaf per client per step, and the
+packed-wire aggregation decompressed clients one at a time in a sequential
+``lax.scan``.  This module flattens the model ONCE into a contiguous ``[d]``
+buffer with static slice metadata and gives the engine:
+
+* :class:`FlatSpec` / :func:`flatten` / :func:`unflatten` -- the
+  pytree <-> ``[d]`` isomorphism.  ``unflatten`` is slices + reshapes (+ a
+  dtype cast only for mixed-dtype trees), so ``loss_pair`` still sees the
+  exact leaf arrays; every elementwise stage becomes ONE fused operation
+  over the buffer, and the uplink EF residual is a single ``[n, d]`` array
+  instead of n stacked pytrees,
+* :func:`tree_norm` / :func:`project_ball` -- flat norms that reduce each
+  leaf *slice* separately (reshaped to the leaf's own shape) and add the
+  partials in tree order, so results are bit-for-bit the per-leaf
+  ``optim.sgd`` reductions,
+* :class:`WireLayout` -- static per-leaf block geometry (offsets, block
+  sizes, top-k slots, packed-word counts) with consecutive same-geometry
+  leaves merged into *runs*: one pack / kernel call per run instead of per
+  leaf x client,
+* :class:`FlatTransport` -- the flat mirror of :class:`repro.comm.Transport`
+  (same ``encode`` / ``reduce`` / ``transmit`` / ``broadcast`` contract, so
+  ``engine.participation`` dispatches to it unchanged) with the flat wire
+  formats: :class:`FlatPacked` (values + uint16 within-block offsets) for
+  the select kinds and :class:`FlatQuant` (b-bit codes bit-packed into
+  uint32 words) for the quantizer, and *client-parallel payload-domain
+  aggregation* -- a single scatter-add (select) or unpack-multiply-add
+  contraction (quant) over the ``[d]`` accumulator replaces the sequential
+  per-client scan.
+
+Parity contract: the dense wire (``comm='dense'``) routes the compressor
+math through the per-leaf tree operators, so dense-path trajectories are
+bit-for-bit the pre-flat engine's; the packed/pallas wires reuse the exact
+per-leaf block geometry of the tree packed path (codes / indices round-trip
+exactly -- only the aggregation's summation order differs, hence allclose).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.comm import payloads, transports
+from repro.comm.payloads import (FlatPacked, FlatQuant, INDEX_DTYPE,
+                                 choose_block, pack_codes, unpack_codes,
+                                 words_per_block, _SORT_FREE_MIN)
+from repro.configs.base import CompressorConfig
+from repro.sharding import partition
+
+tree_map = jax.tree_util.tree_map
+
+
+# ---------------------------------------------------------------------------
+# FlatSpec: the pytree <-> [d] isomorphism
+# ---------------------------------------------------------------------------
+
+class LeafSpec(NamedTuple):
+    shape: tuple            # original leaf shape (possibly ())
+    dtype: str              # original leaf dtype name
+    offset: int             # start in the flat buffer
+    size: int               # number of elements
+
+
+class FlatSpec(NamedTuple):
+    """Static metadata of one flattening.  Hashable (treedef + leaf specs),
+    so jitted closures capturing a spec retrace only on structure change."""
+    treedef: object
+    leaves: tuple           # tuple[LeafSpec]
+    d: int
+    dtype: str              # buffer dtype: the leaves' common promotion
+                            # (exact for bf16/f16 sub-lattices of f32)
+
+
+_SPEC_CACHE: dict = {}
+
+
+def spec_of(tree) -> FlatSpec:
+    """The :class:`FlatSpec` for ``tree`` (cached by structure)."""
+    flat, treedef = jax.tree_util.tree_flatten(tree)
+    sig = (treedef, tuple((tuple(l.shape), str(jnp.dtype(l.dtype)))
+                          for l in flat))
+    hit = _SPEC_CACHE.get(sig)
+    if hit is not None:
+        return hit
+    if len(_SPEC_CACHE) > 256:
+        _SPEC_CACHE.clear()
+    specs, off = [], 0
+    for l in flat:
+        size = int(np.prod(l.shape, dtype=np.int64)) if len(l.shape) else 1
+        specs.append(LeafSpec(tuple(l.shape), str(jnp.dtype(l.dtype)),
+                              off, size))
+        off += size
+    dtype = str(jnp.result_type(*[jnp.dtype(l.dtype) for l in flat])) \
+        if flat else "float32"
+    spec = FlatSpec(treedef, tuple(specs), off, dtype)
+    _SPEC_CACHE[sig] = spec
+    return spec
+
+
+def flatten(spec: FlatSpec, tree) -> jnp.ndarray:
+    """Pytree -> contiguous buffer.  Extra *leading* axes shared by every
+    leaf (a stacked [n, ...] tree) are preserved: output is [*lead, d]."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    if len(leaves) != len(spec.leaves):
+        raise ValueError(
+            f"flatten: tree has {len(leaves)} leaves but the FlatSpec "
+            f"records {len(spec.leaves)} -- not the spec'd structure "
+            "(payload pytrees cannot be flattened as dense buffers)")
+    out = []
+    for l, ls in zip(leaves, spec.leaves):
+        lead = l.shape[:l.ndim - len(ls.shape)]
+        out.append(l.astype(spec.dtype).reshape(lead + (ls.size,)))
+    return jnp.concatenate(out, axis=-1) if len(out) > 1 else out[0]
+
+
+def unflatten(spec: FlatSpec, flat: jnp.ndarray):
+    """Buffer [*lead, d] -> pytree with leaf shapes [*lead, *leaf_shape].
+    Slices + reshapes (a dtype cast only when the tree mixes dtypes)."""
+    lead = flat.shape[:-1]
+    leaves = []
+    for ls in spec.leaves:
+        part = flat[..., ls.offset:ls.offset + ls.size]
+        leaves.append(part.reshape(lead + ls.shape).astype(ls.dtype))
+    return jax.tree_util.tree_unflatten(spec.treedef, leaves)
+
+
+def tree_norm(spec: FlatSpec, flat: jnp.ndarray) -> jnp.ndarray:
+    """sqrt(sum ||leaf||^2): bit-for-bit :func:`repro.optim.sgd.tree_norm`
+    of the unflattened tree -- each slice reduces in its own leaf shape and
+    the partials add in tree order (a single flat sum associates
+    differently)."""
+    parts = [jnp.sum(jnp.square(
+        flat[ls.offset:ls.offset + ls.size].reshape(ls.shape)
+        .astype(jnp.float32))) for ls in spec.leaves]
+    return jnp.sqrt(sum(parts))
+
+
+def project_ball(spec: FlatSpec, flat: jnp.ndarray, radius: float):
+    """Flat mirror of :func:`repro.optim.sgd.project_ball` (bit-parity via
+    :func:`tree_norm`)."""
+    if not radius:
+        return flat
+    nrm = tree_norm(spec, flat)
+    scale = jnp.minimum(1.0, radius / jnp.maximum(nrm, 1e-12))
+    return flat * scale
+
+
+def struct_tree(spec: FlatSpec):
+    """ShapeDtypeStruct pytree of the unflattened model (for tree-transport
+    wire-bytes delegation and eval_shape plumbing)."""
+    leaves = [jax.ShapeDtypeStruct(ls.shape, jnp.dtype(ls.dtype))
+              for ls in spec.leaves]
+    return jax.tree_util.tree_unflatten(spec.treedef, leaves)
+
+
+# ---------------------------------------------------------------------------
+# WireLayout: static block geometry over the flat buffer
+# ---------------------------------------------------------------------------
+
+class LeafWire(NamedTuple):
+    offset: int             # flat offset of the leaf
+    lead: int               # product of leading dims (blocks run last-axis)
+    D: int                  # last-axis size
+    block: int              # chosen block size
+    nblocks: int            # lead * (D // block)
+    k: int                  # select kinds: slots per block
+    sort_free: bool         # giant leaf: threshold selection regime
+
+
+class RunSpec(NamedTuple):
+    """A maximal run of consecutive leaves sharing (block, k, regime): one
+    contiguous flat span processed as a single [nblocks, block] view."""
+    offset: int
+    span: int
+    block: int
+    nblocks: int
+    k: int
+    sort_free: bool
+    koff: int               # cumulative slot offset in the payload
+    boff: int               # cumulative block offset (quant scales)
+    woff: int               # cumulative word offset (quant words)
+    W: int                  # words per block
+
+
+class WireLayout(NamedTuple):
+    leaves: tuple           # tuple[LeafWire]
+    runs: tuple             # tuple[RunSpec]
+    K_total: int
+    NB_total: int
+    W_total: int
+
+
+_LAYOUT_CACHE: dict = {}
+
+
+def wire_layout(spec: FlatSpec, cfg: CompressorConfig) -> WireLayout:
+    sig = (spec, cfg)
+    hit = _LAYOUT_CACHE.get(sig)
+    if hit is not None:
+        return hit
+    if len(_LAYOUT_CACHE) > 256:
+        _LAYOUT_CACHE.clear()
+    bits = cfg.bits if cfg.kind == "quant" else 8
+    pw_bits = bits if bits in payloads.PACK_BITS else 8
+    lws = []
+    for ls in spec.leaves:
+        D = ls.shape[-1] if len(ls.shape) else 1
+        lead = ls.size // D
+        b = choose_block(D, cfg.block, cfg.shards)
+        k = max(1, min(b, int(round(b * cfg.ratio))))
+        lws.append(LeafWire(ls.offset, lead, D, b, lead * (D // b), k,
+                            ls.size > _SORT_FREE_MIN))
+    runs, koff, boff, woff = [], 0, 0, 0
+    for lw in lws:
+        W = words_per_block(lw.block, pw_bits)
+        if runs and runs[-1].block == lw.block and runs[-1].k == lw.k \
+                and runs[-1].sort_free == lw.sort_free:
+            r = runs[-1]
+            runs[-1] = r._replace(span=r.span + lw.lead * lw.D,
+                                  nblocks=r.nblocks + lw.nblocks)
+        else:
+            runs.append(RunSpec(lw.offset, lw.lead * lw.D, lw.block,
+                                lw.nblocks, lw.k, lw.sort_free,
+                                koff, boff, woff, W))
+        koff += lw.nblocks * lw.k
+        boff += lw.nblocks
+        woff += lw.nblocks * W
+    out = WireLayout(tuple(lws), tuple(runs), koff, boff, woff)
+    _LAYOUT_CACHE[sig] = out
+    return out
+
+
+_BASE_CACHE: dict = {}
+
+
+def base_positions(layout: WireLayout) -> jnp.ndarray:
+    """[K_total] int32: flat position of slot t's block start -- the static
+    half of the payload-domain scatter (``pos = base + within_block_idx``)."""
+    hit = _BASE_CACHE.get(layout)
+    if hit is None:
+        if len(_BASE_CACHE) > 64:
+            _BASE_CACHE.clear()
+        parts = [np.repeat(r.offset + np.arange(r.nblocks, dtype=np.int64)
+                           * r.block, r.k) for r in layout.runs]
+        # cache host-side: a device array created under a trace would leak
+        # its tracer into later jit scopes
+        hit = _BASE_CACHE[layout] = np.concatenate(parts).astype(np.int32)
+    return jnp.asarray(hit)
+
+
+def _run_view(flat: jnp.ndarray, r: RunSpec) -> jnp.ndarray:
+    """[*lead, span] slice reshaped to [*lead, nblocks, block]."""
+    lead = flat.shape[:-1]
+    return flat[..., r.offset:r.offset + r.span].reshape(
+        lead + (r.nblocks, r.block))
+
+
+# ---------------------------------------------------------------------------
+# Flat wire codecs (one per packed payload format)
+# ---------------------------------------------------------------------------
+
+class _SelectCodec:
+    """FlatPacked (values + uint16 offsets) for the block-select kinds."""
+
+    per_client_keys = False
+    fused_ef = False
+
+    def __init__(self, cfg: CompressorConfig, spec: FlatSpec,
+                 layout: WireLayout, pallas: bool = False):
+        self.cfg, self.spec, self.layout, self.pallas = \
+            cfg, spec, layout, pallas
+
+    def pack(self, buf: jnp.ndarray, key=None) -> FlatPacked:
+        """[*lead, d] -> FlatPacked [*lead, K_total]; one selection op (or
+        one ``topk_block`` kernel launch) per run, the client axis folded
+        into the run's block rows."""
+        lead = buf.shape[:-1]
+        vs, js = [], []
+        for r in self.layout.runs:
+            blocks = _run_view(buf, r)
+            if self.pallas and r.k < r.block:
+                from repro.kernels.topk_block import block_topk
+                vals, idx = block_topk(blocks.reshape(-1, r.block), r.k)
+                vals = vals.reshape(lead + (r.nblocks, r.k))
+                idx = idx.reshape(lead + (r.nblocks, r.k)).astype(INDEX_DTYPE)
+            else:
+                vals, idx = payloads.select_topk_blocks(blocks, r.k,
+                                                        r.sort_free)
+            vs.append(vals.reshape(lead + (r.nblocks * r.k,)))
+            js.append(idx.reshape(lead + (r.nblocks * r.k,)))
+        cat = (lambda xs: xs[0] if len(xs) == 1
+               else jnp.concatenate(xs, axis=-1))
+        return FlatPacked(cat(vs), cat(js))
+
+    def decode(self, p: FlatPacked) -> jnp.ndarray:
+        """FlatPacked -> dense [*lead, d] (zeros off-support)."""
+        lead = p.values.shape[:-1]
+        outs = []
+        for r in self.layout.runs:
+            sl = slice(r.koff, r.koff + r.nblocks * r.k)
+            vals = p.values[..., sl].reshape(lead + (r.nblocks, r.k))
+            idx = p.indices[..., sl].reshape(lead + (r.nblocks, r.k))
+            dense = jnp.zeros(lead + (r.nblocks, r.block), p.values.dtype)
+            dense = jnp.put_along_axis(dense, idx.astype(jnp.int32), vals,
+                                       axis=-1, inplace=False)
+            outs.append(dense.reshape(lead + (r.span,)))
+        return outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=-1)
+
+    def reduce(self, p: FlatPacked, weights: jnp.ndarray, m) -> jnp.ndarray:
+        """Client-parallel payload-domain aggregation: ONE weighted
+        scatter-add of every client's (value, position) stream into the [d]
+        accumulator -- no sequential per-client dense decompression."""
+        pos = base_positions(self.layout)[None, :] \
+            + p.indices.astype(jnp.int32)
+        wv = p.values * weights[:, None].astype(p.values.dtype)
+        acc = jnp.zeros((self.spec.d,), p.values.dtype)
+        acc = acc.at[pos.reshape(-1)].add(wv.reshape(-1))
+        return acc / m
+
+    def wire_bytes(self) -> int:
+        itemsize = jnp.dtype(self.spec.dtype).itemsize
+        return int(self.layout.K_total
+                   * (itemsize + jnp.dtype(INDEX_DTYPE).itemsize))
+
+
+class _RandkCodec(_SelectCodec):
+    """Rand-k shares the FlatPacked format/decode/reduce; packing draws the
+    per-leaf PRNG streams of the tree packed path (bitwise-equal payloads),
+    so it stays a per-leaf loop under a per-client vmap."""
+
+    per_client_keys = True
+
+    def pack(self, buf: jnp.ndarray, key=None) -> FlatPacked:
+        assert key is not None, "randk needs a PRNG key"
+        keys = jax.random.split(key, len(self.spec.leaves))
+        vs, js = [], []
+        for ls, lw, k_leaf in zip(self.spec.leaves, self.layout.leaves, keys):
+            leaf = buf[ls.offset:ls.offset + ls.size].reshape(
+                ls.shape if ls.shape else (1,))
+            p = payloads.block_randk_pack(leaf, self.cfg, k_leaf)
+            vs.append(p.values.reshape(-1))
+            js.append(p.indices.reshape(-1))
+        return FlatPacked(jnp.concatenate(vs), jnp.concatenate(js))
+
+
+class _QuantCodec:
+    """FlatQuant (bit-packed uint32 words + per-block scales); reduce is the
+    fused unpack-multiply-add contraction over the client axis."""
+
+    per_client_keys = False
+    fused_ef = False
+
+    def __init__(self, cfg: CompressorConfig, spec: FlatSpec,
+                 layout: WireLayout, pallas: bool = False):
+        self.cfg, self.spec, self.layout, self.pallas = \
+            cfg, spec, layout, pallas
+        self.levels = float(2 ** (cfg.bits - 1) - 1)
+
+    def pack(self, buf: jnp.ndarray, key=None) -> FlatQuant:
+        lead = buf.shape[:-1]
+        ws, ss = [], []
+        for r in self.layout.runs:
+            blocks = _run_view(buf, r)
+            codes, scale = payloads.quant_blocks(blocks, self.cfg.bits)
+            words = pack_codes(codes.astype(jnp.int32), self.cfg.bits)
+            ws.append(words.reshape(lead + (r.nblocks * r.W,)))
+            ss.append(scale.astype(jnp.float32).reshape(lead + (r.nblocks,)))
+        cat = (lambda xs: xs[0] if len(xs) == 1
+               else jnp.concatenate(xs, axis=-1))
+        return FlatQuant(cat(ws), cat(ss))
+
+    def decode(self, q: FlatQuant) -> jnp.ndarray:
+        lead = q.words.shape[:-1]
+        outs = []
+        for r in self.layout.runs:
+            words = q.words[..., r.woff:r.woff + r.nblocks * r.W].reshape(
+                lead + (r.nblocks, r.W))
+            scale = q.scale[..., r.boff:r.boff + r.nblocks][..., None]
+            codes = unpack_codes(words, self.cfg.bits, r.block)
+            vals = codes.astype(self.spec.dtype) / self.levels * scale
+            vals = jnp.where(scale > 0, vals, 0.0)
+            outs.append(vals.reshape(lead + (r.span,)))
+        return outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=-1)
+
+    def reduce(self, q: FlatQuant, weights: jnp.ndarray, m) -> jnp.ndarray:
+        n = q.words.shape[0]
+        outs = []
+        for r in self.layout.runs:
+            words = q.words[:, r.woff:r.woff + r.nblocks * r.W].reshape(
+                n, r.nblocks, r.W)
+            scale = q.scale[:, r.boff:r.boff + r.nblocks]
+            if self.pallas:
+                from repro.kernels.unpack_mma import unpack_mma
+                acc = unpack_mma(words, scale,
+                                 weights.astype(jnp.float32),
+                                 self.cfg.bits, r.block)
+            else:
+                codes = unpack_codes(words, self.cfg.bits, r.block)
+                vals = codes.astype(jnp.float32) / self.levels \
+                    * scale[..., None]
+                acc = jnp.tensordot(weights.astype(jnp.float32), vals,
+                                    axes=(0, 0))
+            outs.append(acc.reshape(r.span))
+        out = outs[0] if len(outs) == 1 else jnp.concatenate(outs)
+        return out.astype(self.spec.dtype) / m
+
+    def wire_bytes(self) -> int:
+        return int(4 * (self.layout.W_total + self.layout.NB_total))
+
+
+class _QuantPallasCodec(_QuantCodec):
+    """Quant on the pallas backend: the EF14 step runs fused in the
+    ``quantize_ef_pack`` kernel -- quantizer, residual update AND wire-word
+    packing in one pass over each VMEM-resident block (one launch per run,
+    the client axis folded into the grid)."""
+
+    fused_ef = True
+
+    def ef(self, e: jnp.ndarray, deltas: jnp.ndarray):
+        """(e, deltas) [*lead, d] -> (FlatQuant msgs, e_new [*lead, d])."""
+        from repro.kernels.quantize_ef_pack import quantize_ef_pack
+        lead = deltas.shape[:-1]
+        ws, ss, es = [], [], []
+        for r in self.layout.runs:
+            e_run = _run_view(e, r).reshape(-1, r.block)
+            d_run = _run_view(deltas, r).reshape(-1, r.block)
+            words, scale, e_new = quantize_ef_pack(e_run, d_run,
+                                                   self.cfg.bits)
+            ws.append(words.reshape(lead + (r.nblocks * r.W,)))
+            ss.append(scale.reshape(lead + (r.nblocks,)))
+            es.append(e_new.reshape(lead + (r.span,)))
+        cat = (lambda xs: xs[0] if len(xs) == 1
+               else jnp.concatenate(xs, axis=-1))
+        return FlatQuant(cat(ws), cat(ss)), cat(es)
+
+    def pack(self, buf: jnp.ndarray, key=None) -> FlatQuant:
+        msg, _ = self.ef(jnp.zeros_like(buf), buf)
+        return msg
+
+
+def _make_codec(t: transports.Transport, spec: FlatSpec):
+    """The flat wire codec for a tree transport, or None for a dense wire.
+
+    Dense wires (ref backend, ``natural``, quant at non-packable bit widths)
+    route the compressor math through the per-leaf tree operators -- flat
+    messages are dense [d] buffers and trajectories stay bit-for-bit the
+    tree path's."""
+    if t.backend == "ref" or t.kind in ("none", "natural"):
+        return None
+    layout = wire_layout(spec, t.cfg)
+    pallas = t.backend == "pallas"
+    if t.kind == "topk":
+        return _SelectCodec(t.cfg, spec, layout, pallas)
+    if t.kind == "randk":
+        return _RandkCodec(t.cfg, spec, layout, pallas=False)
+    if t.kind == "quant":
+        if t.cfg.bits not in payloads.PACK_BITS:
+            return None         # unpackable width: dense-wire fallback
+        if pallas:
+            return _QuantPallasCodec(t.cfg, spec, layout, pallas=True)
+        return _QuantCodec(t.cfg, spec, layout, pallas=False)
+    return None
+
+
+# ---------------------------------------------------------------------------
+# FlatTransport: the engine-facing flat mirror of comm.Transport
+# ---------------------------------------------------------------------------
+
+class FlatTransport:
+    """One direction of the wire path over flat [d] buffers.
+
+    Same call-site contract as :class:`repro.comm.Transport` (``encode`` /
+    ``encode_gathered`` / ``reduce`` / ``transmit`` / ``transmit_gathered``
+    / ``broadcast``), so ``engine.participation`` dispatches to either
+    interchangeably; ``e``/``deltas`` are [n, d] arrays, messages are flat
+    payloads, and ``like`` is accepted for signature compatibility but the
+    static :class:`FlatSpec` supplies all shape information.
+
+    Usage::
+
+        >>> spec = spec_of(params)
+        >>> up = FlatTransport(get_transport(cfg, "packed"), spec)
+        >>> v_bar, e_new = up.transmit(e, deltas, mask, m, like=None)
+    """
+
+    def __init__(self, t: transports.Transport, spec: FlatSpec):
+        self.cfg = t.cfg
+        self.kind = t.kind
+        self.backend = t.backend
+        self.spec = spec
+        self.codec = _make_codec(t, spec)
+        if self.codec is None and t.kind == "quant" and t.backend != "ref":
+            # dense-wire fallback for quant at a non-packable bit width on
+            # the packed/pallas backends: the compress math must come from
+            # the ref transport -- the packed one emits payload pytrees
+            # (which a dense flat message cannot carry) and the pallas one
+            # assumes the stacked-kernel entry points.  Identical values:
+            # both equal the dense quantizer bit-for-bit.
+            t = transports.get_transport(t.cfg, "ref")
+        self.t = t
+
+    # -- capability flags (delegated) ---------------------------------------
+
+    @property
+    def is_identity(self) -> bool:
+        return self.t.is_identity
+
+    @property
+    def needs_residual(self) -> bool:
+        return self.t.needs_residual
+
+    @property
+    def tracks_center(self) -> bool:
+        return self.t.tracks_center
+
+    @property
+    def needs_key(self) -> bool:
+        return self.t.needs_key
+
+    @property
+    def wire(self) -> str:
+        return "dense" if self.codec is None else "packed"
+
+    # -- wire primitives ----------------------------------------------------
+
+    def compress(self, buf: jnp.ndarray, key: Optional[jax.Array] = None):
+        """Flat message for one [d] buffer (the operator C)."""
+        if self.is_identity:
+            return buf
+        if self.codec is None:
+            return flatten(self.spec,
+                           self.t.compress(unflatten(self.spec, buf), key))
+        return self.codec.pack(buf, key)
+
+    def decompress(self, message, like=None) -> jnp.ndarray:
+        if self.codec is None:
+            return message
+        return self.codec.decode(message)
+
+    def wire_bytes(self, like=None) -> int:
+        """True wire bytes of one message: packed formats count their
+        materialized arrays (uint32 words, uint16 offsets); dense wires
+        delegate to the tree transport's measured accounting."""
+        if self.codec is None:
+            return self.t.wire_bytes(struct_tree(self.spec))
+        return self.codec.wire_bytes()
+
+    # -- round-level call sites --------------------------------------------
+
+    def _ef_clients(self, e, deltas, key, keys=None):
+        if self.codec is not None and self.codec.fused_ef:
+            return self.codec.ef(e, deltas)
+        buf = e + deltas if e is not None else deltas
+        if self.codec is None:
+            n = deltas.shape[0]
+            if self.needs_key and key is not None:
+                if keys is None:
+                    keys = jax.random.split(key, n)
+                msgs = jax.vmap(self.compress)(buf, keys)
+            else:
+                msgs = jax.vmap(lambda r: self.compress(r))(buf)
+            return msgs, buf - msgs
+        if self.codec.per_client_keys:
+            n = deltas.shape[0]
+            if keys is None:
+                keys = jax.random.split(key, n)
+            msgs = jax.vmap(self.codec.pack)(buf, keys)
+        else:
+            msgs = self.codec.pack(buf)
+        return msgs, buf - self.codec.decode(msgs)
+
+    def encode(self, e, deltas, mask, like=None,
+               key: Optional[jax.Array] = None):
+        """Per-client EF14 encode over the [n, d] stacks, no aggregation
+        (mirrors ``Transport.encode``; the staleness buffer parks rows of
+        the returned wire-format messages)."""
+        if self.is_identity:
+            return partition.constrain_flat(deltas), e
+        msgs, e_stack = self._ef_clients(e, deltas, key)
+        e_out = e
+        if e is not None:
+            e_stack = partition.constrain_flat(
+                partition.constrain_leading(e_stack, "client"))
+            e_out = transports.mask_where(mask, e_stack, e)
+        if self.wire == "dense":
+            msgs = partition.constrain_leading(msgs, "client")
+        return msgs, e_out
+
+    def encode_gathered(self, e, deltas, idx, mask, like=None,
+                        key: Optional[jax.Array] = None):
+        """Compute-sparse encode: ``deltas`` holds the m participants' rows;
+        per-client results (incl. PRNG streams) match the mask path's."""
+        n = mask.shape[0]
+        if self.is_identity:
+            return transports.scatter_rows(deltas, idx, n), e
+        e_part = None if e is None else jnp.take(e, idx, axis=0)
+        keys = None
+        if self.needs_key and key is not None:
+            keys = jnp.take(jax.random.split(key, n), idx, axis=0)
+        msgs, e_stack = self._ef_clients(e_part, deltas, key, keys=keys)
+        e_out = e
+        if e is not None:
+            e_stack = partition.constrain_leading(e_stack, "client")
+            e_out = e.at[idx].set(e_stack)
+        msgs = transports.scatter_rows(msgs, idx, n)
+        if self.wire == "dense":
+            msgs = partition.constrain_leading(msgs, "client")
+        return msgs, e_out
+
+    def reduce(self, msgs, weights, m, like=None) -> jnp.ndarray:
+        """Weighted aggregation of stacked wire messages into [d]: a single
+        mask contraction (dense), scatter-add (select payloads) or
+        unpack-multiply-add (quant words) over the client axis -- never a
+        sequential per-client scan."""
+        if self.wire == "dense":
+            return jnp.tensordot(weights.astype(msgs.dtype), msgs,
+                                 axes=(0, 0)) / m
+        return partition.constrain_flat(
+            self.codec.reduce(msgs, weights, m))
+
+    def transmit(self, e, deltas, mask, m, like=None,
+                 key: Optional[jax.Array] = None):
+        if self.is_identity:
+            return self.reduce(deltas, mask, m), e
+        msgs, e_out = self.encode(e, deltas, mask, like, key)
+        return self.reduce(msgs, mask, m), e_out
+
+    def transmit_gathered(self, e, deltas, idx, mask, m, like=None,
+                          key: Optional[jax.Array] = None):
+        if self.is_identity:
+            dense = transports.scatter_rows(deltas, idx, mask.shape[0])
+            return self.reduce(dense, mask, m), e
+        msgs, e_out = self.encode_gathered(e, deltas, idx, mask, like, key)
+        return self.reduce(msgs, mask, m), e_out
+
+    def broadcast(self, w: jnp.ndarray, x_new: jnp.ndarray,
+                  key: Optional[jax.Array] = None) -> jnp.ndarray:
+        """Primal-EF21 downlink on flat buffers: w' = w + C(x_new - w)."""
+        if self.is_identity:
+            return x_new
+        msg = self.compress(x_new - w, key)
+        return w + self.decompress(msg)
+
+
+def flat_transports_for(cfg, spec: FlatSpec):
+    """(uplink, downlink) :class:`FlatTransport` pair for a FedConfig."""
+    backend = transports.backend_for(cfg.comm)
+    return (FlatTransport(transports.get_transport(cfg.uplink, backend), spec),
+            FlatTransport(transports.get_transport(cfg.downlink, backend),
+                          spec))

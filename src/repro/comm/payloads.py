@@ -30,7 +30,9 @@ from repro.configs.base import CompressorConfig
 
 class PackedLeaf(NamedTuple):
     values: jnp.ndarray     # [..., nblocks, k]
-    indices: jnp.ndarray    # [..., nblocks, k] int32, index within block
+    indices: jnp.ndarray    # [..., nblocks, k] uint16, index within block
+                            # (block <= 65536 by construction: choose_block
+                            # caps at the pref tile size)
 
 
 class QuantPayload(NamedTuple):
@@ -38,8 +40,29 @@ class QuantPayload(NamedTuple):
     scale: jnp.ndarray      # [..., nblocks, 1] float32 per-block max-abs
 
 
+class FlatPacked(NamedTuple):
+    """Block-select payload of a flat [d] buffer (comm.flat): the values and
+    within-block offsets of every block of every leaf, concatenated in leaf
+    order.  Static block geometry (base positions per slot) lives in the
+    :class:`repro.comm.flat.WireLayout`, not on the wire."""
+    values: jnp.ndarray     # [..., K_total] buffer dtype
+    indices: jnp.ndarray    # [..., K_total] uint16 within-block offsets
+
+
+class FlatQuant(NamedTuple):
+    """Bit-packed quantization payload of a flat [d] buffer: b-bit biased
+    codes packed ``32 // b`` to a uint32 word (the true wire format -- HBM
+    and collective traffic shrink 8/b x vs int8 words), plus one fp32
+    max-abs scale per block."""
+    words: jnp.ndarray      # [..., W_total] uint32
+    scale: jnp.ndarray      # [..., nblocks_total] float32
+
+
+INDEX_DTYPE = jnp.uint16    # PackedLeaf/FlatPacked within-block offsets
+
+
 def is_payload(x) -> bool:
-    return isinstance(x, (PackedLeaf, QuantPayload))
+    return isinstance(x, (PackedLeaf, QuantPayload, FlatPacked, FlatQuant))
 
 
 def choose_block(D: int, pref: int, shards: int = 1) -> int:
@@ -83,24 +106,22 @@ def block_geometry(D: int, cfg: CompressorConfig) -> tuple[int, int]:
     return b, k
 
 
-def block_topk_pack(x: jnp.ndarray, cfg: CompressorConfig) -> PackedLeaf:
-    """Block-wise magnitude top-k along the last axis.
-
-    Small leaves use exact lax.top_k; mesh-scale leaves use the sort-free
-    threshold + cumsum-slotting path (see :func:`_block_threshold`)."""
-    if x.ndim == 0:
-        x = x.reshape(1)
-    D = x.shape[-1]
-    b, k = block_geometry(D, cfg)
-    blocks = x.reshape(x.shape[:-1] + (D // b, b))
+def select_topk_blocks(blocks: jnp.ndarray, k: int, sort_free: bool):
+    """Per-block magnitude top-k of a [..., nblocks, block] view -- the ONE
+    copy of the selection math shared by the tree packed path
+    (:func:`block_topk_pack`) and the flat hot path (comm.flat), so their
+    payloads can never drift.  ``sort_free`` selects the threshold +
+    cumsum-slotting regime used for mesh-scale leaves (see
+    :func:`_block_threshold`); returns (values, uint16 offsets)."""
+    b = blocks.shape[-1]
     if k >= b:
         idx = jnp.broadcast_to(
-            jnp.arange(b, dtype=jnp.int32), blocks.shape).copy()
-        return PackedLeaf(blocks, idx)
-    if x.size <= _SORT_FREE_MIN:
+            jnp.arange(b, dtype=INDEX_DTYPE), blocks.shape).copy()
+        return blocks, idx
+    if not sort_free:
         _, idx = jax.lax.top_k(jnp.abs(blocks), k)
         vals = jnp.take_along_axis(blocks, idx, axis=-1)
-        return PackedLeaf(vals, idx.astype(jnp.int32))
+        return vals, idx.astype(INDEX_DTYPE)
     absx = jnp.abs(blocks)
     thr = _block_threshold(absx, k)
     keep = absx > thr
@@ -114,7 +135,21 @@ def block_topk_pack(x: jnp.ndarray, cfg: CompressorConfig) -> PackedLeaf:
     idx = jnp.zeros(blocks.shape[:-1] + (k + 1,), jnp.int32)
     idx = jnp.put_along_axis(idx, slot, iota, axis=-1,
                              inplace=False)[..., :k]
-    return PackedLeaf(vals, idx)
+    return vals, idx.astype(INDEX_DTYPE)
+
+
+def block_topk_pack(x: jnp.ndarray, cfg: CompressorConfig) -> PackedLeaf:
+    """Block-wise magnitude top-k along the last axis.
+
+    Small leaves use exact lax.top_k; mesh-scale leaves use the sort-free
+    threshold + cumsum-slotting path (see :func:`_block_threshold`)."""
+    if x.ndim == 0:
+        x = x.reshape(1)
+    D = x.shape[-1]
+    b, k = block_geometry(D, cfg)
+    blocks = x.reshape(x.shape[:-1] + (D // b, b))
+    return PackedLeaf(*select_topk_blocks(blocks, k,
+                                          x.size > _SORT_FREE_MIN))
 
 
 def block_randk_pack(x: jnp.ndarray, cfg: CompressorConfig,
@@ -128,13 +163,13 @@ def block_randk_pack(x: jnp.ndarray, cfg: CompressorConfig,
     blocks = x.reshape(x.shape[:-1] + (D // b, b))
     if k >= b:
         idx = jnp.broadcast_to(
-            jnp.arange(b, dtype=jnp.int32), blocks.shape).copy()
+            jnp.arange(b, dtype=INDEX_DTYPE), blocks.shape).copy()
         return PackedLeaf(blocks, idx)
     # distinct indices per block: argsort of iid uniforms = random permutation
     u = jax.random.uniform(key, blocks.shape)
-    idx = jnp.argsort(u, axis=-1)[..., :k].astype(jnp.int32)
+    idx = jnp.argsort(u, axis=-1)[..., :k]
     vals = jnp.take_along_axis(blocks, idx, axis=-1)
-    return PackedLeaf(vals, idx)
+    return PackedLeaf(vals, idx.astype(INDEX_DTYPE))
 
 
 def block_topk_unpack(p: PackedLeaf, shape, dtype=jnp.float32,
@@ -146,8 +181,8 @@ def block_topk_unpack(p: PackedLeaf, shape, dtype=jnp.float32,
     nb = p.values.shape[-2]
     b = D // nb if block is None else block
     dense = jnp.zeros(tuple(shape[:-1]) + (nb, b), dtype=p.values.dtype)
-    dense = jnp.put_along_axis(dense, p.indices, p.values, axis=-1,
-                               inplace=False)
+    dense = jnp.put_along_axis(dense, p.indices.astype(jnp.int32), p.values,
+                               axis=-1, inplace=False)
     return dense.reshape(shape).astype(dtype)
 
 
@@ -176,6 +211,17 @@ def quant_code_dtype(bits: int):
     return jnp.int8 if bits <= 8 else jnp.int32
 
 
+def quant_blocks(blocks: jnp.ndarray, bits: int):
+    """Per-block max-abs symmetric b-bit rounding of a [..., nblocks,
+    block] view -- the ONE copy of the quantizer math shared by the tree
+    packed path (:func:`quant_pack`) and the flat hot path (comm.flat).
+    Returns (float codes in [-L, L], scale with keepdims)."""
+    scale = jnp.max(jnp.abs(blocks), axis=-1, keepdims=True)
+    levels = float(2 ** (bits - 1) - 1)
+    safe = jnp.where(scale > 0, scale, 1.0)
+    return jnp.round(blocks / safe * levels), scale
+
+
 def quant_pack(x: jnp.ndarray, cfg: CompressorConfig) -> QuantPayload:
     """Integer codes + per-block scale; round-trips bit-for-bit with the
     dense quantizer (codes are small exact integers)."""
@@ -184,11 +230,9 @@ def quant_pack(x: jnp.ndarray, cfg: CompressorConfig) -> QuantPayload:
     D = x.shape[-1]
     b = choose_block(D, cfg.block, cfg.shards)
     blocks = x.reshape(x.shape[:-1] + (D // b, b))
-    scale = jnp.max(jnp.abs(blocks), axis=-1, keepdims=True)
-    levels = float(2 ** (cfg.bits - 1) - 1)
-    safe = jnp.where(scale > 0, scale, 1.0)
-    codes = jnp.round(blocks / safe * levels).astype(quant_code_dtype(cfg.bits))
-    return QuantPayload(codes, scale.astype(jnp.float32))
+    codes, scale = quant_blocks(blocks, cfg.bits)
+    return QuantPayload(codes.astype(quant_code_dtype(cfg.bits)),
+                        scale.astype(jnp.float32))
 
 
 def quant_unpack(p: QuantPayload, shape, dtype, cfg: CompressorConfig) -> jnp.ndarray:
@@ -198,6 +242,64 @@ def quant_unpack(p: QuantPayload, shape, dtype, cfg: CompressorConfig) -> jnp.nd
     vals = p.codes.astype(jnp.float32) / levels * p.scale
     vals = jnp.where(p.scale > 0, vals, 0.0)
     return vals.reshape(shape).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Bit-packed wire words (the flat hot path's quant format, comm.flat)
+# ---------------------------------------------------------------------------
+#
+# b-bit symmetric codes in [-L, L] (L = 2^(b-1) - 1) ship as BIASED unsigned
+# lanes (code + L in [0, 2L]) packed 32//b to a uint32 word, little-endian in
+# the lane index.  ``bits`` must divide 32 (2/4/8 are the supported wire
+# widths); blocks whose size is not a multiple of 32//b pad the trailing word
+# with zero lanes -- unpack trims them, so the round-trip is exact for any
+# block size.
+
+PACK_BITS = (2, 4, 8)
+
+
+def words_per_block(block: int, bits: int) -> int:
+    """uint32 words needed for one ``block``-code payload at ``bits`` wide."""
+    per_word = 32 // bits
+    return -(-block // per_word)
+
+
+def pack_codes(codes: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """[..., block] integer codes in [-L, L] -> [..., W] uint32 words."""
+    if bits not in PACK_BITS:
+        raise ValueError(f"bits={bits} not packable; expected {PACK_BITS}")
+    per_word = 32 // bits
+    block = codes.shape[-1]
+    W = words_per_block(block, bits)
+    levels = 2 ** (bits - 1) - 1
+    biased = (codes.astype(jnp.int32) + levels).astype(jnp.uint32)
+    pad = W * per_word - block
+    if pad:
+        biased = jnp.pad(biased, [(0, 0)] * (biased.ndim - 1) + [(0, pad)])
+    lanes = biased.reshape(biased.shape[:-1] + (W, per_word))
+    shifts = jnp.arange(per_word, dtype=jnp.uint32) * jnp.uint32(bits)
+    # lanes fit disjoint bit ranges, so the OR-accumulate is a plain sum
+    return jnp.sum(lanes << shifts, axis=-1, dtype=jnp.uint32)
+
+
+def unpack_codes(words: jnp.ndarray, bits: int, block: int) -> jnp.ndarray:
+    """[..., W] uint32 words -> [..., block] int32 codes (exact inverse).
+
+    Bitcasts each word to its 4 little-endian bytes first, so only
+    ``8 // bits`` shift/mask lanes run per byte instead of ``32 // bits``
+    per word (bits=8 unpacks with no shifts at all) -- the unpack is on the
+    aggregation hot path for every buffered payload."""
+    levels = 2 ** (bits - 1) - 1
+    by = jax.lax.bitcast_convert_type(words, jnp.uint8)
+    by = by.reshape(words.shape[:-1] + (-1,))          # [..., W * 4]
+    if bits == 8:
+        flat = by
+    else:
+        per_byte = 8 // bits
+        mask = jnp.uint8((1 << bits) - 1)
+        lanes = [(by >> jnp.uint8(bits * i)) & mask for i in range(per_byte)]
+        flat = jnp.stack(lanes, axis=-1).reshape(by.shape[:-1] + (-1,))
+    return flat[..., :block].astype(jnp.int32) - levels
 
 
 # ---------------------------------------------------------------------------

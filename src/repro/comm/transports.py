@@ -29,6 +29,7 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import CompressorConfig
 from repro.comm import payloads
@@ -328,20 +329,44 @@ class Transport:
         return jax.vmap(lambda ej, dj: self.ef_step(ej, dj))(e, deltas)
 
     def _aggregate_packed(self, msgs, mask, m, like):
-        # Beyond-paper wire path (DESIGN.md §Transport): the cross-client
-        # aggregation consumes only the packed payload -- the collective
-        # moves ~K/d of the model bytes.  Decompression happens after the
-        # gather, one client at a time (lax.scan keeps it O(1) dense bufs).
+        # Beyond-paper wire path (DESIGN.md §Transport / §Hotpath): the
+        # cross-client aggregation consumes only the packed payload -- the
+        # collective moves ~K/d of the model bytes -- and reduces in the
+        # PAYLOAD domain, client-parallel: select payloads scatter-add their
+        # (value, block-offset) streams into the dense accumulator in one
+        # op; quant payloads contract codes*scale over the client axis
+        # (fused unpack-multiply-add).  The former per-client lax.scan kept
+        # O(1) dense buffers but made aggregation latency linear-sequential
+        # in n; the parallel reduction's only cost is the transient
+        # weighted-code tensor (same footprint as the delta stack).
         from repro.sharding import partition
         packed_repl = partition.gather_leading(msgs)
+        n = mask.shape[0]
 
-        def accum(acc, xs):
-            p_j, mask_j = xs
-            dense_j = self.decompress(p_j, like)
-            return tree_map(lambda a, d: a + mask_j * d, acc, dense_j), None
+        def one(p, ref):
+            shape = tuple(ref.shape) if ref.ndim else (1,)
+            if isinstance(p, QuantPayload):
+                levels = float(2 ** (self.cfg.bits - 1) - 1)
+                wsum = jnp.tensordot(
+                    mask.astype(jnp.float32),
+                    p.codes.astype(jnp.float32) * p.scale, axes=(0, 0))
+                return (wsum / levels).reshape(tuple(ref.shape)) \
+                    .astype(ref.dtype)
+            k = p.values.shape[-1]
+            nb = p.values.shape[-2]
+            b = shape[-1] // nb
+            L = int(np.prod(p.values.shape[1:-1], dtype=np.int64))
+            wv = (p.values
+                  * mask.reshape((n,) + (1,) * (p.values.ndim - 1))
+                  .astype(p.values.dtype))
+            rows = jnp.arange(L, dtype=jnp.int32).reshape(1, L, 1)
+            pos = rows * b + p.indices.astype(jnp.int32).reshape(n, L, k)
+            acc = jnp.zeros((L * b,), p.values.dtype)
+            acc = acc.at[pos.reshape(-1)].add(wv.reshape(-1))
+            return acc.reshape(tuple(ref.shape)).astype(ref.dtype)
 
-        v_sum, _ = jax.lax.scan(
-            accum, _tree_zeros_like(like), (packed_repl, mask))
+        v_sum = tree_map(one, packed_repl, like,
+                         is_leaf=payloads.is_payload)
         return tree_map(lambda v: v / m, v_sum)
 
     def _payload_wire_bytes(self, like) -> int:
@@ -457,11 +482,12 @@ class TopKTransport(_BlockSelectTransport):
         blocks = x.reshape(x.shape[:-1] + (D // b, b))
         if k >= b:
             idx = jnp.broadcast_to(
-                jnp.arange(b, dtype=jnp.int32), blocks.shape).copy()
+                jnp.arange(b, dtype=payloads.INDEX_DTYPE), blocks.shape).copy()
             return PackedLeaf(blocks, idx)
         lead = blocks.shape[:-1]
         vals, idx = block_topk(blocks.reshape(-1, b), k)
-        return PackedLeaf(vals.reshape(lead + (k,)), idx.reshape(lead + (k,)))
+        return PackedLeaf(vals.reshape(lead + (k,)),
+                          idx.reshape(lead + (k,)).astype(payloads.INDEX_DTYPE))
 
     def _ef_clients(self, e, deltas, like, key, keys=None):
         if self.backend != "pallas":

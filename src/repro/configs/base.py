@@ -272,7 +272,14 @@ class FedConfig:
                                     # vmapped clients (n >> devices memory)
     full_eval: bool = True          # evaluate the constraint query over all n
                                     # clients (g_full metric + bit-parity with
-                                    # the mask path); False: m sampled only
+                                    # the mask path); False: m sampled only --
+                                    # the engine then fuses the constraint
+                                    # query with the first local step (one
+                                    # forward fewer per round, comm.flat)
+    lean_metrics: bool = False      # skip diagnostics that cost a dedicated
+                                    # full-model reduction per round
+                                    # (delta_norm reports 0); trajectory and
+                                    # remaining metrics are bit-identical
     rho: float = 1.0                # penalty-fedavg strength (strategy knob)
     # -- fleet knobs (repro.fleet, DESIGN.md §Fleet) ------------------------
     fleet: FleetConfig = field(default_factory=FleetConfig)

@@ -49,9 +49,10 @@ import jax
 import jax.numpy as jnp
 
 from repro import comm
+from repro.comm import flat
 from repro.configs.base import FedConfig
 from repro.engine import participation, rounds, strategies
-from repro.engine.rounds import FedState, RoundMetrics, transports_for
+from repro.engine.rounds import FedState, RoundMetrics
 from repro.fleet import samplers
 
 tree_map = jax.tree_util.tree_map
@@ -131,10 +132,11 @@ def _constraint(s, sigma_origin, g_hat, cfg):
 
 class StaleBuffer(NamedTuple):
     """Device-resident staleness buffer: one slot per client id (static
-    shape, scan-carried).  ``msgs`` holds the *wire representation* of each
-    parked uplink ([n, ...] leading axis on every payload leaf -- dense
-    tensors on the ref backend, PackedLeaf / QuantPayload pytrees on the
-    packed wire), so buffered traffic costs compressed bytes, not dense
+    shape, scan-carried).  ``msgs`` holds the *flat wire representation* of
+    each parked uplink ([n, ...] leading axis on every payload leaf -- a
+    dense [n, d] buffer on the dense wire, FlatPacked (values + uint16
+    offsets) / FlatQuant (bit-packed uint32 words + scales) on the packed
+    wire), so buffered traffic costs true compressed wire bytes, not dense
     deltas.  Unoccupied slots hold zeros / stale garbage; every read is
     gated by ``occupied``."""
     msgs: object            # wire-format payload pytree, leading axis [n]
@@ -170,15 +172,15 @@ def init_buffer(params, cfg: FedConfig) -> Optional[StaleBuffer]:
     pytree leaves at the parity point."""
     if not cfg.async_.enabled:
         return None
-    uplink, _ = transports_for(cfg)
+    spec = flat.spec_of(params)
+    uplink, _ = flat.flat_transports_for(cfg, spec)
     n = cfg.n_clients
-    stacked = tree_map(
-        lambda p: jax.ShapeDtypeStruct((n,) + p.shape, p.dtype), params)
+    stacked = jax.ShapeDtypeStruct((n, spec.d), jnp.dtype(spec.dtype))
     e_sds = stacked if uplink.needs_residual else None
     ones = jnp.ones((n,), jnp.float32)
     key0 = jax.random.PRNGKey(0)
     msg_sds, _ = jax.eval_shape(
-        lambda e, d: uplink.encode(e, d, ones, like=params, key=key0),
+        lambda e, d: uplink.encode(e, d, ones, key=key0),
         e_sds, stacked)
     return StaleBuffer(
         msgs=tree_map(lambda s: jnp.zeros(s.shape, s.dtype), msg_sds),
@@ -210,8 +212,10 @@ def async_round_step(state: FedState, buf: Optional[StaleBuffer], batches,
     ``rounds.round_step`` -- the same function runs, the untouched buffer
     rides along -- so trajectories are bit-for-bit the synchronous ones.
     Enabled, the round composes the same stage helpers
-    (``rounds.sample_round`` / ``eval_round`` / ``local_deltas``) with the
-    event draw, the split encode/reduce wire path, and the buffer merge."""
+    (``rounds.sample_round`` / ``compute_round``) on the flat [d] buffer
+    with the event draw, the split encode/reduce wire path, and the buffer
+    merge (the buffer parks *flat wire payloads* -- packed words, not dense
+    deltas)."""
     if not cfg.async_.enabled:
         new_state, mets = rounds.round_step(state, batches, loss_pair, cfg)
         return new_state, buf, _nominal_metrics(mets, cfg)
@@ -226,32 +230,31 @@ def async_round_step(state: FedState, buf: Optional[StaleBuffer], batches,
     samp = samplers.get_sampler(cfg.fleet.sampler)
     ev, samp_state = samp.events(k_evt, cfg, part.mask, samp_state)
 
-    batches, pre_gathered, f_part, g_hat, g_full, f_full = rounds.eval_round(
-        state, batches, fleet, part, loss_pair, cfg)
-
-    sigma = strat.switch_weight(g_hat, cfg)
-    deltas = rounds.local_deltas(state, batches, part, strat, loss_pair,
-                                 sigma, cfg, pre_gathered)
+    spec = flat.spec_of(state.w)
+    wf = flat.flatten(spec, state.w)
+    (batches, pre_gathered, f_part, g_hat, g_full, f_full, sigma,
+     deltas) = rounds.compute_round(state, wf, spec, batches, fleet, part,
+                                    strat, loss_pair, cfg)
 
     # -- uplink: encode everyone (departing clients still compute and
     #    compress; EF residuals are client-local state, so they update for
     #    every participant), aggregate only the fresh fraction ------------
-    uplink, downlink = transports_for(cfg)
+    uplink, downlink = flat.flat_transports_for(cfg, spec)
     msgs, e_up = participation.encode(
-        uplink, state.e_up, deltas, part, like=state.w, key=k_up)
+        uplink, state.e_up, deltas, part, like=wf, key=k_up)
 
     fresh = part.mask * (1.0 - ev.depart)
     part_fresh = participation.compose_weights(part, 1.0 - ev.depart)
     w_fresh = participation.agg_weights(part_fresh)
-    v_bar = uplink.reduce(msgs, w_fresh, m, like=state.w)
+    v_bar = uplink.reduce(msgs, w_fresh, m, like=wf)
 
     # -- staleness buffer: deliver, expire, park --------------------------
     age = (state.t - buf.origin).astype(jnp.float32)
     deliver = buf.occupied * ev.arrive
     lam = strat.staleness_weight(age, buf.sigma, g_hat, cfg)
     w_stale = buf.weight * lam * deliver
-    v_stale = uplink.reduce(buf.msgs, w_stale, m, like=state.w)
-    v_bar = tree_map(jnp.add, v_bar, v_stale)
+    v_stale = uplink.reduce(buf.msgs, w_stale, m, like=wf)
+    v_bar = v_bar + v_stale
 
     remaining = buf.occupied * (1.0 - deliver)
     expired = remaining * (age >= acfg.max_staleness).astype(jnp.float32)
@@ -273,9 +276,9 @@ def async_round_step(state: FedState, buf: Optional[StaleBuffer], batches,
     #    participation feeds the delta_norm metric so it reports the mass
     #    that actually reached this round's barrier, not the departed rows
     new_state, round_metrics = rounds.finish_round(
-        state, strat, cfg, part_fresh, deltas, v_bar, e_up, uplink,
-        downlink, samp_state, key, k_down, f_part, g_hat, g_full, f_full,
-        sigma)
+        state, strat, cfg, spec, wf, part_fresh, deltas, v_bar, e_up,
+        uplink, downlink, samp_state, key, k_down, f_part, g_hat, g_full,
+        f_full, sigma)
 
     metrics = AsyncMetrics(
         round=round_metrics,

@@ -104,7 +104,8 @@ def agg_weights(part: Participation) -> jnp.ndarray:
 
 def aggregate(part: Participation, deltas):
     """Participating weighted mean of per-client deltas (gathered [m,...]
-    or full [n,...]), via the same masked reduction either way."""
+    or full [n,...], pytrees or flat [*, d] buffers), via the same masked
+    reduction either way."""
     from repro.comm import masked_mean
     w = agg_weights(part)
     if part.idx is None:
@@ -126,7 +127,12 @@ def encode(transport, e, deltas, part: Participation, like, key=None):
     messages ([n, ...] stacked) + EF residual update, without aggregation,
     dispatched to the transport's dense-mask or gathered execution (mirrors
     :func:`transmit`; aggregation happens later via ``transport.reduce`` so
-    departing clients' payloads can park in the staleness buffer)."""
+    departing clients' payloads can park in the staleness buffer).
+
+    ``transport`` is either a tree :class:`repro.comm.Transport` or the
+    engine's :class:`repro.comm.flat.FlatTransport` -- both share the
+    encode/reduce call-site contract; the flat one takes [n, d] stacks and
+    returns flat payloads (FlatPacked / bit-packed FlatQuant)."""
     if part.idx is None:
         return transport.encode(e, deltas, part.mask, like, key)
     return transport.encode_gathered(e, deltas, part.idx, part.mask,
@@ -135,10 +141,11 @@ def encode(transport, e, deltas, part: Participation, like, key=None):
 
 def transmit(transport, e, deltas, part: Participation, like, key=None):
     """The engine's single uplink call site: dispatch the EF14 + aggregation
-    to the transport's dense-mask or gathered execution.  The sampler's
-    aggregation weights ride in the mask slot (the transport only ever
-    selects on ``> 0`` and reduces with it, so weighted laws need no new
-    wire API)."""
+    to the transport's dense-mask or gathered execution (tree Transport or
+    comm.flat FlatTransport -- same contract, see :func:`encode`).  The
+    sampler's aggregation weights ride in the mask slot (the transport only
+    ever selects on ``> 0`` and reduces with it, so weighted laws need no
+    new wire API)."""
     w = agg_weights(part)
     if part.idx is None:
         return transport.transmit(e, deltas, w, part.m, like=like, key=key)

@@ -34,11 +34,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import comm
+from repro.comm import flat
+from repro.comm.flat import flat_transports_for
 from repro.configs.base import FedConfig
 from repro.core.compression import message_bytes
 from repro.engine import participation, strategies
 from repro.fleet import provision, samplers
-from repro.optim import sgd
 from repro.optim.sgd import tree_axpy, tree_zeros_like
 from repro.sharding import partition
 
@@ -90,8 +91,10 @@ def init_state(params, cfg: FedConfig, key: Optional[jax.Array] = None) -> FedSt
     uplink, downlink = transports_for(cfg)
     e_up = None
     if uplink.needs_residual:
-        e_up = tree_map(
-            lambda p: jnp.zeros((cfg.n_clients,) + p.shape, p.dtype), params)
+        # the flat hot path (comm.flat): ONE [n, d] buffer instead of n
+        # stacked pytrees -- every EF elementwise op is a single kernel
+        spec = flat.spec_of(params)
+        e_up = jnp.zeros((cfg.n_clients, spec.d), spec.dtype)
     x = params if downlink.tracks_center else None
     samp = samplers.get_sampler(cfg.fleet.sampler)
     return FedState(
@@ -123,13 +126,39 @@ def sample_round(state: FedState, batches, key: jax.Array, cfg: FedConfig):
     return participation.finalize(mask, weights, cfg), samp_state, fleet
 
 
-def eval_round(state: FedState, batches, fleet, part, loss_pair: Callable,
-               cfg: FedConfig):
-    """Stage 2: in-jit fleet provisioning + the constraint query (scalar
-    uplink per client).  Returns ``(batches, pre_gathered, f_part, g_hat,
-    g_full, f_full)`` where ``batches`` are this round's provisioned
-    minibatches (gathered to the m participants when sparse)."""
+def _eval_aggregates(part, f_ev, g_ev, sparse_eval: bool, m: int):
+    """Participating/full scalar aggregates of the per-client (f, g) eval."""
+    w_agg = participation.agg_weights(part)
+    if sparse_eval:
+        w_part = jnp.take(w_agg, part.idx)
+        g_hat = jnp.sum(w_part * g_ev) / m
+        f_part = jnp.sum(w_part * f_ev) / m
+    else:
+        g_hat = jnp.sum(w_agg * g_ev) / m
+        f_part = jnp.sum(w_agg * f_ev) / m
+    return f_part, g_hat, jnp.mean(g_ev), jnp.mean(f_ev)
+
+
+def compute_round(state: FedState, wf, spec, batches, fleet, part, strat,
+                  loss_pair: Callable, cfg: FedConfig):
+    """Stages 2-4 on the flat buffer: in-jit fleet provisioning, the
+    constraint query, the switch weight, and the E local steps -- the deltas
+    come back as a single [m|n, d] stack (``comm.flat``), so every
+    elementwise update is one fused op instead of a per-leaf kernel soup.
+
+    Returns ``(batches, pre_gathered, f_part, g_hat, g_full, f_full, sigma,
+    deltas)``.
+
+    When ``cfg.full_eval`` is off, the eval forward and the first local step
+    run over the SAME per-client rows -- so both fuse into one
+    ``jax.vjp`` call: the forward delivers (f_ev, g_ev), the switch weight
+    is computed from the aggregated values, and the pullback (with the
+    strategy's objective cotangents at those values) delivers every
+    client's step-1 gradient without re-running the forward.  One fewer
+    full forward per round; per-client values/grads are bit-for-bit the
+    unfused path's (tests/test_hotpath.py)."""
     m = cfg.m
+    E, eta = cfg.local_steps, cfg.lr
     # -- in-jit batch provisioning (fleet only) -----------------------------
     # Gather mode without the full-n eval provisions only the m sampled
     # clients' minibatches, so provisioning FLOPs/memory scale with m.
@@ -141,66 +170,105 @@ def eval_round(state: FedState, batches, fleet, part, loss_pair: Callable,
         batches = provision.minibatch(fleet, k_prov, cfg, idx=prov_idx)
         pre_gathered = prov_idx is not None
 
+    obj = None
+    grad_fn = None
+
+    def scan_steps(w0, batch, steps):
+        def body(w, _):
+            return w - eta * grad_fn(w, batch), None
+        w_E, _ = jax.lax.scan(body, w0, None, length=steps)
+        return w_E
+
+    # -- fused path: eval forward IS the step-1 forward ---------------------
+    # Only when the eval rows coincide with the local-step rows (full_eval
+    # off) and the strategy's objective factors through the (f, g) pair
+    # (the base-class local_objective -- a strategy overriding it opts out).
+    fused = (not cfg.full_eval and
+             type(strat).local_objective is strategies.Strategy.local_objective)
+    if fused:
+        local_b = batches if pre_gathered else participation.gather(
+            part, batches)
+        mb = jax.tree_util.tree_leaves(local_b)[0].shape[0]
+        W0 = jnp.broadcast_to(wf, (mb, wf.shape[0]))
+        fwd = participation.client_vmap(
+            lambda wfj, b: loss_pair(flat.unflatten(spec, wfj), b),
+            cfg.client_chunk)
+        (f_ev, g_ev), pull = jax.vjp(lambda W: fwd(W, local_b), W0)
+        f_part, g_hat, g_full, f_full = _eval_aggregates(
+            part, f_ev, g_ev, sparse_eval, m)
+        sigma = strat.switch_weight(g_hat, cfg)
+        cots = jax.vmap(jax.grad(
+            lambda fg: strat.blend_values(fg[0], fg[1], sigma, cfg)))
+        df, dg = cots((f_ev, g_ev))
+        (dW,) = pull((df, dg))
+        W_E = W0 - eta * dW
+        if E > 1:
+            obj = strat.local_objective(loss_pair, sigma, cfg)
+            grad_fn = jax.grad(
+                lambda wfj, batch: obj(flat.unflatten(spec, wfj), batch))
+            W_E = participation.client_vmap(
+                lambda w1, b: scan_steps(w1, b, E - 1),
+                cfg.client_chunk)(W_E, local_b)
+        deltas = (wf - W_E) / eta
+        deltas = partition.constrain_flat(
+            partition.constrain_leading(deltas, "client"))
+        return (batches, pre_gathered, f_part, g_hat, g_full, f_full,
+                sigma, deltas)
+
+    # -- unfused: separate eval forward (paper-faithful default) ------------
     eval_b = participation.gather(part, batches) \
         if (sparse_eval and not pre_gathered) else batches
     f_ev, g_ev = participation.client_vmap(
         lambda b: loss_pair(state.w, b), cfg.client_chunk)(eval_b)
-    w_agg = participation.agg_weights(part)
-    if sparse_eval:
-        w_part = jnp.take(w_agg, part.idx)
-        g_hat = jnp.sum(w_part * g_ev) / m
-        f_part = jnp.sum(w_part * f_ev) / m
-    else:
-        g_hat = jnp.sum(w_agg * g_ev) / m
-        f_part = jnp.sum(w_agg * f_ev) / m
-    g_full, f_full = jnp.mean(g_ev), jnp.mean(f_ev)
-    return batches, pre_gathered, f_part, g_hat, g_full, f_full
+    f_part, g_hat, g_full, f_full = _eval_aggregates(
+        part, f_ev, g_ev, sparse_eval, m)
+    sigma = strat.switch_weight(g_hat, cfg)
 
-
-def local_deltas(state: FedState, batches, part, strat, loss_pair: Callable,
-                 sigma, cfg: FedConfig, pre_gathered: bool = False):
-    """Stage 4: E local steps per participating client on the strategy's
-    local objective; returns the per-client Delta_j = (w_t - w_{j,E}) / eta
-    stack ([m, ...] in gather mode, [n, ...] in mask mode)."""
-    E, eta = cfg.local_steps, cfg.lr
-    grad_fn = jax.grad(strat.local_objective(loss_pair, sigma, cfg))
-
-    def local_updates(batch):
-        def body(w, _):
-            g = grad_fn(w, batch)
-            return tree_map(lambda p, gr: p - eta * gr, w, g), None
-        w_E, _ = jax.lax.scan(body, state.w, None, length=E)
-        return tree_map(lambda a, b: (a - b) / eta, state.w, w_E)  # Delta_j
-
+    obj = strat.local_objective(loss_pair, sigma, cfg)
+    grad_fn = jax.grad(
+        lambda wfj, batch: obj(flat.unflatten(spec, wfj), batch))
     local_b = batches if pre_gathered else \
         participation.gather(part, batches)             # [m|n, ...]
-    deltas = participation.client_vmap(local_updates, cfg.client_chunk)(local_b)
-    return partition.constrain_leading(deltas, "client")
+    deltas = participation.client_vmap(
+        lambda b: (wf - scan_steps(wf, b, E)) / eta,
+        cfg.client_chunk)(local_b)
+    deltas = partition.constrain_flat(
+        partition.constrain_leading(deltas, "client"))
+    return (batches, pre_gathered, f_part, g_hat, g_full, f_full,
+            sigma, deltas)
 
 
-def finish_round(state: FedState, strat, cfg: FedConfig, part, deltas,
-                 v_bar, e_up, uplink, downlink, samp_state, key, k_down,
-                 f_part, g_hat, g_full, f_full, sigma
+def finish_round(state: FedState, strat, cfg: FedConfig, spec, wf, part,
+                 deltas, v_bar, e_up, uplink, downlink, samp_state, key,
+                 k_down, f_part, g_hat, g_full, f_full, sigma
                  ) -> tuple[FedState, RoundMetrics]:
     """Stages 6-7 + bookkeeping, shared with the asynchronous round: server
     update on the aggregated direction, primal-EF21 downlink broadcast,
-    averaged-iterate accounting (Theorems 1/2), metrics, next FedState."""
-    x_cur = state.x if state.x is not None else state.w
-    x_new = strat.server_update(x_cur, v_bar, cfg)
-    w_new = downlink.broadcast(state.w, x_new, key=k_down)
-    x_keep = x_new if downlink.tracks_center else None
+    averaged-iterate accounting (Theorems 1/2), metrics, next FedState.
+
+    Everything runs on the flat [d] buffers (``wf``/``v_bar``/``deltas``
+    from :mod:`repro.comm.flat`); the next FedState's pytrees are views
+    (unflatten) of the single updated buffer."""
+    xf = flat.flatten(spec, state.x) if state.x is not None else wf
+    x_new = strat.server_update(xf, v_bar, cfg, spec=spec)
+    w_new_f = downlink.broadcast(wf, x_new, key=k_down)
+    w_new = flat.unflatten(spec, partition.constrain_flat(w_new_f))
+    x_keep = flat.unflatten(spec, x_new) if downlink.tracks_center else None
 
     alpha = strat.iterate_weight(g_hat, cfg)
     wbar_sum = (tree_axpy(alpha, state.w, state.wbar_sum)
                 if state.wbar_sum is not None else None)
 
-    delta_norm = sgd.tree_norm(participation.aggregate(part, deltas))
+    # delta_norm pays a full extra [n, d] reduction: gate it when the run
+    # discards per-round diagnostics (cfg.lean_metrics) -- bit-parity when on
+    delta_norm = jnp.zeros(()) if cfg.lean_metrics else \
+        flat.tree_norm(spec, participation.aggregate(part, deltas))
     metrics = RoundMetrics(
         f=f_part, g_hat=g_hat, g_full=g_full, sigma=sigma,
         feasible=(g_hat <= cfg.switch.eps).astype(jnp.float32),
         delta_norm=delta_norm,
-        up_bytes=jnp.asarray(float(uplink.wire_bytes(state.w)), jnp.float32),
-        down_bytes=jnp.asarray(float(downlink.wire_bytes(state.w)), jnp.float32),
+        up_bytes=jnp.asarray(float(uplink.wire_bytes()), jnp.float32),
+        down_bytes=jnp.asarray(float(downlink.wire_bytes()), jnp.float32),
         f_full=f_full)
 
     new_state = FedState(
@@ -219,32 +287,34 @@ def round_step(state: FedState,
     are provisioned in-jit from the fleet's shards (fleet.provision).
 
     The round is a composition of the stage helpers above
-    (:func:`sample_round` / :func:`eval_round` / :func:`local_deltas` /
-    :func:`finish_round`), shared with the asynchronous round in
-    engine.async_rounds -- only the wire path between the stages differs
-    there (split encode/reduce with the staleness-buffer merge)."""
+    (:func:`sample_round` / :func:`compute_round` / :func:`finish_round`),
+    shared with the asynchronous round in engine.async_rounds -- only the
+    wire path between the stages differs there (split encode/reduce with
+    the staleness-buffer merge).  Between sampling and the next FedState the
+    model lives as ONE contiguous [d] buffer (comm.flat): local steps, EF
+    residual arithmetic, aggregation and the server/downlink updates are
+    single fused operations over it."""
     strat = strategies.get_strategy(cfg.strategy)
     strat.validate(cfg)
     key, k_part, k_up, k_down = jax.random.split(state.key, 4)
 
     part, samp_state, fleet = sample_round(state, batches, k_part, cfg)
-    batches, pre_gathered, f_part, g_hat, g_full, f_full = eval_round(
-        state, batches, fleet, part, loss_pair, cfg)
-
-    sigma = strat.switch_weight(g_hat, cfg)
-    deltas = local_deltas(state, batches, part, strat, loss_pair, sigma,
-                          cfg, pre_gathered)
+    spec = flat.spec_of(state.w)
+    wf = flat.flatten(spec, state.w)
+    (batches, pre_gathered, f_part, g_hat, g_full, f_full, sigma,
+     deltas) = compute_round(state, wf, spec, batches, fleet, part, strat,
+                             loss_pair, cfg)
 
     # -- the wire path: exactly one uplink and one downlink call site -------
     # All compressor / backend / wire-format dispatch lives inside the
-    # transport layer (repro.comm); participation-mode dispatch lives in
-    # engine.participation.
-    uplink, downlink = transports_for(cfg)
+    # transport layer (repro.comm / comm.flat); participation-mode dispatch
+    # lives in engine.participation.
+    uplink, downlink = flat_transports_for(cfg, spec)
     v_bar, e_up = participation.transmit(
-        uplink, state.e_up, deltas, part, like=state.w, key=k_up)
+        uplink, state.e_up, deltas, part, like=wf, key=k_up)
 
-    return finish_round(state, strat, cfg, part, deltas, v_bar, e_up,
-                        uplink, downlink, samp_state, key, k_down,
+    return finish_round(state, strat, cfg, spec, wf, part, deltas, v_bar,
+                        e_up, uplink, downlink, samp_state, key, k_down,
                         f_part, g_hat, g_full, f_full, sigma)
 
 
@@ -371,13 +441,15 @@ def round_bytes(params, cfg: FedConfig) -> dict:
     """Wire-bytes accounting for one round (per participating client).
 
     ``uplink``/``downlink`` are analytic estimates (message_bytes);
-    ``measured_up``/``measured_down`` come from the transport's actual wire
-    representation for this config's backend."""
-    uplink, downlink = transports_for(cfg)
+    ``measured_up``/``measured_down`` come from the engine's actual wire
+    representation (the flat payloads of comm.flat: bit-packed uint32
+    quantizer words, uint16 block offsets) for this config's backend."""
+    spec = flat.spec_of(params)
+    uplink, downlink = flat_transports_for(cfg, spec)
     up = message_bytes(params, cfg.uplink)
     down = message_bytes(params, cfg.downlink)
     dense = message_bytes(params, type(cfg.uplink)(kind="none"))
     return {"uplink": up, "downlink": down, "dense": dense,
-            "measured_up": uplink.wire_bytes(params),
-            "measured_down": downlink.wire_bytes(params),
+            "measured_up": uplink.wire_bytes(),
+            "measured_down": downlink.wire_bytes(),
             "savings_up": 1.0 - up / dense, "savings_down": 1.0 - down / dense}

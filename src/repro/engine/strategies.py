@@ -78,12 +78,32 @@ class Strategy:
     def switch_weight(self, g_hat, cfg):
         raise NotImplementedError
 
-    def local_objective(self, loss_pair, sigma, cfg):
+    def blend_values(self, f, g, sigma, cfg):
+        """The local objective as a function of the (f, g) eval pair.
+
+        Strategies whose objective factors through this hook get the
+        engine's fused eval/step-1 path for free (``full_eval`` off): the
+        round's constraint query and the first local gradient share one
+        forward pass, with ``d(blend)/d(f, g)`` as pullback cotangents."""
         raise NotImplementedError
 
-    def server_update(self, x, v_bar, cfg):
-        """x_{t+1} = Pi_X(x_t - eta * v_bar) by default."""
+    def local_objective(self, loss_pair, sigma, cfg):
+        """(params, batch) -> scalar the clients descend; by default the
+        :meth:`blend_values` composition with ``loss_pair``."""
+        def obj(params, batch):
+            f, g = loss_pair(params, batch)
+            return self.blend_values(f, g, sigma, cfg)
+        return obj
+
+    def server_update(self, x, v_bar, cfg, spec=None):
+        """x_{t+1} = Pi_X(x_t - eta * v_bar) by default.  ``spec`` is the
+        engine's :class:`repro.comm.flat.FlatSpec` when ``x``/``v_bar`` are
+        flat [d] buffers -- the projection then reduces per leaf slice, so
+        results stay bit-for-bit the pytree path's."""
         stepped = tree_map(lambda xi, vi: xi - cfg.lr * vi, x, v_bar)
+        if spec is not None:
+            from repro.comm import flat
+            return flat.project_ball(spec, stepped, cfg.proj_radius)
         return project_ball(stepped, cfg.proj_radius)
 
     def iterate_weight(self, g_hat, cfg):
@@ -114,12 +134,9 @@ class FedSGM(Strategy):
     def switch_weight(self, g_hat, cfg):
         return switching.switch_weight(g_hat, self._switch_cfg(cfg))
 
-    def local_objective(self, loss_pair, sigma, cfg):
+    def blend_values(self, f, g, sigma, cfg):
         # sigma_t is round-constant, so grad-of-blend == blend-of-grads
-        def blended(params, batch):
-            f, g = loss_pair(params, batch)
-            return (1.0 - sigma) * f + sigma * g
-        return blended
+        return (1.0 - sigma) * f + sigma * g
 
     def iterate_weight(self, g_hat, cfg):
         return switching.averaged_iterate_weight(g_hat, self._switch_cfg(cfg))
@@ -149,11 +166,8 @@ class PenaltyFedAvg(FedSGM):
     def switch_weight(self, g_hat, cfg):
         return jnp.zeros(())
 
-    def local_objective(self, loss_pair, sigma, cfg):
-        def penalized(params, batch):
-            f, g = loss_pair(params, batch)
-            return f + cfg.rho * jnp.maximum(g - cfg.switch.eps, 0.0)
-        return penalized
+    def blend_values(self, f, g, sigma, cfg):
+        return f + cfg.rho * jnp.maximum(g - cfg.switch.eps, 0.0)
 
     def iterate_weight(self, g_hat, cfg):
         return jnp.ones(())

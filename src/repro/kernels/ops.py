@@ -7,8 +7,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.quantize_ef import quantize_ef
+from repro.kernels.quantize_ef_pack import quantize_ef_pack
 from repro.kernels.switch_blend import switch_blend
 from repro.kernels.topk_block import block_topk
+from repro.kernels.unpack_mma import unpack_mma
 
 
 def _to_blocks(x: jnp.ndarray, block: int):
@@ -41,6 +43,27 @@ def quantize_ef_apply(e: jnp.ndarray, delta: jnp.ndarray, bits: int,
     v, e_new = quantize_ef(eb, db, bits, interpret=interpret)
     unb = lambda t: t.reshape(-1)[:d].reshape(e.shape)
     return unb(v), unb(e_new)
+
+
+def quantize_ef_pack_apply(e: jnp.ndarray, delta: jnp.ndarray, bits: int,
+                           block: int = 1024, interpret: bool | None = None):
+    """Fused EF14 quantize-and-bit-pack for arbitrary-shape arrays:
+    returns (words uint32 [nblocks, W], scale f32 [nblocks, 1], e_new like
+    ``e``) -- the wire words ship 32//bits codes per uint32."""
+    eb, d = _to_blocks(e, block)
+    db, _ = _to_blocks(delta, block)
+    words, scale, e_new = quantize_ef_pack(eb, db, bits, interpret=interpret)
+    return words, scale, e_new.reshape(-1)[:d].reshape(e.shape)
+
+
+def unpack_mma_apply(words: jnp.ndarray, scale: jnp.ndarray,
+                     weight: jnp.ndarray, bits: int, block: int,
+                     interpret: bool | None = None) -> jnp.ndarray:
+    """Fused unpack-multiply-add aggregation of stacked client payloads:
+    words [n, nblocks, W] + scale [n, nblocks] + weight [n] -> the weighted
+    payload-domain sum [nblocks * block] (flat)."""
+    acc = unpack_mma(words, scale, weight, bits, block, interpret=interpret)
+    return acc.reshape(-1)
 
 
 def switch_blend_tree(gf_tree, gg_tree, sigma, block: int = 4096,

@@ -1,0 +1,82 @@
+"""Pallas TPU kernel: fused EF14 quantization step emitting the bit-packed
+wire payload.
+
+    buf   = e + delta
+    scale = max|buf|                      (per block)
+    codes = round(buf / scale * L)        (L = 2^(b-1) - 1 levels)
+    words = pack_b(codes + L)             (32 // b biased lanes per uint32)
+    e'    = buf - codes / L * scale
+
+One pass over the VMEM-resident block produces the *wire words* directly --
+the int8/int32 code tensor of the unfused path never exists, so packed-mode
+HBM traffic out of the encode step is the true ``b/32``-word stream (8/b x
+smaller than int8 codes) and the EF residual update still rides the same
+block visit (no second HBM round-trip of e + delta).
+
+Lane assembly uses ``per_word`` strided slices + shifts (no in-kernel
+gather); blocks whose size is not a multiple of 32//b zero-pad the trailing
+word's lanes, matching :func:`repro.comm.payloads.pack_codes` bit-for-bit.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(e_ref, d_ref, words_ref, scale_ref, enew_ref, *,
+            bits: int, block: int):
+    per_word = 32 // bits
+    W = words_ref.shape[-1]
+    levels = 2 ** (bits - 1) - 1
+
+    buf = e_ref[0, :] + d_ref[0, :]
+    scale = jnp.max(jnp.abs(buf))
+    lv = jnp.asarray(float(levels), buf.dtype)
+    safe = jnp.where(scale > 0, scale, 1.0)
+    codes = jnp.round(buf / safe * lv)                  # [-L, L] floats
+    v = jnp.where(scale > 0, codes / lv * safe, 0.0)
+    enew_ref[0, :] = buf - v
+    scale_ref[0, 0] = scale
+
+    biased = jnp.where(scale > 0, codes, 0.0).astype(jnp.int32) + levels
+    pad = W * per_word - block
+    if pad:
+        # pad lanes are zero BITS (matching payloads.pack_codes), not the
+        # biased zero code -- unpack trims them before unbiasing
+        biased = jnp.concatenate([biased, jnp.zeros((pad,), jnp.int32)])
+    lanes = biased.astype(jnp.uint32)
+    acc = jnp.zeros((W,), jnp.uint32)
+    for i in range(per_word):
+        acc = acc | (lanes[i::per_word] << jnp.uint32(bits * i))
+    words_ref[0, :] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "interpret"))
+def quantize_ef_pack(e: jnp.ndarray, delta: jnp.ndarray, bits: int,
+                     interpret: bool | None = None):
+    """e, delta [nblocks, block] -> (words uint32 [nblocks, W],
+    scale f32 [nblocks, 1], e_new [nblocks, block])."""
+    from repro.comm.payloads import PACK_BITS, words_per_block
+    if bits not in PACK_BITS:
+        raise ValueError(f"bits={bits} not packable; expected {PACK_BITS}")
+    nblocks, block = e.shape
+    W = words_per_block(block, bits)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    kern = functools.partial(_kernel, bits=bits, block=block)
+    return pl.pallas_call(
+        kern,
+        grid=(nblocks,),
+        in_specs=[pl.BlockSpec((1, block), lambda i: (i, 0)),
+                  pl.BlockSpec((1, block), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((1, W), lambda i: (i, 0)),
+                   pl.BlockSpec((1, 1), lambda i: (i, 0)),
+                   pl.BlockSpec((1, block), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((nblocks, W), jnp.uint32),
+                   jax.ShapeDtypeStruct((nblocks, 1), jnp.float32),
+                   jax.ShapeDtypeStruct((nblocks, block), e.dtype)],
+        interpret=interpret,
+    )(e, delta)

@@ -1,0 +1,68 @@
+"""Pallas TPU kernel: fused unpack-multiply-add payload aggregation.
+
+    acc[b] = sum_j  weight_j * scale_{j,b} / L * unpack(words_{j,b})
+
+The client axis rides the *inner* grid dimension so each output block is
+revisited consecutively (TPU output-revisit rule) and accumulates in VMEM:
+the bit-packed uint32 words are the only client-indexed HBM traffic -- the
+per-client dense code tensors of the scan-based aggregation never
+materialize, and aggregation cost is one block visit per (block, client)
+pair with no sequential dense-buffer dependency chain.
+
+Lane extraction mirrors :func:`repro.comm.payloads.unpack_codes`: per-lane
+shift + mask, trailing pad lanes of the last word dropped via the
+interleave-and-trim reshape.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(words_ref, scale_ref, weight_ref, acc_ref, *,
+            bits: int, block: int):
+    per_word = 32 // bits
+    levels = 2 ** (bits - 1) - 1
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[0, :] = jnp.zeros((block,), acc_ref.dtype)
+
+    words = words_ref[0, 0, :]                            # [W] uint32
+    lanes = []
+    mask = jnp.uint32((1 << bits) - 1)
+    for i in range(per_word):
+        lanes.append((words >> jnp.uint32(bits * i)) & mask)
+    # [W, per_word] -> interleaved [W * per_word] -> trim the pad lanes
+    codes = jnp.stack(lanes, axis=-1).reshape(-1)[:block]
+    vals = codes.astype(jnp.float32) - float(levels)
+    w = weight_ref[0] * scale_ref[0, 0] / float(levels)
+    acc_ref[0, :] += w * vals
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "block", "interpret"))
+def unpack_mma(words: jnp.ndarray, scale: jnp.ndarray, weight: jnp.ndarray,
+               bits: int, block: int, interpret: bool | None = None):
+    """words [n, nblocks, W] uint32, scale [n, nblocks] f32, weight [n] f32
+    -> weighted payload-domain sum [nblocks, block] f32."""
+    from repro.comm.payloads import PACK_BITS
+    if bits not in PACK_BITS:
+        raise ValueError(f"bits={bits} not packable; expected {PACK_BITS}")
+    n, nblocks, W = words.shape
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    kern = functools.partial(_kernel, bits=bits, block=block)
+    return pl.pallas_call(
+        kern,
+        grid=(nblocks, n),
+        in_specs=[pl.BlockSpec((1, 1, W), lambda i, j: (j, i, 0)),
+                  pl.BlockSpec((1, 1), lambda i, j: (j, i)),
+                  pl.BlockSpec((1,), lambda i, j: (j,))],
+        out_specs=pl.BlockSpec((1, block), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nblocks, block), jnp.float32),
+        interpret=interpret,
+    )(words, scale, weight)

@@ -61,11 +61,6 @@ def _strip_axis(spec: P, axis: str) -> P:
     return P(*out)
 
 
-def _client_prefix(spec: P, client_axis: Optional[str]) -> P:
-    base = _strip_axis(spec, client_axis) if client_axis else spec
-    return P(client_axis, *base)
-
-
 def fed_config_for(cfg: ModelConfig, mesh: Mesh, local_steps: int = 1,
                    comm: str = "dense", uplink_ratio: float = 0.1,
                    partial: bool = True, participation: str = "mask",
@@ -196,14 +191,17 @@ def build_train_case(cfg: ModelConfig, shape: InputShape, mesh: Mesh,
     ca = fed.client_axis
 
     params_sds = _abstract_with_spec(p_shapes, p_specs, mesh, dmap)
-    e_specs = jax.tree_util.tree_map(
-        lambda s: _client_prefix(s, ca), p_specs,
-        is_leaf=lambda x: isinstance(x, P))
-    e_sds = jax.tree_util.tree_map(
-        lambda sds, spec: jax.ShapeDtypeStruct(
-            (n,) + sds.shape, dmap(sds), sharding=NamedSharding(mesh, spec)),
-        p_shapes, e_specs,
-        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    # the engine's uplink EF residual is the flat [n, d] buffer (comm.flat):
+    # client axis sharded, flat axis on the model axis when it divides
+    from repro.comm import flat as comm_flat
+    fspec = comm_flat.spec_of(jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dmap(s)), p_shapes,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct)))
+    e_spec = partition.check_divisible(
+        P(ca, partition.resolve("flat")[0]), (n, fspec.d))
+    e_sds = jax.ShapeDtypeStruct(
+        (n, fspec.d), jnp.dtype(fspec.dtype),
+        sharding=NamedSharding(mesh, e_spec))
     repl = NamedSharding(mesh, P())
     state_sds = fedsgm.FedState(
         w=params_sds,

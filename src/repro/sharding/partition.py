@@ -25,6 +25,8 @@ DEFAULT_LOGICAL = {
     "cap": "model",
     "kv_len": "model",
     "blocks": "model",      # packed-payload block dim (core/fedsgm packed path)
+    "flat": "model",        # trailing axis of comm.flat [d]/[n,d] buffers
+                            # and their packed payloads (slot/word streams)
     "embed": None,
     "seq": None,
     "fsdp": "data",
@@ -129,6 +131,29 @@ def constrain_leading(tree, logical_name: str):
         if x.ndim == 0 or x.shape[0] % _axis_size(axis):
             return x
         spec = P(axis, *([U] * (x.ndim - 1)))
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(_ACTIVE_MESH, spec))
+    return jax.tree_util.tree_map(one, tree)
+
+
+def constrain_flat(tree, logical_name: str = "flat"):
+    """Pin the TRAILING axis of every leaf to ``logical_name``'s mesh axis,
+    leaving leading dims UNCONSTRAINED.  The flat hot path (comm.flat) uses
+    this on its [d] / [n, d] buffers and packed payload streams so the
+    contiguous parameter dim shards over the model axis instead of being
+    replicated per client row (the [n, d] EF stack is the round's largest
+    buffer)."""
+    if _ACTIVE_MESH is None:
+        return tree
+    axis = _LOGICAL.get(logical_name)
+    if axis is None:
+        return tree
+    U = P.UNCONSTRAINED
+
+    def one(x):
+        if x.ndim == 0 or x.shape[-1] % _axis_size(axis):
+            return x
+        spec = P(*([U] * (x.ndim - 1)), axis)
         return jax.lax.with_sharding_constraint(
             x, NamedSharding(_ACTIVE_MESH, spec))
     return jax.tree_util.tree_map(one, tree)

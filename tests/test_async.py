@@ -210,15 +210,16 @@ class TestConstantLawUnbiasedness:
     def test_preloaded_slot_merges_exact_law(self, np_data, params):
         """A hand-loaded buffer slot shifts the server step by exactly
         lambda * w_origin * payload / m (identity transport: the payload is
-        the dense delta)."""
+        the dense FLAT delta, [n, d] per comm.flat)."""
+        from repro.comm import flat as comm_flat
         cfg = _cfg(async_=_async(depart=0.0, staleness="constant",
                                  rejoin=1.0))
         state = rounds.init_state(params, cfg)
+        spec = comm_flat.spec_of(state.w)
         buf0 = async_rounds.init_buffer(state.w, cfg)
-        payload = jax.tree_util.tree_map(
-            lambda l: jnp.zeros((N,) + l.shape, l.dtype), state.w)
-        payload = {"w": payload["w"].at[2].set(1.0),
-                   "b": payload["b"].at[2].set(2.0)}
+        payload_tree = {"w": jnp.full((30,), 1.0), "b": jnp.asarray(2.0)}
+        row = comm_flat.flatten(spec, payload_tree)
+        payload = jnp.zeros((N, spec.d)).at[2].set(row)
         w_origin = 1.0
         loaded = buf0._replace(
             msgs=payload,
@@ -233,10 +234,10 @@ class TestConstantLawUnbiasedness:
         assert float(jnp.sum(buf1.occupied)) == 0.0
         # server_update: x' = x - lr * v_bar, so the slot's contribution to
         # w is -lr * w_origin * payload / m (downlink 'none': w == x)
-        for leaf, p in (("w", payload["w"][2]), ("b", payload["b"][2])):
+        for leaf in ("w", "b"):
             np.testing.assert_allclose(
                 np.asarray(s_load.w[leaf] - s_empty.w[leaf]),
-                np.asarray(-cfg.lr * w_origin * p / cfg.m),
+                np.asarray(-cfg.lr * w_origin * payload_tree[leaf] / cfg.m),
                 rtol=1e-5, atol=1e-7)
 
 
@@ -326,20 +327,20 @@ class TestBufferPlumbing:
                                            ("packed", "topk"),
                                            ("packed", "quant")))
     def test_buffer_stores_wire_format(self, params, comm, kind):
-        """Buffer message leaves have the uplink transport's wire shapes
-        ([n] leading) -- compressed payloads on the packed wire, not dense
-        deltas."""
-        from repro.comm.payloads import PackedLeaf, QuantPayload
+        """Buffer message leaves have the uplink's *flat* wire shapes ([n]
+        leading) -- FlatPacked / bit-packed FlatQuant payloads on the packed
+        wire (true compressed wire bytes), not dense deltas."""
+        from repro.comm.payloads import FlatPacked, FlatQuant
         cfg = _cfg(comm=comm, uplink=KINDS[kind], async_=_async())
         buf = async_rounds.init_buffer(params, cfg)
         for leaf in jax.tree_util.tree_leaves(buf.msgs):
             assert leaf.shape[0] == N
         if comm == "packed":
-            flat = jax.tree_util.tree_flatten(
-                buf.msgs, is_leaf=lambda x: isinstance(
-                    x, (PackedLeaf, QuantPayload)))[0]
-            assert any(isinstance(x, (PackedLeaf, QuantPayload))
-                       for x in flat)
+            assert isinstance(buf.msgs, (FlatPacked, FlatQuant))
+            if kind == "quant":
+                assert buf.msgs.words.dtype == jnp.uint32
+            else:
+                assert buf.msgs.indices.dtype == jnp.uint16
         assert float(jnp.sum(buf.occupied)) == 0.0
 
     def test_async_drive_block_offload_equal(self, np_data, params):

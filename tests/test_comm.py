@@ -59,13 +59,17 @@ class TestWireBytes:
         t = comm.get_transport(cfg, "ref")
         assert t.wire_bytes(tree) == message_bytes(tree, cfg)
 
-    def test_topk_packed_agrees_on_divisible_dims(self, key):
+    def test_topk_packed_counts_uint16_offsets(self, key):
         # d=1024, block=128, ratio=0.25: 8 blocks * 32 = 256 = round(1024*.25)
+        # -- each slot ships a value + a uint16 within-block offset (blocks
+        # cap at 65536), so the measured wire undercuts the analytic
+        # value+int32 estimate by 2 bytes per slot
         tree = {"w": jax.random.normal(key, (1024,))}
         cfg = CompressorConfig(kind="topk", ratio=0.25, block=128)
         for backend in ("packed", "pallas"):
             t = comm.get_transport(cfg, backend)
-            assert t.wire_bytes(tree) == message_bytes(tree, cfg)
+            assert t.wire_bytes(tree) == 256 * (4 + 2)
+            assert t.wire_bytes(tree) < message_bytes(tree, cfg)
 
     def test_quant_agrees_on_divisible_dims(self, key):
         tree = {"w": jax.random.normal(key, (1024,)),
@@ -137,7 +141,7 @@ class TestPackedWire:
         t = comm.get_transport(cfg, "packed")
         msg = t.compress({"w": x}, key)
         p = msg["w"]
-        assert p.values.shape == (4, 16) and p.indices.dtype == jnp.int32
+        assert p.values.shape == (4, 16) and p.indices.dtype == jnp.uint16
         # indices point at the values they claim, distinct within a block
         gathered = np.take_along_axis(
             np.asarray(x).reshape(4, 64), np.asarray(p.indices), -1)

@@ -6,7 +6,7 @@ from hypothesis import given, settings, strategies as st
 from jax.sharding import PartitionSpec as P
 
 from repro.core.packing import choose_block
-from repro.launch.steps import _client_prefix, _strip_axis
+from repro.launch.steps import _strip_axis
 from repro.sharding import partition
 
 
@@ -16,14 +16,16 @@ class TestSpecAlgebra:
         assert _strip_axis(P(("pod", "data"), None), "pod") == P(("data",), None)
         assert _strip_axis(P(("pod",),), "pod") == P(None)
 
-    def test_client_prefix(self):
-        # client axis must not repeat inside the per-client dims
-        out = _client_prefix(P("data", "model"), "data")
-        assert out == P("data", None, "model")
-        out = _client_prefix(P("model"), "pod")
-        assert out == P("pod", "model")
-        out = _client_prefix(P("model"), None)
-        assert out == P(None, "model")
+    def test_flat_axis_resolves_to_model(self):
+        # the comm.flat [d]-buffer trailing axis maps to the model mesh axis
+        partition.activate_mesh(None)
+        assert partition.DEFAULT_LOGICAL["flat"] == "model"
+
+    def test_constrain_flat_no_mesh_is_identity(self):
+        partition.activate_mesh(None)
+        x = {"e": jnp.zeros((4, 8))}
+        out = partition.constrain_flat(x)
+        assert out["e"] is x["e"]
 
 
 class TestChooseBlock:
