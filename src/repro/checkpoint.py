@@ -106,12 +106,37 @@ def save_round(ckpt_dir: str, t: int, state, keep: int = 3,
              metadata["fleet"])
     save(os.path.join(ckpt_dir, f"round_{t}"), state, metadata)
     for old in _round_numbers(ckpt_dir)[:-keep]:
-        for stem in (f"round_{old}", f"round_{old}_fleet"):
+        for stem in (f"round_{old}", f"round_{old}_fleet",
+                     f"round_{old}_buffer"):
             for ext in (".npz", ".json"):
                 try:
                     os.remove(os.path.join(ckpt_dir, stem + ext))
                 except OSError:
                     pass
+
+
+def save_buffer(ckpt_dir: str, t: int, wire_buf,
+                metadata: Optional[dict] = None):
+    """Save the async staleness buffer beside a round checkpoint, in its
+    wire-word sidecar form (``engine.async_rounds.buffer_wire``: parked
+    payloads as bit-packed uint32 words wherever a lossless packing exists).
+    No-op when the buffer is disabled (``wire_buf is None``)."""
+    if wire_buf is None:
+        return
+    save(os.path.join(ckpt_dir, f"round_{t}_buffer"), wire_buf, metadata)
+
+
+def restore_buffer(ckpt_dir: str, t: Optional[int], like_wire):
+    """Restore a round's buffer sidecar into the structure of ``like_wire``
+    (``engine.async_rounds.buffer_wire_struct``); None when the sidecar is
+    absent (pre-sidecar checkpoints restore with a fresh empty buffer) or
+    the buffer is disabled (``like_wire is None``)."""
+    if t is None or like_wire is None:
+        return None
+    path = os.path.join(ckpt_dir, f"round_{t}_buffer")
+    if not os.path.exists(path + ".npz"):
+        return None
+    return restore(path, like_wire)
 
 
 def restore_round(ckpt_dir: str, like_state, t: Optional[int] = None,

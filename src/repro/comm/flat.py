@@ -487,13 +487,24 @@ class FlatTransport:
         >>> spec = spec_of(params)
         >>> up = FlatTransport(get_transport(cfg, "packed"), spec)
         >>> v_bar, e_new = up.transmit(e, deltas, mask, m, like=None)
+
+    ``cohorts > 1`` turns :meth:`reduce` into the hierarchical two-tier
+    aggregation (DESIGN.md §Scale): the stacked client rows split into k
+    contiguous cohorts, each edge reducer runs the single-tier
+    payload-domain reduce on its cohort, and the server sums the k edge
+    partials left-to-right.  ``cohorts=1`` IS the single-tier op
+    (bit-parity by construction); select-payload partials are exact
+    re-associations of the same weighted scatter-add, quant's
+    unpack-multiply-add is a reordered sum (allclose).
     """
 
-    def __init__(self, t: transports.Transport, spec: FlatSpec):
+    def __init__(self, t: transports.Transport, spec: FlatSpec,
+                 cohorts: int = 1):
         self.cfg = t.cfg
         self.kind = t.kind
         self.backend = t.backend
         self.spec = spec
+        self.cohorts = max(1, int(cohorts))
         self.codec = _make_codec(t, spec)
         if self.codec is None and t.kind == "quant" and t.backend != "ref":
             # dense-wire fallback for quant at a non-packable bit width on
@@ -613,16 +624,41 @@ class FlatTransport:
             msgs = partition.constrain_leading(msgs, "client")
         return msgs, e_out
 
-    def reduce(self, msgs, weights, m, like=None) -> jnp.ndarray:
-        """Weighted aggregation of stacked wire messages into [d]: a single
-        mask contraction (dense), scatter-add (select payloads) or
-        unpack-multiply-add (quant words) over the client axis -- never a
-        sequential per-client scan."""
+    def reduce_single(self, msgs, weights, m, like=None) -> jnp.ndarray:
+        """The single-tier weighted aggregation of stacked wire messages
+        into [d]: a mask contraction (dense), scatter-add (select payloads)
+        or unpack-multiply-add (quant words) over the client axis -- never
+        a sequential per-client scan.  This is one edge reducer of the
+        two-tier mode (and the whole of :meth:`reduce` at ``cohorts=1``)."""
         if self.wire == "dense":
             return jnp.tensordot(weights.astype(msgs.dtype), msgs,
                                  axes=(0, 0)) / m
         return partition.constrain_flat(
             self.codec.reduce(msgs, weights, m))
+
+    def reduce(self, msgs, weights, m, like=None) -> jnp.ndarray:
+        """Weighted aggregation of stacked wire messages into [d]; with
+        ``cohorts=k > 1`` the hierarchical two-tier form -- k edge
+        reductions over contiguous client cohorts, their partials summed
+        left-to-right (the async StaleBuffer merge composes unchanged:
+        both its reduce call sites land here)."""
+        k = self.cohorts
+        if k <= 1:
+            return self.reduce_single(msgs, weights, m, like)
+        rows = weights.shape[0]
+        if rows % k:
+            raise ValueError(
+                f"two-tier aggregation: {rows} stacked payload rows do not "
+                f"split into {k} equal cohorts -- ScaleConfig.cohorts must "
+                "divide the client-row count")
+        csize = rows // k
+        acc = None
+        for c in range(k):
+            sl = slice(c * csize, (c + 1) * csize)
+            sub = tree_map(lambda x: x[sl], msgs)
+            part = self.reduce_single(sub, weights[sl], m, like)
+            acc = part if acc is None else acc + part
+        return acc
 
     def transmit(self, e, deltas, mask, m, like=None,
                  key: Optional[jax.Array] = None):
@@ -649,8 +685,13 @@ class FlatTransport:
 
 
 def flat_transports_for(cfg, spec: FlatSpec):
-    """(uplink, downlink) :class:`FlatTransport` pair for a FedConfig."""
+    """(uplink, downlink) :class:`FlatTransport` pair for a FedConfig.
+
+    ``cfg.scale.cohorts`` configures the uplink's two-tier aggregation;
+    the downlink is one broadcast (no client axis), so it never tiers."""
     backend = transports.backend_for(cfg.comm)
-    return (FlatTransport(transports.get_transport(cfg.uplink, backend), spec),
+    k = getattr(getattr(cfg, "scale", None), "cohorts", 1)
+    return (FlatTransport(transports.get_transport(cfg.uplink, backend), spec,
+                          cohorts=k),
             FlatTransport(transports.get_transport(cfg.downlink, backend),
                           spec))

@@ -225,6 +225,34 @@ class AsyncConfig:
 
 
 @dataclass(frozen=True)
+class ScaleConfig:
+    """Population scale-out knobs (repro.scale, DESIGN.md §Scale).
+
+    Defaults are the bit-parity point: no slot store (the dense ``[n, d]``
+    uplink EF residual), single-tier aggregation, and no extra sharding --
+    an engine round under these defaults is the pre-scale engine exactly.
+
+    Usage::
+
+        >>> fed = FedConfig(participation="gather",
+        ...                 scale=ScaleConfig(ef_slots=128, cohorts=4))
+    """
+    ef_slots: int = 0               # >0: capacity of the O(cap*d) uplink EF
+                                    # slot store (repro.scale.slots) replacing
+                                    # the dense [n, d] e_up.  Requires
+                                    # participation="gather" and cap >= m;
+                                    # cap >= n_clients reproduces the dense
+                                    # residual bit-for-bit (no eviction)
+    cohorts: int = 1                # >1: hierarchical two-tier payload
+                                    # aggregation -- k edge reducers each run
+                                    # the payload-domain reduce on their
+                                    # cohort's rows, the server sums the k
+                                    # partials (exact for select payloads,
+                                    # reordered-sum for quant words).  Must
+                                    # divide the stacked payload rows (n)
+
+
+@dataclass(frozen=True)
 class FleetConfig:
     """The client-population axis (repro.fleet, DESIGN.md §Fleet).
 
@@ -285,6 +313,8 @@ class FedConfig:
     fleet: FleetConfig = field(default_factory=FleetConfig)
     # -- async buffered rounds (engine.async_rounds, DESIGN.md §Async) ------
     async_: AsyncConfig = field(default_factory=AsyncConfig)
+    # -- population scale-out (repro.scale, DESIGN.md §Scale) ---------------
+    scale: ScaleConfig = field(default_factory=ScaleConfig)
 
     def replace(self, **kw) -> "FedConfig":
         return dataclasses.replace(self, **kw)

@@ -22,14 +22,68 @@ def gamma_full(E: int, q: float, q0: float) -> float:
     return base + comp
 
 
-def gamma_partial(E: int, q: float, q0: float, n: int, m: int) -> float:
-    """Theorem 7 (partial participation, deterministic compressors)."""
-    r = n / m
+def _gamma_partial_r(E: int, q: float, q0: float, r: float) -> float:
+    """Theorem 7's Gamma as a function of the participation ratio ``r``
+    (uniform sampling: r = n/m; non-uniform: the effective ratio from
+    :func:`effective_ratio`)."""
     return (2.0 * E * E
             + 16.0 * E * r * math.sqrt(10.0 * (1.0 - q) * (1.0 - q0)) / (q0 * q * q)
             + 8.0 * E * math.sqrt(10.0 * (1.0 - q0)) / (q0 * q)
             + 20.0 * E / (q * q)
             + r * 4.0 * E * math.sqrt(10.0 * (1.0 - q)) / (q * q))
+
+
+def gamma_partial(E: int, q: float, q0: float, n: int, m: int) -> float:
+    """Theorem 7 (partial participation, deterministic compressors)."""
+    return _gamma_partial_r(E, q, q0, n / m)
+
+
+def ht_variance(pi, q) -> float:
+    """Per-round variance factor of the Horvitz-Thompson participation
+    estimator under sampler inclusion probabilities ``pi`` ([n], with
+    sum(pi) = m) and population weights ``q`` ([n], sum 1):
+
+        V = sum_j q_j^2 (1 - pi_j) / pi_j,
+
+    so Var[g_hat] = V * B^2 for per-client values bounded by B under
+    independent (Poisson) inclusion.  For without-replacement designs with
+    negatively associated inclusions (uniform, Madow systematic over the
+    capped probabilities -- repro.fleet.samplers) the joint-inclusion
+    covariance terms are non-positive, so V upper-bounds the true variance
+    (tests/test_theory_validation.py checks the Madow empirical variance
+    against it).  Uniform sampling (pi_j = m/n, q_j = 1/n) gives the closed
+    form V = (1 - m/n) / m."""
+    V = 0.0
+    for pj, qj in zip(pi, q):
+        if pj <= 0.0:
+            if qj > 0.0:
+                raise ValueError(
+                    "ht_variance: client with positive population weight "
+                    "has zero inclusion probability (estimator is biased)")
+            continue
+        V += qj * qj * (1.0 - pj) / pj
+    return V
+
+
+def effective_ratio(pi, q, m: int) -> float:
+    """The participation ratio ``r`` Theorem 7's Gamma sees under a
+    non-uniform sampler: r_eff = 1 / max(1 - m V, 1/n-scale floor) with
+    V = :func:`ht_variance`.  Uniform sampling recovers r = n/m exactly
+    (m V = 1 - m/n there); heavier-tailed inclusion laws inflate it."""
+    V = ht_variance(pi, q)
+    return 1.0 / max(1.0 - m * V, 1e-12)
+
+
+def gamma_partial_sampled(E: int, q_c: float, q0: float, pi, qw,
+                          m: int) -> float:
+    """Theorem 7's Gamma under a non-uniform client sampler: the uniform
+    ratio n/m is replaced by the importance-sampling effective ratio from
+    the sampler's exact inclusion probabilities (``pi`` =
+    ``ClientSampler.inclusion_probs``, ``qw`` the population weights the
+    HT aggregation is unbiased for).  ``q_c``/``q0`` are the uplink /
+    downlink compressor contraction parameters as in
+    :func:`gamma_partial`."""
+    return _gamma_partial_r(E, q_c, q0, effective_ratio(pi, qw, m))
 
 
 def eta_star(D: float, G: float, E: int, T: int, gamma: float) -> float:

@@ -190,6 +190,44 @@ def init_buffer(params, cfg: FedConfig) -> Optional[StaleBuffer]:
         occupied=jnp.zeros((n,), jnp.float32))
 
 
+# ---------------------------------------------------------------------------
+# Buffer checkpoint sidecar: the parked payloads in wire-word form
+# ---------------------------------------------------------------------------
+
+def buffer_wire(buf: Optional[StaleBuffer], params,
+                cfg: FedConfig) -> Optional[StaleBuffer]:
+    """The buffer in its checkpoint sidecar form -- the identity: ``msgs``
+    already holds each parked uplink's *wire representation* (bit-packed
+    uint32 words + scales / FlatPacked values + offsets on the packed wire,
+    a dense [n, d] buffer on the ref wire), so the sidecar stores exactly
+    what crossed the wire and save -> restore -> continue is bit-exact by
+    construction (tests/test_async.py).
+
+    Re-packing the dense quant wire to words was considered and rejected:
+    the parked rows are quantizer *output*, but XLA is free to reassociate
+    the decode expression (``c / L * s`` vs ``c * (s / L)`` differ in the
+    last ulp), so decode-after-restore is not bit-stable across
+    compilations -- a lossless round-trip cannot be guaranteed.  The hook
+    stays as the API boundary should a provably stable packing land."""
+    return buf
+
+
+def buffer_from_wire(wire: Optional[StaleBuffer], params,
+                     cfg: FedConfig) -> Optional[StaleBuffer]:
+    """Rehydrate a :func:`buffer_wire` sidecar back into the engine's
+    in-memory buffer (the inverse boundary; currently the identity)."""
+    return wire
+
+
+def buffer_wire_struct(params, cfg: FedConfig):
+    """Shape/dtype structure of the wire-form sidecar (the ``like`` tree for
+    ``checkpoint.restore_buffer``); None when the buffer is disabled."""
+    if not cfg.async_.enabled:
+        return None
+    return jax.eval_shape(
+        lambda: buffer_wire(init_buffer(params, cfg), params, cfg))
+
+
 def _nominal_metrics(mets: RoundMetrics, cfg: FedConfig) -> AsyncMetrics:
     m = jnp.asarray(float(cfg.m), jnp.float32)
     z = jnp.zeros((), jnp.float32)

@@ -91,10 +91,19 @@ def init_state(params, cfg: FedConfig, key: Optional[jax.Array] = None) -> FedSt
     uplink, downlink = transports_for(cfg)
     e_up = None
     if uplink.needs_residual:
-        # the flat hot path (comm.flat): ONE [n, d] buffer instead of n
-        # stacked pytrees -- every EF elementwise op is a single kernel
         spec = flat.spec_of(params)
-        e_up = jnp.zeros((cfg.n_clients, spec.d), spec.dtype)
+        if cfg.scale.ef_slots:
+            # population scale-out (repro.scale, DESIGN.md §Scale): a
+            # capacity-bounded [cap, d] slot pool replaces the dense
+            # residual -- EF memory scales with cap (>= m), not n
+            from repro.scale import slots as slot_store
+            slot_store.validate(cfg)
+            e_up = slot_store.init(cfg.n_clients, cfg.scale.ef_slots,
+                                   spec.d, spec.dtype)
+        else:
+            # the flat hot path (comm.flat): ONE [n, d] buffer instead of n
+            # stacked pytrees -- every EF elementwise op is a single kernel
+            e_up = jnp.zeros((cfg.n_clients, spec.d), spec.dtype)
     x = params if downlink.tracks_center else None
     samp = samplers.get_sampler(cfg.fleet.sampler)
     return FedState(
@@ -180,10 +189,18 @@ def compute_round(state: FedState, wf, spec, batches, fleet, part, strat,
         return w_E
 
     # -- fused path: eval forward IS the step-1 forward ---------------------
-    # Only when the eval rows coincide with the local-step rows (full_eval
-    # off) and the strategy's objective factors through the (f, g) pair
-    # (the base-class local_objective -- a strategy overriding it opts out).
-    fused = (not cfg.full_eval and
+    # Only when the eval rows coincide with the local-step rows -- full_eval
+    # off (rows = the m sampled clients), or full-participation mask mode
+    # where the local steps already run over all n rows so the full-n eval
+    # coincides too -- and the strategy's objective factors through the
+    # (f, g) pair (the base-class local_objective -- a strategy overriding
+    # it opts out).  Partial-participation mask mode stays unfused even
+    # though its local rows also span n: the fused batched forward differs
+    # from the shared-W eval forward by an ulp, and the mask-vs-gather
+    # bit-parity oracle (tests/test_engine.py) must keep comparing
+    # identical eval programs at m < n.
+    fused = ((not cfg.full_eval
+              or (part.idx is None and cfg.m >= cfg.n_clients)) and
              type(strat).local_objective is strategies.Strategy.local_objective)
     if fused:
         local_b = batches if pre_gathered else participation.gather(
@@ -310,8 +327,15 @@ def round_step(state: FedState,
     # transport layer (repro.comm / comm.flat); participation-mode dispatch
     # lives in engine.participation.
     uplink, downlink = flat_transports_for(cfg, spec)
-    v_bar, e_up = participation.transmit(
-        uplink, state.e_up, deltas, part, like=wf, key=k_up)
+    if cfg.scale.ef_slots and uplink.needs_residual:
+        # population scale-out: the O(m*d) EF slot store replaces the dense
+        # [n, d] residual (repro.scale.slots; bit-identical at cap >= n)
+        from repro.scale import slots as slot_store
+        v_bar, e_up = slot_store.transmit(
+            uplink, state.e_up, deltas, part, state.t, key=k_up)
+    else:
+        v_bar, e_up = participation.transmit(
+            uplink, state.e_up, deltas, part, like=wf, key=k_up)
 
     return finish_round(state, strat, cfg, spec, wf, part, deltas, v_bar,
                         e_up, uplink, downlink, samp_state, key, k_down,

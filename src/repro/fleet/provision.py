@@ -115,8 +115,12 @@ def minibatch(fleet: Fleet, key: jax.Array, cfg,
     b = cfg.fleet.batch_size
     data, count = fleet.data, fleet.count
     if idx is not None:
-        data = tree_map(lambda a: jnp.take(a, idx, axis=0), data)
-        count = jnp.take(count, idx)
+        # scatter-sharded gather (repro.scale.shard): the population shards
+        # stay pinned to the client mesh axis and only the [m, ...] sampled
+        # rows are replicated -- identity-valued, plain take without a mesh
+        from repro.scale import shard
+        data = shard.sharded_take(data, idx)
+        count = shard.sharded_take(count, idx)
         cids = idx
     else:
         cids = jnp.arange(count.shape[0], dtype=jnp.int32)

@@ -15,7 +15,7 @@ import jax
 
 from repro import configs
 from repro.configs.base import (AsyncConfig, CompressorConfig, FedConfig,
-                                FleetConfig, SwitchConfig)
+                                FleetConfig, ScaleConfig, SwitchConfig)
 from repro.core import fedsgm
 from repro.data import synthetic
 from repro.models import build
@@ -71,6 +71,15 @@ def main():
                     help="mid-round departure probability for samplers "
                          "without an availability model (markov uses its "
                          "own chain)")
+    ap.add_argument("--ef-slots", type=int, default=0,
+                    help="capacity of the O(cap*d) uplink EF slot store "
+                         "(repro.scale.slots) replacing the dense [n, d] "
+                         "residual; requires --participation gather and "
+                         "cap >= m.  0 keeps the dense residual")
+    ap.add_argument("--cohorts", type=int, default=1,
+                    help="hierarchical two-tier payload aggregation: this "
+                         "many edge reducers each reduce their cohort's "
+                         "payloads, the server sums the partials")
     ap.add_argument("--multi-pod", action="store_true",
                     help="use the production mesh (needs devices)")
     ap.add_argument("--ckpt-dir", default=None,
@@ -105,7 +114,8 @@ def main():
         async_=AsyncConfig(enabled=args.async_buffer,
                            staleness=args.staleness,
                            max_staleness=args.max_staleness,
-                           depart=args.depart))
+                           depart=args.depart),
+        scale=ScaleConfig(ef_slots=args.ef_slots, cohorts=args.cohorts))
     loss_pair = lm.make_loss_pair(fns.forward, cfg, budget=6.0,
                                   aux_constraint=cfg.moe is not None)
     state = fedsgm.init_state(params, fed)
@@ -135,6 +145,14 @@ def main():
                               pool=args.fleet_pool, seq_len=args.seq,
                               vocab=cfg.vocab, hetero=0.5)
         buf = async_rounds.init_buffer(state.w, fed)
+        if args.ckpt_dir and start_round and args.async_buffer:
+            from repro import checkpoint
+            wire = checkpoint.restore_buffer(
+                args.ckpt_dir, start_round,
+                async_rounds.buffer_wire_struct(state.w, fed))
+            if wire is not None:
+                buf = async_rounds.buffer_from_wire(wire, state.w, fed)
+                print(f"restored staleness buffer at round {start_round}")
         for chunk in range(max(args.rounds // 10, 1)):
             if args.async_buffer:
                 state, buf, ahist = async_rounds.async_drive(
@@ -157,6 +175,9 @@ def main():
                 checkpoint.save_round(args.ckpt_dir, done, state,
                                       metadata={"arch": cfg.name},
                                       fleet=fleet, cfg=fed)
+                checkpoint.save_buffer(
+                    args.ckpt_dir, done,
+                    async_rounds.buffer_wire(buf, state.w, fed))
         return
 
     def batch_fn(t, k):
@@ -197,6 +218,11 @@ def main():
             from repro import checkpoint
             checkpoint.save_round(args.ckpt_dir, done, state,
                                   metadata={"arch": cfg.name})
+            if args.async_buffer:
+                from repro.engine import async_rounds
+                checkpoint.save_buffer(
+                    args.ckpt_dir, done,
+                    async_rounds.buffer_wire(buf, state.w, fed))
 
 
 if __name__ == "__main__":

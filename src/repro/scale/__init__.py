@@ -1,0 +1,20 @@
+"""repro.scale: population scale-out (DESIGN.md §Scale).
+
+Three legs, all opt-in via :class:`repro.configs.base.ScaleConfig` and all
+bit-parity-pinned at their defaults:
+
+* :mod:`repro.scale.slots` -- the O(m·d) uplink EF slot store: a
+  capacity-bounded ``[cap, d]`` residual pool with LRU slot assignment and
+  a mass-conserving eviction flush, replacing the dense ``[n, d]``
+  ``FedState.e_up`` (``ScaleConfig.ef_slots``),
+* :mod:`repro.scale.shard` -- client-axis sharding of population-sized
+  state (fleet shards, the slot pool) with scatter-sharded gathers,
+* hierarchical two-tier payload aggregation lives in
+  :class:`repro.comm.flat.FlatTransport` (``ScaleConfig.cohorts``): k edge
+  reducers run the payload-domain reduce per cohort, the server sums the k
+  partials.
+"""
+from repro.scale import shard, slots
+from repro.scale.slots import SlotStore
+
+__all__ = ["SlotStore", "shard", "slots"]

@@ -1,0 +1,60 @@
+"""Client-axis sharding of population-sized state (DESIGN.md §Scale).
+
+The population-scaled buffers -- ``Fleet.data`` shards, the slot store's
+residual pool, the per-client index vectors -- all carry a leading client
+axis.  These helpers pin that axis to the mesh's client axis (the
+``"client"`` logical name, ``sharding.partition.DEFAULT_LOGICAL``) so the
+population is distributed across devices instead of replicated, and keep
+per-round gathers *scatter-sharded*: the m sampled rows are gathered from
+the sharded source and only the small [m, ...] result is replicated -- the
+population itself never all-gathers.
+
+Every helper is the identity without an active mesh (CPU simulator / smoke
+tests), so single-device trajectories are bit-for-bit unchanged
+(tests/test_scale.py pins the 1-device-mesh no-op parity too).
+
+Usage::
+
+    >>> partition.activate_mesh(mesh)           # "client" -> "data" axis
+    >>> fleet = shard.constrain_fleet(fleet)    # population sharded
+    >>> batch = shard.sharded_take(fleet.data, idx)   # [m,...] replicated
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import partition
+
+tree_map = jax.tree_util.tree_map
+
+
+def constrain_fleet(fleet):
+    """Pin every ``Fleet`` leaf's leading (client) axis to the client mesh
+    axis; identity without a mesh."""
+    return fleet._replace(
+        data=partition.constrain_leading(fleet.data, "client"),
+        count=partition.constrain_leading(fleet.count, "client"))
+
+
+def constrain_store(store):
+    """Pin the slot store's pool rows and per-client index to the client
+    mesh axis (slots spread like clients do); identity without a mesh."""
+    return store._replace(
+        pool=partition.constrain_leading(store.pool, "client"),
+        owner=partition.constrain_leading(store.owner, "client"),
+        stamp=partition.constrain_leading(store.stamp, "client"),
+        weight=partition.constrain_leading(store.weight, "client"),
+        client_slot=partition.constrain_leading(store.client_slot, "client"))
+
+
+def sharded_take(tree, idx: jnp.ndarray):
+    """Scatter-sharded gather of m rows from a client-sharded stack: the
+    source's leading axis is constrained to the client mesh axis, the
+    ``jnp.take`` crosses shards for just those rows, and only the [m, ...]
+    result is forced replicated -- so provisioning and EF traffic never
+    all-gather the population.  Identity-valued always (constraints only);
+    plain ``jnp.take`` without a mesh."""
+    src = partition.constrain_leading(tree, "client")
+    out = tree_map(lambda a: jnp.take(a, idx, axis=0), src)
+    return partition.gather_leading(out)

@@ -1,0 +1,209 @@
+"""The O(m·d) uplink EF slot store (DESIGN.md §Scale).
+
+FedSGM's partial-participation analysis is about m of n clients per round,
+yet the engine's uplink EF residual ``FedState.e_up`` is a dense ``[n, d]``
+array: memory scales with the *population*, so n = 10^5-10^6 is impossible
+even though only m rows are touched per round.  This module replaces it
+with a capacity-bounded :class:`SlotStore` -- a ``[cap, d]`` residual pool
+keyed by client id with LRU slot assignment inside the jitted round:
+
+* **lookup** -- a re-sampled client reads its residual row back from its
+  slot; a client without a slot starts from the zero residual (exactly the
+  dense initialization, so first contact is bit-identical),
+* **allocation** -- misses claim slots by a static-shape priority argsort:
+  free slots first, then the least-recently-stamped occupied slot (LRU);
+  slots owned by this round's sampled clients are never reallocated.
+  ``cap >= m`` guarantees enough candidates every round,
+* **eviction** -- the evicted client's orphaned residual is folded back
+  through the uplink compressor and merged into this round's aggregate with
+  the Horvitz-Thompson weight recorded when the row was written, so EF mass
+  is conserved: the only leaked mass is the flush's own compression error
+  (``orphan - decompress(compress(orphan))``), tested in
+  tests/test_scale.py.
+
+Parity law: with ``cap >= n_clients`` there is always a free slot when a
+client lacks one, eviction never fires, and every pool row equals the
+dense ``e_up`` row of its owner -- trajectories are bit-for-bit the dense
+gather path's (the aggregation scatters the m wire messages back into the
+full [n] layout and reduces with the same op).
+
+Usage::
+
+    >>> cfg = FedConfig(participation="gather",
+    ...                 scale=ScaleConfig(ef_slots=128))
+    >>> state = rounds.init_state(params, cfg)   # e_up IS a SlotStore
+    >>> state, mets = rounds.round_step(state, batches, loss_pair, cfg)
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.comm import transports
+from repro.engine import participation
+from repro.sharding import partition
+
+# fold_in tag separating the eviction-flush PRNG stream from the round's
+# per-client uplink streams ("flsh")
+FLUSH_TAG = 0x666C7368
+
+
+class SlotStore(NamedTuple):
+    """Capacity-bounded uplink EF residual pool (one row per *slot*, not per
+    client).  A plain pytree: it scans, jits, donates and checkpoints like
+    the dense ``e_up`` it replaces (``FedState.e_up`` holds it directly).
+
+    Invariant: ``owner[s] == j  <=>  client_slot[j] == s`` (a partial
+    bijection); ``owner[s] < 0`` marks a free slot and unassigned clients
+    have ``client_slot[j] == -1``.  ``stamp`` is the round a slot was last
+    written (the LRU key); ``weight`` the sampler's HT aggregation weight at
+    that write (the eviction flush re-enters the aggregate with it)."""
+    pool: jnp.ndarray           # [cap, d] residual rows
+    owner: jnp.ndarray          # [cap] int32 client id, -1 free
+    stamp: jnp.ndarray          # [cap] int32 round of last write
+    weight: jnp.ndarray         # [cap] f32 HT weight at last write
+    client_slot: jnp.ndarray    # [n_clients] int32 slot of client j, -1 none
+
+
+def validate(cfg) -> None:
+    """Static config checks for the slot store (raised at init_state)."""
+    cap = cfg.scale.ef_slots
+    if cfg.participation != "gather":
+        raise ValueError(
+            "ScaleConfig.ef_slots requires participation='gather': the mask "
+            "path computes dense [n, d] per-client rows, so an O(m*d) "
+            "residual store cannot exist under it")
+    if cap < cfg.m:
+        raise ValueError(
+            f"ScaleConfig.ef_slots={cap} < m={cfg.m}: every sampled client "
+            "needs a slot within the round, so the pool capacity must be "
+            ">= m")
+    if cfg.async_.enabled:
+        raise ValueError(
+            "ScaleConfig.ef_slots does not compose with AsyncConfig.enabled "
+            "yet: the async engine's encode call site updates the dense "
+            "[n, d] e_up in place (ROADMAP: slot-store async encode); "
+            "two-tier aggregation (ScaleConfig.cohorts) composes with async "
+            "unchanged")
+
+
+def init(n_clients: int, cap: int, d: int, dtype) -> SlotStore:
+    """An empty store: all slots free, no client assigned."""
+    return SlotStore(
+        pool=jnp.zeros((cap, d), dtype),
+        owner=jnp.full((cap,), -1, jnp.int32),
+        stamp=jnp.full((cap,), -1, jnp.int32),
+        weight=jnp.zeros((cap,), jnp.float32),
+        client_slot=jnp.full((n_clients,), -1, jnp.int32))
+
+
+def resident_bytes(store: SlotStore) -> int:
+    """Total bytes held by the store (the bench's machine-independent
+    memory metric; the [n] client_slot index is the only n-term -- 4 bytes
+    per client, not 4*d)."""
+    return sum(int(x.size * x.dtype.itemsize) for x in store)
+
+
+def lookup(store: SlotStore, idx: jnp.ndarray):
+    """Residual rows for the sampled client ids ``idx`` ([m, d]; zeros for
+    clients without a slot -- the dense initialization) plus their current
+    slots ([m] int32, -1 miss)."""
+    cur = jnp.take(store.client_slot, idx)
+    rows = jnp.take(store.pool, jnp.clip(cur, 0), axis=0)
+    return jnp.where((cur >= 0)[:, None], rows, 0), cur
+
+
+def allocate(store: SlotStore, cur: jnp.ndarray, t) -> jnp.ndarray:
+    """LRU slot assignment for this round's sample (static shapes, in-jit).
+
+    Priority per slot: kept (owned by a currently-sampled client) ->
+    INT32_MAX (never reallocated), free -> -1 (first choice), occupied ->
+    its ``stamp`` (least recent first).  A stable argsort ranks the
+    candidates; the r-th miss (in sorted client order) claims the r-th
+    candidate.  ``cap >= m`` guarantees ``#free + #evictable >= #misses``.
+
+    Returns the [m] slot per sampled client (hits keep ``cur``)."""
+    cap = store.pool.shape[0]
+    int_max = jnp.iinfo(jnp.int32).max
+    kept = jnp.zeros((cap,), bool).at[
+        jnp.where(cur >= 0, cur, cap)].set(True, mode="drop")
+    prio = jnp.where(kept, int_max,
+                     jnp.where(store.owner < 0, -1, store.stamp))
+    order = jnp.argsort(prio)                   # stable: ties keep slot order
+    miss = cur < 0
+    rank = jnp.cumsum(miss.astype(jnp.int32)) - 1
+    cand = jnp.take(order, jnp.clip(rank, 0), axis=0).astype(jnp.int32)
+    return jnp.where(miss, cand, cur)
+
+
+def _flush(uplink, store: SlotStore, slots: jnp.ndarray,
+           evict: jnp.ndarray, m: int, key) -> jnp.ndarray:
+    """Fold evicted clients' orphaned residuals back through the compressor
+    and into this round's aggregate (the EF-mass conservation law): the
+    flush message is ``C(e_orphan)``, weighted by the HT weight stored when
+    the row was written.  Leak = the flush's own compression error."""
+    orphan = jnp.where(evict[:, None],
+                       jnp.take(store.pool, slots, axis=0), 0)
+    w_orph = jnp.where(evict, jnp.take(store.weight, slots), 0.0)
+    keys = None
+    if uplink.needs_key and key is not None:
+        keys = jax.random.split(jax.random.fold_in(key, FLUSH_TAG),
+                                evict.shape[0])
+    msgs, _ = uplink._ef_clients(jnp.zeros_like(orphan), orphan, key,
+                                 keys=keys)
+    return uplink.reduce_single(msgs, w_orph, m)
+
+
+def transmit(uplink, store: SlotStore, deltas: jnp.ndarray,
+             part: participation.Participation, t, key=None):
+    """The slot-store uplink call site (replaces ``participation.transmit``
+    when ``cfg.scale.ef_slots > 0``): EF14 over the m sampled rows with
+    residuals from the pool, LRU allocation, the eviction flush, and the
+    gather path's exact aggregation op.  Returns ``(v_bar, new_store)``.
+
+    ``deltas`` are the gather path's [m, d] rows (sorted client order);
+    ``t`` is the round counter (the LRU stamp)."""
+    idx, n, m = part.idx, part.n, part.m
+    cap = store.pool.shape[0]
+    w = participation.agg_weights(part)
+    w_m = jnp.take(w, idx)
+
+    # -- EF over the m rows, residuals reconstructed from the pool ---------
+    e_part, cur = lookup(store, idx)
+    keys = None
+    if uplink.needs_key and key is not None:
+        keys = jnp.take(jax.random.split(key, n), idx, axis=0)
+    msgs, e_new = uplink._ef_clients(e_part, deltas, key, keys=keys)
+    e_new = partition.constrain_leading(e_new, "client")
+
+    # -- slot allocation + eviction ----------------------------------------
+    slots = allocate(store, cur, t)
+    old_owner = jnp.take(store.owner, slots)
+    evict = (cur < 0) & (old_owner >= 0)
+    v_flush = None
+    if cap < n:     # static: cap >= n never evicts (a free slot always ranks
+        v_flush = _flush(uplink, store, slots, evict, m, key)   # first)
+
+    # -- aggregation: scatter the m wire messages back into the full [n]
+    #    layout and reduce with the [n] weights -- the *same op* as the
+    #    dense gather path, so cap >= n trajectories match bit-for-bit ------
+    full = transports.scatter_rows(msgs, idx, n)
+    v_bar = uplink.reduce(full, w, m)
+    if v_flush is not None:
+        v_bar = v_bar + v_flush
+
+    # -- store update (hits rewrite in place; misses claim their slot) -----
+    t32 = jnp.asarray(t, jnp.int32)
+    new_store = SlotStore(
+        pool=partition.constrain_leading(
+            store.pool.at[slots].set(e_new.astype(store.pool.dtype)),
+            "client"),
+        owner=store.owner.at[slots].set(idx.astype(jnp.int32)),
+        stamp=store.stamp.at[slots].set(t32),
+        weight=store.weight.at[slots].set(w_m.astype(jnp.float32)),
+        client_slot=store.client_slot
+        .at[jnp.where(evict, old_owner, n)].set(-1, mode="drop")
+        .at[idx].set(slots.astype(jnp.int32)))
+    return v_bar, new_store

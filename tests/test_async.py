@@ -362,3 +362,56 @@ class TestBufferPlumbing:
                                       [2.0, 0.0, 0.0, 1.0])
         np.testing.assert_array_equal(np.asarray(out.mask),
                                       np.asarray(part.mask))
+
+
+class TestBufferSidecar:
+    """Checkpoint sidecar for the staleness buffer (ISSUE 6 satellite):
+    StaleBuffer.msgs already hold the uplink's wire representation (bit-
+    packed words / select payloads), so the sidecar stores them AS-IS --
+    re-quantizing dense rows through the codec is NOT bit-stable (XLA may
+    reassociate the decode scaling, see async_rounds.buffer_wire) -- and a
+    save -> restore -> continue run must be bit-identical."""
+
+    @pytest.mark.parametrize("comm,kind", (("packed", "quant"),
+                                           ("packed", "topk"),
+                                           ("dense", "quant")))
+    def test_save_restore_continue_bit_equal(self, np_data, params, comm,
+                                             kind, tmp_path):
+        from repro import checkpoint
+        cfg = _cfg(comm=comm, uplink=KINDS[kind],
+                   async_=_async(max_staleness=100, depart=0.6))
+        state = rounds.init_state(params, cfg)
+        buf = async_rounds.init_buffer(state.w, cfg)
+        step = jax.jit(lambda s, b: async_rounds.async_round_step(
+            s, b, np_data, npc.loss_pair, cfg))
+        for _ in range(3):
+            state, buf, _ = step(state, buf)
+        assert float(jnp.sum(buf.occupied)) > 0     # sidecar is non-trivial
+
+        wire = async_rounds.buffer_wire(buf, state.w, cfg)
+        checkpoint.save_buffer(str(tmp_path), 3, wire)
+        like = async_rounds.buffer_wire_struct(state.w, cfg)
+        restored = checkpoint.restore_buffer(str(tmp_path), 3, like)
+        assert restored is not None
+        buf2 = async_rounds.buffer_from_wire(restored, state.w, cfg)
+        _assert_trees_equal(buf, buf2)
+
+        # continue: the restored run replays bit-for-bit
+        s1, b1, h1 = step(state, buf)
+        s2, b2, h2 = step(state, buf2)
+        _assert_trees_equal((s1, b1, h1), (s2, b2, h2))
+
+    def test_restore_missing_returns_none(self, params, tmp_path):
+        from repro import checkpoint
+        cfg = _cfg(async_=_async())
+        like = async_rounds.buffer_wire_struct(params, cfg)
+        assert like is not None
+        assert checkpoint.restore_buffer(str(tmp_path), 7, like) is None
+        assert checkpoint.restore_buffer(str(tmp_path), None, like) is None
+
+    def test_disabled_struct_is_none(self, params):
+        assert async_rounds.buffer_wire_struct(params, _cfg()) is None
+        from repro import checkpoint
+        # saving a disabled buffer is a no-op, not an error
+        checkpoint.save_buffer("/nonexistent-dir-unused", 1, None)
+

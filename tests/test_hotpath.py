@@ -357,6 +357,43 @@ class TestEngineHotpath:
         np.testing.assert_allclose(
             float(m_fused[-1].f), float(m_ref[-1].f), rtol=1e-5)
 
+    def test_fused_full_eval_mask_matches_unfused(self, np_data, params):
+        """Full-participation mask mode evaluates exactly the local-step
+        rows (all n), so the fused vjp path now also covers full_eval=True
+        there (ISSUE 6 satellite).  The state trajectory must stay
+        bit-identical to the explicit separate-eval implementation.
+        Partial-participation mask mode intentionally stays unfused (the
+        mask-vs-gather parity oracle compares eval programs bit-for-bit at
+        m < n -- see compute_round)."""
+        cfg = _cfg(m=N, participation="mask", full_eval=True,
+                   uplink=CompressorConfig(kind="topk", ratio=0.25, block=8),
+                   downlink=CompressorConfig(kind="topk", ratio=0.25,
+                                             block=8))
+        s_fused, m_fused = _traj(cfg, params, np_data)
+
+        from repro.engine import strategies as strat_mod
+
+        class _Unfused(strat_mod.FedSGM):
+            name = "fedsgm-unfused-mask-test"
+
+            def local_objective(self, loss_pair, sigma, cfg):
+                def obj(p, b):
+                    f, g = loss_pair(p, b)
+                    return self.blend_values(f, g, sigma, cfg)
+                return obj
+
+        strat_mod.register_strategy(_Unfused)
+        try:
+            s_ref, m_ref = _traj(cfg.replace(strategy=_Unfused.name),
+                                 params, np_data)
+        finally:
+            strat_mod._STRATEGIES.pop(_Unfused.name, None)
+        for a, b in zip(jax.tree_util.tree_leaves(s_fused),
+                        jax.tree_util.tree_leaves(s_ref)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        np.testing.assert_allclose(
+            float(m_fused[-1].f), float(m_ref[-1].f), rtol=1e-5)
+
     def test_lean_metrics_gates_delta_norm_only(self, np_data, params):
         cfg = _cfg(uplink=CompressorConfig(kind="topk", ratio=0.25, block=8))
         s_full, m_full = _traj(cfg, params, np_data)

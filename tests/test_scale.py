@@ -1,0 +1,350 @@
+"""Population scale-out tests (ISSUE 6): the O(m·d) EF slot store's
+bit-parity law (cap >= n trajectories identical to the dense gather
+engine) across strategy x compressor x wire, the LRU/eviction invariants
+and the EF-mass conservation law under eviction, hierarchical two-tier
+payload aggregation exactness for every cohort count, the slot-store
+config validation errors, and the client-axis sharding helpers' no-op
+parity (no mesh and a 1-device mesh)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comm import flat, transports
+from repro.configs.base import (AsyncConfig, CompressorConfig, FedConfig,
+                                ScaleConfig, SwitchConfig)
+from repro.engine import participation, rounds
+from repro.scale import shard, slots
+from repro.sharding import partition
+from repro.tasks import np_classification as npc
+
+N = 12
+M = 4
+
+
+@pytest.fixture(scope="module")
+def np_data():
+    key = jax.random.PRNGKey(0)
+    (xs, ys), _ = npc.make_dataset(key, n_clients=N)
+    return xs, ys
+
+
+@pytest.fixture(scope="module")
+def params(np_data):
+    xs, _ = np_data
+    return npc.init_params(jax.random.PRNGKey(1), xs.shape[-1])
+
+
+def _cfg(**kw):
+    base = dict(n_clients=N, m=M, local_steps=2, lr=0.1,
+                switch=SwitchConfig(mode="hard", eps=0.35),
+                participation="gather",
+                uplink=CompressorConfig(kind="topk", ratio=0.25, block=8),
+                downlink=CompressorConfig(kind="none"))
+    base.update(kw)
+    return FedConfig(**base)
+
+
+def _traj(cfg, params, batches, T=4):
+    state = rounds.init_state(params, cfg)
+    step = jax.jit(lambda s, b: rounds.round_step(s, b, npc.loss_pair, cfg))
+    mets = []
+    for _ in range(T):
+        state, m = step(state, batches)
+        mets.append(m)
+    return state, mets
+
+
+def _assert_trees_equal(a, b):
+    for x, y in zip(jax.tree_util.tree_leaves(a),
+                    jax.tree_util.tree_leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# Slot-store parity: cap >= n is bit-identical to the dense gather engine
+# ---------------------------------------------------------------------------
+
+class TestSlotStoreParity:
+    @pytest.mark.parametrize("comm,kind,kw", [
+        ("dense", "topk", dict(ratio=0.25, block=8)),
+        ("packed", "topk", dict(ratio=0.25, block=8)),
+        ("packed", "quant", dict(bits=4, block=8)),
+        ("dense", "quant", dict(bits=4, block=8)),
+        ("dense", "randk", dict(ratio=0.25)),
+    ])
+    def test_cap_ge_n_matches_dense_engine(self, np_data, params, comm,
+                                           kind, kw):
+        """The aggregation scatters the m wire messages back into the full
+        [n] layout and reduces with the [n] weights -- the same op as the
+        dense gather path -- so cap >= n trajectories are bit-for-bit the
+        pre-PR engine's (deterministic AND stochastic compressors: the
+        per-client key streams are derived identically)."""
+        up = CompressorConfig(kind=kind, **kw)
+        dense = _traj(_cfg(comm=comm, uplink=up), params, np_data)[0]
+        slot = _traj(_cfg(comm=comm, uplink=up,
+                          scale=ScaleConfig(ef_slots=N)), params, np_data)[0]
+        assert isinstance(slot.e_up, slots.SlotStore)
+        _assert_trees_equal(dense.w, slot.w)
+        # every pool row equals the dense e_up row of its owner
+        pool = np.asarray(slot.e_up.pool)
+        owner = np.asarray(slot.e_up.owner)
+        e_dense = np.asarray(dense.e_up)
+        for s, j in enumerate(owner):
+            if j >= 0:
+                np.testing.assert_array_equal(pool[s], e_dense[j])
+
+    @pytest.mark.parametrize("strategy,mode", [
+        ("fedsgm", "hard"), ("fedsgm-soft", "soft"), ("penalty-fedavg",
+                                                      "hard")])
+    def test_parity_across_strategies(self, np_data, params, strategy, mode):
+        cfg_kw = dict(strategy=strategy,
+                      switch=SwitchConfig(mode=mode, eps=0.35, beta=4.0))
+        dense = _traj(_cfg(**cfg_kw), params, np_data)[0]
+        slot = _traj(_cfg(scale=ScaleConfig(ef_slots=N), **cfg_kw),
+                     params, np_data)[0]
+        _assert_trees_equal(dense.w, slot.w)
+
+    def test_store_invariant_after_rounds(self, np_data, params):
+        """owner[s] == j <=> client_slot[j] == s (partial bijection), for
+        the evicting capacity too."""
+        for cap in (M, N):
+            state = _traj(_cfg(scale=ScaleConfig(ef_slots=cap)),
+                          params, np_data, T=5)[0]
+            owner = np.asarray(state.e_up.owner)
+            cslot = np.asarray(state.e_up.client_slot)
+            for s, j in enumerate(owner):
+                if j >= 0:
+                    assert cslot[j] == s
+            for j, s in enumerate(cslot):
+                if s >= 0:
+                    assert owner[s] == j
+
+    def test_evicting_mode_stays_finite(self, np_data, params):
+        state, mets = _traj(_cfg(scale=ScaleConfig(ef_slots=M)),
+                            params, np_data, T=6)
+        for leaf in jax.tree_util.tree_leaves(state.w):
+            assert np.isfinite(np.asarray(leaf)).all()
+        assert np.isfinite(float(mets[-1].f))
+
+
+# ---------------------------------------------------------------------------
+# Config validation
+# ---------------------------------------------------------------------------
+
+class TestValidate:
+    def test_mask_participation_raises(self, params):
+        cfg = _cfg(participation="mask", scale=ScaleConfig(ef_slots=N))
+        with pytest.raises(ValueError, match="gather"):
+            rounds.init_state(params, cfg)
+
+    def test_cap_below_m_raises(self, params):
+        cfg = _cfg(scale=ScaleConfig(ef_slots=M - 1))
+        with pytest.raises(ValueError, match=">= m"):
+            rounds.init_state(params, cfg)
+
+    def test_async_raises(self, params):
+        cfg = _cfg(scale=ScaleConfig(ef_slots=N),
+                   async_=AsyncConfig(enabled=True))
+        with pytest.raises(ValueError, match="Async"):
+            rounds.init_state(params, cfg)
+
+
+# ---------------------------------------------------------------------------
+# Eviction: EF mass is conserved through the compressor flush
+# ---------------------------------------------------------------------------
+
+def _part(idx, n):
+    idx = jnp.asarray(idx, jnp.int32)
+    mask = jnp.zeros((n,), jnp.float32).at[idx].set(1.0)
+    return participation.Participation(mask, idx, n, int(idx.shape[0]), mask)
+
+
+class TestEvictionFlush:
+    def test_flush_is_compressed_orphan_with_stored_weight(self):
+        """Disjoint second-round sample at cap = m forces both residents
+        out: the aggregate must decompose exactly into the regular HT
+        reduce of the new messages PLUS the compressor image of each
+        orphaned residual under the weight recorded when its row was
+        written -- EF mass re-enters the stream instead of vanishing."""
+        n, cap, m, d = 6, 2, 2, 32
+        ccfg = CompressorConfig(kind="topk", ratio=0.25, block=8)
+        spec = flat.spec_of({"w": jnp.zeros((d,))})
+        ft = flat.FlatTransport(transports.get_transport(ccfg, "packed"),
+                                spec)
+        key = jax.random.PRNGKey(0)
+        store = slots.init(n, cap, d, jnp.float32)
+
+        part0 = _part([0, 1], n)
+        d0 = jax.random.normal(key, (m, d))
+        _, store1 = slots.transmit(ft, store, d0, part0, 0)
+        # residents hold nonzero residuals (top-k is lossy)
+        assert float(jnp.abs(store1.pool).sum()) > 0
+
+        part1 = _part([2, 3], n)
+        d1 = jax.random.normal(jax.random.fold_in(key, 1), (m, d))
+        v1, store2 = slots.transmit(ft, store1, d1, part1, 1)
+
+        # manual decomposition, replicating the flush row order (the slot
+        # each new client claimed)
+        msgs, _ = ft._ef_clients(jnp.zeros_like(d1), d1, None)
+        full = transports.scatter_rows(msgs, part1.idx, n)
+        v_agg = ft.reduce(full, participation.agg_weights(part1), m)
+        claimed = jnp.take(store2.client_slot, part1.idx)
+        orphan = jnp.take(store1.pool, claimed, axis=0)
+        w_orph = jnp.take(store1.weight, claimed)
+        omsgs, _ = ft._ef_clients(jnp.zeros_like(orphan), orphan, None)
+        v_flush = ft.reduce_single(omsgs, w_orph, m)
+        np.testing.assert_array_equal(np.asarray(v1),
+                                      np.asarray(v_agg + v_flush))
+        # leaked mass is exactly the flush's own compression error
+        leak = orphan - jax.vmap(ft.codec.decode)(omsgs)
+        assert float(jnp.abs(leak).sum()) < float(jnp.abs(orphan).sum())
+
+        # bookkeeping: evicted clients lost their slots, new owners hold
+        # the invariant
+        cslot = np.asarray(store2.client_slot)
+        assert cslot[0] == -1 and cslot[1] == -1
+        owner = np.asarray(store2.owner)
+        assert sorted(owner.tolist()) == [2, 3]
+
+    def test_no_eviction_at_cap_ge_n(self):
+        """A free slot always outranks an occupied one, so cap >= n never
+        evicts: residents keep their slots across disjoint samples."""
+        n, d = 6, 16
+        ccfg = CompressorConfig(kind="topk", ratio=0.25, block=8)
+        tmpl = flat.spec_of({"w": jnp.zeros((d,))})
+        ft = flat.FlatTransport(transports.get_transport(ccfg, "packed"),
+                                tmpl)
+        store = slots.init(n, n, d, jnp.float32)
+        key = jax.random.PRNGKey(0)
+        _, s1 = slots.transmit(ft, store, jax.random.normal(key, (2, d)),
+                               _part([0, 1], n), 0)
+        _, s2 = slots.transmit(ft, s1,
+                               jax.random.normal(jax.random.fold_in(key, 1),
+                                                 (2, d)),
+                               _part([2, 3], n), 1)
+        cslot = np.asarray(s2.client_slot)
+        assert cslot[0] >= 0 and cslot[1] >= 0      # residents survived
+        assert len({int(s) for s in cslot if s >= 0}) == 4
+
+
+# ---------------------------------------------------------------------------
+# Hierarchical two-tier aggregation
+# ---------------------------------------------------------------------------
+
+class TestTwoTier:
+    rows = 32
+
+    def _spec(self):
+        return flat.spec_of({"W": jnp.zeros((24, 24)),
+                             "b": jnp.zeros((24,))})
+
+    def test_select_bit_equal_every_k(self):
+        """Integer-valued f32 payloads with 0/1 weights make every cohort
+        partial an exact sum, so the two-tier select reduce must be
+        BIT-equal to the flat reduce for every k."""
+        spec = self._spec()
+        t = transports.get_transport(
+            CompressorConfig(kind="topk", ratio=0.25, block=8), "packed")
+        key = jax.random.PRNGKey(0)
+        ints = jnp.round(
+            jax.random.normal(key, (self.rows, spec.d)) * 100.0)
+        w = (jax.random.uniform(jax.random.fold_in(key, 1), (self.rows,))
+             < 0.5).astype(jnp.float32)
+        msgs = flat.FlatTransport(t, spec).codec.pack(ints)
+        ref = None
+        for k in (1, 2, 4, 8, 16):
+            ft = flat.FlatTransport(t, spec, cohorts=k)
+            v = np.asarray(ft.reduce(msgs, w, float(self.rows)))
+            if ref is None:
+                ref = v
+            else:
+                np.testing.assert_array_equal(v, ref, err_msg=f"k={k}")
+
+    def test_quant_allclose_every_k(self):
+        """Quant words decode to real floats, so the cohort split is a
+        reordered sum -- pinned allclose, not bit-equal."""
+        spec = self._spec()
+        t = transports.get_transport(
+            CompressorConfig(kind="quant", bits=4, block=8), "packed")
+        key = jax.random.PRNGKey(2)
+        reals = jax.random.normal(key, (self.rows, spec.d))
+        w = (jax.random.uniform(jax.random.fold_in(key, 1), (self.rows,))
+             < 0.5).astype(jnp.float32)
+        msgs = flat.FlatTransport(t, spec).codec.pack(reals)
+        ref = None
+        for k in (1, 2, 4, 8, 16):
+            ft = flat.FlatTransport(t, spec, cohorts=k)
+            v = np.asarray(ft.reduce(msgs, w, float(self.rows)))
+            if ref is None:
+                ref = v
+            else:
+                np.testing.assert_allclose(v, ref, rtol=1e-5, atol=1e-6,
+                                           err_msg=f"k={k}")
+
+    def test_dense_wire_cohorts_allclose(self):
+        spec = self._spec()
+        t = transports.get_transport(CompressorConfig(kind="none"), "ref")
+        key = jax.random.PRNGKey(3)
+        x = jax.random.normal(key, (self.rows, spec.d))
+        w = jnp.ones((self.rows,))
+        ref = np.asarray(
+            flat.FlatTransport(t, spec).reduce(x, w, float(self.rows)))
+        v = np.asarray(flat.FlatTransport(t, spec, cohorts=4)
+                       .reduce(x, w, float(self.rows)))
+        np.testing.assert_allclose(v, ref, rtol=1e-6, atol=1e-7)
+
+    def test_rows_not_divisible_raises(self):
+        spec = self._spec()
+        t = transports.get_transport(
+            CompressorConfig(kind="topk", ratio=0.25, block=8), "packed")
+        msgs = flat.FlatTransport(t, spec).codec.pack(
+            jnp.ones((6, spec.d)))
+        ft = flat.FlatTransport(t, spec, cohorts=4)
+        with pytest.raises(ValueError, match="cohorts"):
+            ft.reduce(msgs, jnp.ones((6,)), 6.0)
+
+    def test_engine_round_with_cohorts_matches_flat(self, np_data, params):
+        """cohorts = k on the engine's uplink reduce: state allclose to the
+        k = 1 engine (reordered sum only)."""
+        up = CompressorConfig(kind="quant", bits=4, block=8)
+        base = _cfg(comm="packed", uplink=up, m=6)
+        flat_s = _traj(base, params, np_data)[0]
+        two = _traj(base.replace(scale=ScaleConfig(cohorts=2)),
+                    params, np_data)[0]
+        for a, b in zip(jax.tree_util.tree_leaves(flat_s.w),
+                        jax.tree_util.tree_leaves(two.w)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Client-axis sharding helpers
+# ---------------------------------------------------------------------------
+
+class TestShard:
+    def test_identity_without_mesh(self):
+        data = {"x": jnp.arange(24.0).reshape(6, 4)}
+        idx = jnp.asarray([1, 3], jnp.int32)
+        out = shard.sharded_take(data, idx)
+        np.testing.assert_array_equal(np.asarray(out["x"]),
+                                      np.asarray(data["x"][idx]))
+        store = slots.init(6, 4, 8, jnp.float32)
+        _assert_trees_equal(store, shard.constrain_store(store))
+
+    def test_one_device_mesh_noop_parity(self, np_data, params):
+        """Slot-mode trajectories under an activated 1-device mesh are
+        bit-identical to the mesh-less run: the sharding constraints are
+        value-identities."""
+        ref = _traj(_cfg(scale=ScaleConfig(ef_slots=N)), params, np_data)[0]
+        mesh = jax.sharding.Mesh(
+            np.asarray(jax.devices()[:1]).reshape(1), ("data",))
+        partition.activate_mesh(mesh)
+        try:
+            under = _traj(_cfg(scale=ScaleConfig(ef_slots=N)),
+                          params, np_data)[0]
+        finally:
+            partition.activate_mesh(None)
+        _assert_trees_equal(ref.w, under.w)
+        _assert_trees_equal(ref.e_up, under.e_up)

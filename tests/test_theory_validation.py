@@ -153,3 +153,73 @@ class TestInvariants:
         np.testing.assert_allclose(
             np.asarray(gfull["w"]),
             np.asarray((1 - s) * gf["w"] + s * gg["w"]), rtol=1e-6)
+
+
+class TestSamplerTheory:
+    """Sampler-aware Theorem 7 hooks (ISSUE 6 satellite): the HT variance
+    factor from exact inclusion probabilities, its uniform closed form,
+    the effective participation ratio's exact reduction to n/m under the
+    uniform law, and the Madow systematic sampler's empirical variance
+    against the Poisson upper bound."""
+
+    def test_ht_variance_uniform_closed_form(self):
+        n, m = 20, 5
+        V = theory.ht_variance([m / n] * n, [1.0 / n] * n)
+        assert V == pytest.approx((1.0 - m / n) / m, rel=1e-12)
+
+    def test_effective_ratio_uniform_reduces_exactly(self):
+        n, m = 24, 6
+        r = theory.effective_ratio([m / n] * n, [1.0 / n] * n, m)
+        assert r == pytest.approx(n / m, rel=1e-9)
+        g_u = theory.gamma_partial(E=4, q=0.5, q0=0.8, n=n, m=m)
+        g_s = theory.gamma_partial_sampled(
+            4, 0.5, 0.8, [m / n] * n, [1.0 / n] * n, m)
+        assert g_s == pytest.approx(g_u, rel=1e-9)
+
+    def test_nonuniform_inclusion_inflates_ratio(self):
+        """For fixed uniform population weights, pi proportional to q
+        minimizes V, so any skewed inclusion law gives r_eff >= n/m (the
+        importance-sampling penalty Theorem 7's Gamma sees)."""
+        n, m = 16, 4
+        q = [1.0 / n] * n
+        skew = np.linspace(1.0, 5.0, n)
+        pi = (m * skew / skew.sum()).tolist()
+        assert theory.effective_ratio(pi, q, m) > n / m
+        assert theory.gamma_partial_sampled(2, 0.5, 0.8, pi, q, m) > \
+            theory.gamma_partial(2, 0.5, 0.8, n, m)
+
+    def test_zero_inclusion_with_mass_raises(self):
+        with pytest.raises(ValueError, match="inclusion"):
+            theory.ht_variance([0.0, 0.5], [0.5, 0.5])
+        # zero weight on the never-sampled client is fine
+        assert theory.ht_variance([0.0, 1.0], [0.0, 1.0]) == 0.0
+
+    def test_madow_empirical_variance_within_poisson_bound(self):
+        """The weighted sampler's HT estimator (Madow systematic picks over
+        capped inclusion probabilities, engine reduction
+        sum_j w_j x_j / m): empirical variance over many draws must sit
+        within the Poisson bound V * B^2 -- negatively associated
+        inclusions only remove variance."""
+        from repro.fleet import samplers
+        n, m, R = 16, 4, 4096
+        key = jax.random.PRNGKey(0)
+        q = jax.nn.softmax(jax.random.normal(key, (n,)))
+        x = jax.random.uniform(jax.random.fold_in(key, 1), (n,),
+                               minval=-1.0, maxval=1.0)
+        pi = samplers.capped_inclusion(q, m)
+
+        def estimate(k):
+            idx = samplers.systematic_pick(k, pi, m)
+            mask = jnp.zeros((n,)).at[idx].set(1.0)
+            w = mask * (m * q / jnp.maximum(pi, 1e-12))
+            return jnp.sum(w * x) / m
+
+        keys = jax.random.split(jax.random.fold_in(key, 2), R)
+        est = jax.vmap(estimate)(keys)
+        # unbiased for the q-weighted population mean
+        np.testing.assert_allclose(float(est.mean()),
+                                   float(jnp.sum(q * x)), atol=0.02)
+        V = theory.ht_variance(np.asarray(pi).tolist(),
+                               np.asarray(q).tolist())
+        B = float(jnp.max(jnp.abs(x)))
+        assert float(est.var()) <= V * B * B * 1.05
