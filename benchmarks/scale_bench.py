@@ -17,6 +17,10 @@ Three record families, seeding BENCH_scale.json:
   count k in {1, 2, 4, 8} on the same payload stack (select scatter-add
   and quant unpack-multiply-add), with the max deviation vs the flat
   k = 1 reduce recorded per k.
+* ``sharded`` (``--sharded``, separate subprocess) -- ``shard.sharded_take``
+  latency under a forced 4-host-device mesh vs the meshless take, with the
+  gathered rows checked exact; a parity/latency probe of the client-axis
+  sharding on hosts without accelerators.
 
 ``--smoke`` is the CI guard (job ``scale-smoke``):
 
@@ -343,6 +347,79 @@ def smoke(n=64, slack=1.5) -> int:
     return 0
 
 
+# ---------------------------------------------------------------------------
+# Sharded timing (4 forced host-platform devices, subprocess)
+# ---------------------------------------------------------------------------
+
+def sharded_worker(n=4096, m=M, iters=5):
+    """Runs INSIDE the forced-4-device subprocess: time the scatter-sharded
+    client gather (``shard.sharded_take``) under an active 4-way mesh vs
+    the meshless single-device take on the same [n, PER, D] population, and
+    print one JSON record per line."""
+    from repro.scale import shard
+    from repro.sharding import partition
+
+    ndev = jax.device_count()
+    key = jax.random.PRNGKey(0)
+    data = {"x": jax.random.normal(key, (n, PER, D)),
+            "y": jax.random.normal(jax.random.fold_in(key, 1), (n, PER))}
+    idx = jax.random.randint(jax.random.fold_in(key, 2), (m,), 0, n)
+
+    us_plain, _ = timed(jax.jit(lambda d, i: shard.sharded_take(d, i)),
+                        data, idx, iters=iters)
+    mesh = jax.sharding.Mesh(np.asarray(jax.devices()).reshape(ndev),
+                             ("data",))
+    partition.activate_mesh(mesh)
+    try:
+        take = jax.jit(lambda d, i: shard.sharded_take(d, i))
+        us_mesh, out = timed(take, data, idx, iters=iters)
+        for leaf, ref in zip(jax.tree_util.tree_leaves(out),
+                             (data["x"][idx], data["y"][idx])):
+            np.testing.assert_array_equal(np.asarray(leaf), np.asarray(ref))
+    finally:
+        partition.activate_mesh(None)
+    rec = {"n": n, "m": m, "devices": ndev,
+           "us_take_meshless": round(us_plain, 1),
+           "us_take_sharded": round(us_mesh, 1),
+           "gather_exact": True}
+    print("SHARDED-RECORD " + json.dumps(rec))
+    return 0
+
+
+def sharded_records(out: str = "BENCH_scale.json"):
+    """Re-exec this module in a subprocess with 4 forced host-platform
+    devices, collect the sharded-take timing record, and merge it into the
+    ``sharded`` family of ``out`` (host CPU timings of a forced device
+    mesh: a parity/latency probe, not an accelerator measurement)."""
+    import os
+    import subprocess
+
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=4").strip()
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.scale_bench", "--sharded-worker"],
+        capture_output=True, text=True, env=env, timeout=900)
+    if proc.returncode != 0:
+        sys.stderr.write(proc.stdout + proc.stderr)
+        raise RuntimeError("sharded worker subprocess failed")
+    records = [json.loads(line.split(" ", 1)[1])
+               for line in proc.stdout.splitlines()
+               if line.startswith("SHARDED-RECORD ")]
+    try:
+        with open(out) as f:
+            table = json.load(f)
+    except FileNotFoundError:
+        table = {"bench": "scale", "records": {}}
+    table["records"]["sharded"] = records
+    with open(out, "w") as f:
+        json.dump(table, f, indent=1)
+    for rec in records:
+        emit(f"scale_sharded_take_n{rec['n']}", rec["us_take_sharded"],
+             f"meshless={rec['us_take_meshless']};devices={rec['devices']}")
+    return records
+
+
 def scale_table(out: str = "BENCH_scale.json"):
     records = {"memory": memory_records(), "rounds": round_records(),
                "twotier": twotier_records()}
@@ -359,11 +436,24 @@ def main():
     ap.add_argument("--smoke", action="store_true",
                     help="CI guard (slot parity + two-tier exactness + "
                          "memory + regression)")
+    ap.add_argument("--sharded", action="store_true",
+                    help="time sharded_take under a forced 4-device mesh "
+                         "(subprocess) and merge into BENCH_scale.json")
+    ap.add_argument("--sharded-worker", action="store_true",
+                    help=argparse.SUPPRESS)
     ap.add_argument("--out", default="BENCH_scale.json")
     ap.add_argument("--n", type=int, default=64)
     args = ap.parse_args()
     if args.smoke:
         sys.exit(smoke(n=args.n))
+    if args.sharded_worker:
+        sys.exit(sharded_worker())
+    if args.sharded:
+        print("name,us_per_call,derived")
+        records = sharded_records(args.out)
+        print(f"merged {len(records)} sharded records into {args.out}",
+              file=sys.stderr)
+        return
     print("name,us_per_call,derived")
     records = scale_table(args.out)
     n = sum(len(v) for v in records.values())

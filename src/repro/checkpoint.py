@@ -95,19 +95,90 @@ def fleet_metadata(fleet, cfg=None) -> dict:
     return meta
 
 
+# ---------------------------------------------------------------------------
+# Uplink EF residual compression (opt-in checkpoint shrink)
+# ---------------------------------------------------------------------------
+
+def residual_to_wire(e_up, params, cfg):
+    """Opt-in compression of the uplink EF residual for checkpointing: the
+    dense ``[n, d]`` rows (or a SlotStore's ``[cap, d]`` pool) re-encoded
+    through the *uplink wire format* (FlatPacked values + uint16 offsets /
+    FlatQuant bit-packed words), shrinking the dominant checkpoint term
+    from n*d floats to n * wire_bytes.
+
+    Returns None when no deterministic packed wire exists for the uplink
+    (dense wires, identity/natural kinds, randk's per-client PRNG packing,
+    unpackable quant widths, or no residual at all) -- the caller then
+    stores the residual dense as before, so the knob is safe to leave on.
+
+    Compression-error contract: restore yields ``decode(pack(e))`` row by
+    row.  For the select kinds that keeps each block's top-k entries
+    bit-exactly and zeroes the rest; for quant every entry quantizes to b
+    bits.  A continued run therefore differs from the uncompressed
+    continuation by at most the compressor's own error on the residual --
+    the same operator the EF stream applies every round -- and EF
+    re-absorbs the discarded mass over subsequent rounds
+    (tests/test_scale.py::TestResidualCheckpoint)."""
+    if e_up is None:
+        return None
+    from repro.comm import flat
+    from repro.scale import slots
+    spec = flat.spec_of(params)
+    uplink, _ = flat.flat_transports_for(cfg, spec)
+    codec = uplink.codec
+    if codec is None or codec.per_client_keys:
+        return None
+    if isinstance(e_up, slots.SlotStore):
+        return e_up._replace(pool=codec.pack(e_up.pool))
+    return codec.pack(e_up)
+
+
+def residual_from_wire(wire, params, cfg, like=None):
+    """Decode a :func:`residual_to_wire` sidecar back into the engine's
+    residual representation (dense rows or a SlotStore with a decoded
+    pool).  ``like`` supplies the target dtype (defaults to the model
+    spec's)."""
+    from repro.comm import flat
+    from repro.scale import slots
+    spec = flat.spec_of(params)
+    uplink, _ = flat.flat_transports_for(cfg, spec)
+    if isinstance(wire, slots.SlotStore):
+        dt = like.pool.dtype if like is not None else spec.dtype
+        return wire._replace(
+            pool=uplink.codec.decode(wire.pool).astype(dt))
+    dt = like.dtype if like is not None else spec.dtype
+    return uplink.codec.decode(wire).astype(dt)
+
+
 def save_round(ckpt_dir: str, t: int, state, keep: int = 3,
-               metadata: Optional[dict] = None, fleet=None, cfg=None):
+               metadata: Optional[dict] = None, fleet=None, cfg=None,
+               compress_residual: bool = False, params=None):
     """Save a round checkpoint (plus the fleet, when given) and
-    garbage-collect old ones."""
+    garbage-collect old ones.
+
+    ``compress_residual=True`` (requires ``params`` and ``cfg``) re-encodes
+    the uplink EF residual through the wire format into a
+    ``round_<t>_eup`` sidecar and drops it from the main npz (see
+    :func:`residual_to_wire` for the error contract); uplinks without a
+    deterministic packed wire fall back to the dense layout silently."""
     metadata = dict(metadata or {})
     if fleet is not None:
         metadata["fleet"] = fleet_metadata(fleet, cfg)
         save(os.path.join(ckpt_dir, f"round_{t}_fleet"), fleet,
              metadata["fleet"])
+    if compress_residual:
+        if params is None or cfg is None:
+            raise ValueError("compress_residual=True needs params and cfg "
+                             "(the uplink wire format re-encodes e_up)")
+        wire = residual_to_wire(getattr(state, "e_up", None), params, cfg)
+        if wire is not None:
+            save(os.path.join(ckpt_dir, f"round_{t}_eup"), wire,
+                 {"compressed": True, "kind": cfg.uplink.kind})
+            state = state._replace(e_up=None)
     save(os.path.join(ckpt_dir, f"round_{t}"), state, metadata)
     for old in _round_numbers(ckpt_dir)[:-keep]:
         for stem in (f"round_{old}", f"round_{old}_fleet",
-                     f"round_{old}_buffer"):
+                     f"round_{old}_buffer", f"round_{old}_eup"):
             for ext in (".npz", ".json"):
                 try:
                     os.remove(os.path.join(ckpt_dir, stem + ext))
@@ -140,13 +211,32 @@ def restore_buffer(ckpt_dir: str, t: Optional[int], like_wire):
 
 
 def restore_round(ckpt_dir: str, like_state, t: Optional[int] = None,
-                  like_fleet=None):
+                  like_fleet=None, params=None, cfg=None):
     """Restore the newest (or round-``t``) checkpoint.  With ``like_fleet``
-    the fleet sidecar is restored too and ``(state, fleet), t`` returns."""
+    the fleet sidecar is restored too and ``(state, fleet), t`` returns.
+
+    A ``round_<t>_eup`` sidecar (written by ``save_round(...,
+    compress_residual=True)``) is detected automatically: the residual is
+    decoded through the uplink wire format (``params`` and ``cfg`` become
+    required) and re-attached to the restored state."""
     t = t if t is not None else latest_round(ckpt_dir)
     if t is None:
         return None, None
-    state = restore(os.path.join(ckpt_dir, f"round_{t}"), like_state)
+    eup_path = os.path.join(ckpt_dir, f"round_{t}_eup")
+    if os.path.exists(eup_path + ".npz"):
+        if params is None or cfg is None:
+            raise ValueError("checkpoint has a compressed-residual sidecar; "
+                             "restore_round needs params and cfg to decode "
+                             "it through the uplink wire format")
+        like_wire = jax.eval_shape(
+            lambda e: residual_to_wire(e, params, cfg), like_state.e_up)
+        wire = restore(eup_path, like_wire)
+        state = restore(os.path.join(ckpt_dir, f"round_{t}"),
+                        like_state._replace(e_up=None))
+        state = state._replace(e_up=residual_from_wire(
+            wire, params, cfg, like=like_state.e_up))
+    else:
+        state = restore(os.path.join(ckpt_dir, f"round_{t}"), like_state)
     if like_fleet is None:
         return state, t
     fleet = restore(os.path.join(ckpt_dir, f"round_{t}_fleet"), like_fleet)

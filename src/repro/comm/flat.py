@@ -313,15 +313,22 @@ class _SelectCodec:
         return outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=-1)
 
     def reduce(self, p: FlatPacked, weights: jnp.ndarray, m) -> jnp.ndarray:
-        """Client-parallel payload-domain aggregation: ONE weighted
-        scatter-add of every client's (value, position) stream into the [d]
-        accumulator -- no sequential per-client dense decompression."""
-        pos = base_positions(self.layout)[None, :] \
-            + p.indices.astype(jnp.int32)
-        wv = p.values * weights[:, None].astype(p.values.dtype)
-        acc = jnp.zeros((self.spec.d,), p.values.dtype)
-        acc = acc.at[pos.reshape(-1)].add(wv.reshape(-1))
-        return acc / m
+        """Client-parallel payload-domain aggregation through the tuned
+        bucketed kernel: per run, the stacked (value, within-block offset)
+        streams contract as dense per-destination-block buckets
+        (:func:`repro.kernels.ops.scatter_agg`) -- no sequential per-client
+        dense decompression, and no serialized general scatter."""
+        from repro.kernels import ops
+        n = p.values.shape[0]
+        outs = []
+        for r in self.layout.runs:
+            sl = slice(r.koff, r.koff + r.nblocks * r.k)
+            vals = p.values[:, sl].reshape(n, r.nblocks, r.k)
+            idx = p.indices[:, sl].reshape(n, r.nblocks, r.k)
+            acc = ops.scatter_agg(vals, idx, weights, block=r.block)
+            outs.append(acc.reshape(r.span))
+        out = outs[0] if len(outs) == 1 else jnp.concatenate(outs)
+        return out.astype(self.spec.dtype) / m
 
     def wire_bytes(self) -> int:
         itemsize = jnp.dtype(self.spec.dtype).itemsize
@@ -389,23 +396,18 @@ class _QuantCodec:
         return outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=-1)
 
     def reduce(self, q: FlatQuant, weights: jnp.ndarray, m) -> jnp.ndarray:
+        from repro.kernels import ops, tune
         n = q.words.shape[0]
+        # the pallas backend pins the fused unpack_mma kernel (documented
+        # backend semantics); others take the tuner's plan for the shape
+        plan = tune.Plan("pallas") if self.pallas else None
         outs = []
         for r in self.layout.runs:
             words = q.words[:, r.woff:r.woff + r.nblocks * r.W].reshape(
                 n, r.nblocks, r.W)
             scale = q.scale[:, r.boff:r.boff + r.nblocks]
-            if self.pallas:
-                from repro.kernels.unpack_mma import unpack_mma
-                acc = unpack_mma(words, scale,
-                                 weights.astype(jnp.float32),
-                                 self.cfg.bits, r.block)
-            else:
-                codes = unpack_codes(words, self.cfg.bits, r.block)
-                vals = codes.astype(jnp.float32) / self.levels \
-                    * scale[..., None]
-                acc = jnp.tensordot(weights.astype(jnp.float32), vals,
-                                    axes=(0, 0))
+            acc = ops.quant_agg(words, scale, weights, self.cfg.bits,
+                                r.block, plan=plan)
             outs.append(acc.reshape(r.span))
         out = outs[0] if len(outs) == 1 else jnp.concatenate(outs)
         return out.astype(self.spec.dtype) / m

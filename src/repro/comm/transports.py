@@ -101,9 +101,22 @@ _mask_where = mask_where        # internal alias (pre-async name)
 def scatter_rows(tree, idx, n: int):
     """[m, ...] participant rows -> full [n, ...] layout, zeros elsewhere.
     Works on dense leaves and payload pytrees alike (payload fields carry
-    the same leading client axis).  Shared by the gathered transmit path
-    and engine.participation."""
+    the same leading client axis).  Shared by the gathered transmit path,
+    the SlotStore restore and engine.participation.
+
+    Participant ids are unique, so scatter == segment-sum here: float
+    leaves route through the tuned :func:`repro.kernels.ops.segment_rows`
+    when the backend plan selects the Pallas segment kernel; otherwise
+    (and always for integer wire fields -- packed words / offsets must
+    round-trip bit-exactly, a float one-hot contraction would not) the XLA
+    ``.at[idx].set`` scatter runs unchanged."""
+    from repro.kernels import ops, tune
+
     def one(x):
+        if jnp.issubdtype(x.dtype, jnp.floating):
+            plan = tune.get_plan("segment_rows", m=x.shape[0], n=n)
+            if plan.impl == "pallas":
+                return ops.segment_rows(x, idx, n, plan=plan)
         out = jnp.zeros((n,) + x.shape[1:], x.dtype)
         return out.at[idx].set(x)
     return tree_map(one, tree)
@@ -339,6 +352,7 @@ class Transport:
         # O(1) dense buffers but made aggregation latency linear-sequential
         # in n; the parallel reduction's only cost is the transient
         # weighted-code tensor (same footprint as the delta stack).
+        from repro.kernels import ops
         from repro.sharding import partition
         packed_repl = partition.gather_leading(msgs)
         n = mask.shape[0]
@@ -352,17 +366,16 @@ class Transport:
                     p.codes.astype(jnp.float32) * p.scale, axes=(0, 0))
                 return (wsum / levels).reshape(tuple(ref.shape)) \
                     .astype(ref.dtype)
+            # select payloads land on the same tuned bucket-aggregation
+            # entry point as FlatTransport.reduce: each of the L block
+            # rows of width b is a destination bucket
             k = p.values.shape[-1]
             nb = p.values.shape[-2]
             b = shape[-1] // nb
             L = int(np.prod(p.values.shape[1:-1], dtype=np.int64))
-            wv = (p.values
-                  * mask.reshape((n,) + (1,) * (p.values.ndim - 1))
-                  .astype(p.values.dtype))
-            rows = jnp.arange(L, dtype=jnp.int32).reshape(1, L, 1)
-            pos = rows * b + p.indices.astype(jnp.int32).reshape(n, L, k)
-            acc = jnp.zeros((L * b,), p.values.dtype)
-            acc = acc.at[pos.reshape(-1)].add(wv.reshape(-1))
+            acc = ops.scatter_agg(p.values.reshape(n, L, k),
+                                  p.indices.reshape(n, L, k),
+                                  mask, block=b)
             return acc.reshape(tuple(ref.shape)).astype(ref.dtype)
 
         v_sum = tree_map(one, packed_repl, like,

@@ -278,13 +278,18 @@ def async_round_step(state: FedState, buf: Optional[StaleBuffer], batches,
     #    compress; EF residuals are client-local state, so they update for
     #    every participant), aggregate only the fresh fraction ------------
     uplink, downlink = flat.flat_transports_for(cfg, spec)
-    msgs, e_up = participation.encode(
-        uplink, state.e_up, deltas, part, like=wf, key=k_up)
+    msgs, e_up, v_flush = participation.encode_flush(
+        uplink, state.e_up, deltas, part, like=wf, t=state.t, key=k_up)
 
     fresh = part.mask * (1.0 - ev.depart)
     part_fresh = participation.compose_weights(part, 1.0 - ev.depart)
     w_fresh = participation.agg_weights(part_fresh)
     v_bar = uplink.reduce(msgs, w_fresh, m, like=wf)
+    if v_flush is not None:
+        # slot-store eviction flush (cap < n): the evicted residual mass
+        # merges with this round's fresh aggregate; statically absent at
+        # cap >= n, where the async slot path is bit-parity vs dense
+        v_bar = v_bar + v_flush
 
     # -- staleness buffer: deliver, expire, park --------------------------
     age = (state.t - buf.origin).astype(jnp.float32)

@@ -139,13 +139,37 @@ def encode(transport, e, deltas, part: Participation, like, key=None):
                                      like, key)
 
 
-def transmit(transport, e, deltas, part: Participation, like, key=None):
+def encode_flush(transport, e, deltas, part: Participation, like,
+                 t=0, key=None):
+    """:func:`encode` with slot-store residuals supported: when ``e`` is a
+    :class:`repro.scale.slots.SlotStore` the encode runs through
+    ``slots.encode`` (pool lookup, LRU allocation, eviction flush) and the
+    third return is the flush aggregate partial to add to the round's fresh
+    reduce (``None`` for dense residuals and for cap >= n stores).  ``t``
+    is the round counter (the store's LRU stamp)."""
+    from repro.scale import slots
+    if isinstance(e, slots.SlotStore):
+        return slots.encode(transport, e, deltas, part, t, key=key)
+    msgs, e_out = encode(transport, e, deltas, part, like, key)
+    return msgs, e_out, None
+
+
+def transmit(transport, e, deltas, part: Participation, like,
+             key=None, t=0):
     """The engine's single uplink call site: dispatch the EF14 + aggregation
     to the transport's dense-mask or gathered execution (tree Transport or
     comm.flat FlatTransport -- same contract, see :func:`encode`).  The
     sampler's aggregation weights ride in the mask slot (the transport only
     ever selects on ``> 0`` and reduces with it, so weighted laws need no
-    new wire API)."""
+    new wire API).
+
+    A :class:`repro.scale.slots.SlotStore` in the ``e`` slot dispatches to
+    the O(m*d) slot-store execution (``t`` stamps the LRU) -- same
+    (v_bar, e_new) contract, so the engine round is residual-representation
+    agnostic."""
+    from repro.scale import slots
+    if isinstance(e, slots.SlotStore):
+        return slots.transmit(transport, e, deltas, part, t, key=key)
     w = agg_weights(part)
     if part.idx is None:
         return transport.transmit(e, deltas, w, part.m, like=like, key=key)

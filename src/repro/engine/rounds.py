@@ -327,15 +327,8 @@ def round_step(state: FedState,
     # transport layer (repro.comm / comm.flat); participation-mode dispatch
     # lives in engine.participation.
     uplink, downlink = flat_transports_for(cfg, spec)
-    if cfg.scale.ef_slots and uplink.needs_residual:
-        # population scale-out: the O(m*d) EF slot store replaces the dense
-        # [n, d] residual (repro.scale.slots; bit-identical at cap >= n)
-        from repro.scale import slots as slot_store
-        v_bar, e_up = slot_store.transmit(
-            uplink, state.e_up, deltas, part, state.t, key=k_up)
-    else:
-        v_bar, e_up = participation.transmit(
-            uplink, state.e_up, deltas, part, like=wf, key=k_up)
+    v_bar, e_up = participation.transmit(
+        uplink, state.e_up, deltas, part, like=wf, key=k_up, t=state.t)
 
     return finish_round(state, strat, cfg, spec, wf, part, deltas, v_bar,
                         e_up, uplink, downlink, samp_state, key, k_down,

@@ -1,0 +1,125 @@
+"""Pallas TPU kernels: bucketed select-payload aggregation + segment-sum.
+
+``scatter_agg`` is the accelerator form of the select-payload reduction
+
+    acc[b, o] = sum_j sum_t  weight_j * vals[j, b, t] * 1[idx[j, b, t] == o]
+
+over stacked client payloads (FlatPacked values + within-block offsets).
+Because select positions are ``block_base + within_block_offset``, the [n]
+client streams aimed at one destination block form a *bucket*: the kernel
+contracts each bucket as a dense one-hot gather-multiply-accumulate instead
+of a serialized general scatter -- destination blocks ride the outer grid
+dimension (``rows`` blocks per program, the autotuner's rows-per-program
+knob) and the client axis rides the inner grid dimension, so each output
+tile is revisited consecutively (TPU output-revisit rule) and accumulates
+in VMEM.  No atomics, no data-dependent control flow: the one-hot compare
+vectorizes on the VPU and the weighted contraction feeds the MXU-friendly
+``sum_k v[..., None] * onehot``.
+
+``segment_rows`` is the companion segment-sum covering the ``scatter_rows``
+expansion ([m, D] participant rows -> [n, D] population layout): clients on
+the inner grid dimension, (population-chunk, feature-chunk) tiles outer,
+``out[seg_j] += rows_j`` as a one-hot outer product.  Duplicate segment ids
+*add* (true segment-sum semantics); the engine's unique-id scatter is the
+special case where add == set.
+
+Both kernels run in interpret mode off-TPU; the CPU hot path uses the
+tuned jnp formulations in :mod:`repro.kernels.ops` instead (see
+:mod:`repro.kernels.tune`).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _agg_kernel(vals_ref, idx_ref, weight_ref, acc_ref, *, block: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    v = vals_ref[0].astype(jnp.float32) * weight_ref[0]     # [rows, k]
+    ids = idx_ref[0]                                        # [rows, k]
+    rows, k = ids.shape
+    iota = jax.lax.broadcasted_iota(jnp.int32, (rows, k, block), 2)
+    oh = (ids[..., None] == iota).astype(jnp.float32)       # [rows, k, block]
+    acc_ref[...] += jnp.sum(v[..., None] * oh, axis=1)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block", "rows", "interpret"))
+def scatter_agg(vals: jnp.ndarray, idx: jnp.ndarray, weight: jnp.ndarray,
+                block: int, rows: int = 8,
+                interpret: bool | None = None) -> jnp.ndarray:
+    """vals [n, nblocks, k] + idx [n, nblocks, k] (within-block offsets in
+    [0, block)) + weight [n] -> weighted bucket sums [nblocks, block] f32.
+
+    ``rows`` is the destination-blocks-per-program tile (the autotuner's
+    rows-per-program knob); ``nblocks`` is padded up to a multiple of it
+    with zero-value slots (zero values contribute nothing)."""
+    n, nblocks, k = vals.shape
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    rows = max(1, min(rows, nblocks))
+    pad = (-nblocks) % rows
+    if pad:
+        vals = jnp.pad(vals, ((0, 0), (0, pad), (0, 0)))
+        idx = jnp.pad(idx, ((0, 0), (0, pad), (0, 0)))
+    nb_pad = nblocks + pad
+    out = pl.pallas_call(
+        functools.partial(_agg_kernel, block=block),
+        grid=(nb_pad // rows, n),
+        in_specs=[pl.BlockSpec((1, rows, k), lambda i, j: (j, i, 0)),
+                  pl.BlockSpec((1, rows, k), lambda i, j: (j, i, 0)),
+                  pl.BlockSpec((1,), lambda i, j: (j,))],
+        out_specs=pl.BlockSpec((rows, block), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb_pad, block), jnp.float32),
+        interpret=interpret,
+    )(vals, idx.astype(jnp.int32), weight.astype(jnp.float32))
+    return out[:nblocks]
+
+
+def _seg_kernel(rows_ref, seg_ref, acc_ref, *, crows: int):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    base = pl.program_id(0) * crows
+    iota = jax.lax.broadcasted_iota(jnp.int32, (crows, 1), 0) + base
+    oh = (iota == seg_ref[0]).astype(jnp.float32)           # [crows, 1]
+    acc_ref[...] += oh * rows_ref[...].astype(jnp.float32)  # [crows, cd]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n", "crows", "cd", "interpret"))
+def segment_rows(rows: jnp.ndarray, seg: jnp.ndarray, n: int,
+                 crows: int = 8, cd: int = 512,
+                 interpret: bool | None = None) -> jnp.ndarray:
+    """Segment-sum of [m, D] rows into [n, D]: ``out[i] = sum_{seg_j == i}
+    rows_j`` (f32).  Out-of-range ids drop; duplicate ids add.  ``crows`` /
+    ``cd`` tile the (population, feature) axes of the output."""
+    m, D = rows.shape
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    crows = max(1, min(crows, n))
+    cd = max(1, min(cd, D))
+    pad_n, pad_d = (-n) % crows, (-D) % cd
+    if pad_d:
+        rows = jnp.pad(rows, ((0, 0), (0, pad_d)))
+    out = pl.pallas_call(
+        functools.partial(_seg_kernel, crows=crows),
+        grid=((n + pad_n) // crows, (D + pad_d) // cd, m),
+        in_specs=[pl.BlockSpec((1, cd), lambda i, l, j: (j, l)),
+                  pl.BlockSpec((1,), lambda i, l, j: (j,))],
+        out_specs=pl.BlockSpec((crows, cd), lambda i, l, j: (i, l)),
+        out_shape=jax.ShapeDtypeStruct((n + pad_n, D + pad_d), jnp.float32),
+        interpret=interpret,
+    )(rows, seg.astype(jnp.int32))
+    return out[:n, :D]

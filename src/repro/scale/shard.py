@@ -10,8 +10,10 @@ the sharded source and only the small [m, ...] result is replicated -- the
 population itself never all-gathers.
 
 Every helper is the identity without an active mesh (CPU simulator / smoke
-tests), so single-device trajectories are bit-for-bit unchanged
-(tests/test_scale.py pins the 1-device-mesh no-op parity too).
+tests), so single-device trajectories are bit-for-bit unchanged; real
+multi-device parity is pinned by tests/test_scale.py's ``multidev``
+subprocess test (4 forced host-platform devices) and timed by
+``benchmarks/scale_bench.py --sharded``.
 
 Usage::
 

@@ -80,13 +80,10 @@ def validate(cfg) -> None:
             f"ScaleConfig.ef_slots={cap} < m={cfg.m}: every sampled client "
             "needs a slot within the round, so the pool capacity must be "
             ">= m")
-    if cfg.async_.enabled:
-        raise ValueError(
-            "ScaleConfig.ef_slots does not compose with AsyncConfig.enabled "
-            "yet: the async engine's encode call site updates the dense "
-            "[n, d] e_up in place (ROADMAP: slot-store async encode); "
-            "two-tier aggregation (ScaleConfig.cohorts) composes with async "
-            "unchanged")
+    # async buffered rounds compose: async_round_step routes its encode
+    # call site through slots.encode (the eviction-flush partial enters
+    # the fresh aggregate), and at cap >= n the flush is statically absent
+    # so trajectories are bit-for-bit the dense async path's.
 
 
 def init(n_clients: int, cap: int, d: int, dtype) -> SlotStore:
@@ -156,19 +153,24 @@ def _flush(uplink, store: SlotStore, slots: jnp.ndarray,
     return uplink.reduce_single(msgs, w_orph, m)
 
 
-def transmit(uplink, store: SlotStore, deltas: jnp.ndarray,
-             part: participation.Participation, t, key=None):
-    """The slot-store uplink call site (replaces ``participation.transmit``
-    when ``cfg.scale.ef_slots > 0``): EF14 over the m sampled rows with
-    residuals from the pool, LRU allocation, the eviction flush, and the
-    gather path's exact aggregation op.  Returns ``(v_bar, new_store)``.
+def encode(uplink, store: SlotStore, deltas: jnp.ndarray,
+           part: participation.Participation, t, key=None):
+    """The slot-store EF encode: EF14 over the m sampled rows with
+    residuals from the pool, LRU allocation, store update, and the
+    eviction flush partial.  Returns ``(msgs_full, new_store, v_flush)``
+    where ``msgs_full`` are the wire messages scattered back into the full
+    [n] client layout (the gather path's layout, so any downstream
+    ``uplink.reduce`` -- synchronous or async staleness-weighted -- applies
+    unchanged) and ``v_flush`` is the evicted-residual aggregate partial to
+    add to this round's fresh reduce (``None`` when ``cap >= n``: eviction
+    is statically impossible, which is the bit-parity regime vs the dense
+    residual).
 
     ``deltas`` are the gather path's [m, d] rows (sorted client order);
     ``t`` is the round counter (the LRU stamp)."""
     idx, n, m = part.idx, part.n, part.m
     cap = store.pool.shape[0]
-    w = participation.agg_weights(part)
-    w_m = jnp.take(w, idx)
+    w_m = jnp.take(participation.agg_weights(part), idx)
 
     # -- EF over the m rows, residuals reconstructed from the pool ---------
     e_part, cur = lookup(store, idx)
@@ -186,13 +188,9 @@ def transmit(uplink, store: SlotStore, deltas: jnp.ndarray,
     if cap < n:     # static: cap >= n never evicts (a free slot always ranks
         v_flush = _flush(uplink, store, slots, evict, m, key)   # first)
 
-    # -- aggregation: scatter the m wire messages back into the full [n]
-    #    layout and reduce with the [n] weights -- the *same op* as the
-    #    dense gather path, so cap >= n trajectories match bit-for-bit ------
+    # -- scatter the m wire messages back into the full [n] layout (the
+    #    gather path's layout, so the caller's reduce op applies verbatim) --
     full = transports.scatter_rows(msgs, idx, n)
-    v_bar = uplink.reduce(full, w, m)
-    if v_flush is not None:
-        v_bar = v_bar + v_flush
 
     # -- store update (hits rewrite in place; misses claim their slot) -----
     t32 = jnp.asarray(t, jnp.int32)
@@ -206,4 +204,18 @@ def transmit(uplink, store: SlotStore, deltas: jnp.ndarray,
         client_slot=store.client_slot
         .at[jnp.where(evict, old_owner, n)].set(-1, mode="drop")
         .at[idx].set(slots.astype(jnp.int32)))
+    return full, new_store, v_flush
+
+
+def transmit(uplink, store: SlotStore, deltas: jnp.ndarray,
+             part: participation.Participation, t, key=None):
+    """The synchronous slot-store uplink call site (what
+    ``participation.transmit`` dispatches to when ``FedState.e_up`` is a
+    :class:`SlotStore`): :func:`encode` + the gather path's exact
+    aggregation op.  Returns ``(v_bar, new_store)``."""
+    full, new_store, v_flush = encode(uplink, store, deltas, part, t, key)
+    w = participation.agg_weights(part)
+    v_bar = uplink.reduce(full, w, part.m)
+    if v_flush is not None:
+        v_bar = v_bar + v_flush
     return v_bar, new_store

@@ -1,21 +1,27 @@
-"""Population scale-out tests (ISSUE 6): the O(m·d) EF slot store's
+"""Population scale-out tests (ISSUE 6/7): the O(m·d) EF slot store's
 bit-parity law (cap >= n trajectories identical to the dense gather
-engine) across strategy x compressor x wire, the LRU/eviction invariants
-and the EF-mass conservation law under eviction, hierarchical two-tier
-payload aggregation exactness for every cohort count, the slot-store
-config validation errors, and the client-axis sharding helpers' no-op
-parity (no mesh and a 1-device mesh)."""
+engine) across strategy x compressor x wire -- synchronous AND async
+buffered rounds (the slot-store encode call site) -- the LRU/eviction
+invariants and the EF-mass conservation law under eviction, hierarchical
+two-tier payload aggregation exactness for every cohort count, the
+slot-store config validation errors, and the client-axis sharding
+helpers' parity (meshless identity plus a real 4-device host-platform
+mesh under the ``multidev`` marker)."""
+import os
+import subprocess
+import sys
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import checkpoint
 from repro.comm import flat, transports
 from repro.configs.base import (AsyncConfig, CompressorConfig, FedConfig,
                                 ScaleConfig, SwitchConfig)
-from repro.engine import participation, rounds
+from repro.engine import async_rounds, participation, rounds
 from repro.scale import shard, slots
-from repro.sharding import partition
 from repro.tasks import np_classification as npc
 
 N = 12
@@ -143,11 +149,61 @@ class TestValidate:
         with pytest.raises(ValueError, match=">= m"):
             rounds.init_state(params, cfg)
 
-    def test_async_raises(self, params):
+    def test_async_composes(self, params):
+        """Async x slots now composes (the encode call site routes through
+        slots.encode): init_state must build a SlotStore, not raise."""
         cfg = _cfg(scale=ScaleConfig(ef_slots=N),
                    async_=AsyncConfig(enabled=True))
-        with pytest.raises(ValueError, match="Async"):
-            rounds.init_state(params, cfg)
+        state = rounds.init_state(params, cfg)
+        assert isinstance(state.e_up, slots.SlotStore)
+
+
+# ---------------------------------------------------------------------------
+# Async buffered rounds x slot store (ISSUE 7: the ROADMAP scale gap)
+# ---------------------------------------------------------------------------
+
+class TestAsyncSlots:
+    def _acfg(self, **kw):
+        return _cfg(async_=AsyncConfig(enabled=True, max_staleness=3,
+                                       staleness="constant", depart=0.5),
+                    **kw)
+
+    def test_cap_ge_n_bit_parity_vs_dense_async(self, np_data, params):
+        """cap >= n: the eviction flush is statically absent and every pool
+        row is the dense e_up row of its owner, so the async slot-store
+        trajectory (events, buffer merges and all) must be bit-for-bit the
+        dense async path's."""
+        T = 5
+        dense_s, dense_buf, _ = async_rounds.async_drive(
+            rounds.init_state(params, self._acfg()), np_data,
+            npc.loss_pair, self._acfg(), T)
+        cfg = self._acfg(scale=ScaleConfig(ef_slots=N))
+        slot_s, slot_buf, _ = async_rounds.async_drive(
+            rounds.init_state(params, cfg), np_data, npc.loss_pair, cfg, T)
+        assert isinstance(slot_s.e_up, slots.SlotStore)
+        _assert_trees_equal(dense_s.w, slot_s.w)
+        _assert_trees_equal(dense_buf, slot_buf)
+        pool = np.asarray(slot_s.e_up.pool)
+        owner = np.asarray(slot_s.e_up.owner)
+        e_dense = np.asarray(dense_s.e_up)
+        for s, j in enumerate(owner):
+            if j >= 0:
+                np.testing.assert_array_equal(pool[s], e_dense[j])
+
+    def test_evicting_async_stays_finite(self, np_data, params):
+        """cap < n under async: the flush partial merges with the fresh
+        aggregate every round; the run must stay finite and keep the
+        owner <-> client_slot bijection."""
+        cfg = self._acfg(scale=ScaleConfig(ef_slots=M))
+        state, buf, _ = async_rounds.async_drive(
+            rounds.init_state(params, cfg), np_data, npc.loss_pair, cfg, 6)
+        for leaf in jax.tree_util.tree_leaves(state.w):
+            assert np.isfinite(np.asarray(leaf)).all()
+        owner = np.asarray(state.e_up.owner)
+        cslot = np.asarray(state.e_up.client_slot)
+        for s, j in enumerate(owner):
+            if j >= 0:
+                assert cslot[j] == s
 
 
 # ---------------------------------------------------------------------------
@@ -320,6 +376,103 @@ class TestTwoTier:
 
 
 # ---------------------------------------------------------------------------
+# Compressed-residual checkpoints (ISSUE 7: shrink dense e_up)
+# ---------------------------------------------------------------------------
+
+class TestResidualCheckpoint:
+    @pytest.mark.parametrize("kind,kw", [
+        ("topk", dict(ratio=0.25, block=8)),
+        ("quant", dict(bits=4, block=8)),
+    ])
+    def test_save_restore_continue_tolerance(self, np_data, params, tmp_path,
+                                             kind, kw):
+        """The compression-error contract: the restored residual is exactly
+        ``decode(pack(e))`` (for select kinds the surviving top-k entries
+        are bit-exact), everything else restores bit-for-bit, and a
+        continued run tracks the uncompressed continuation within the
+        injected compression error -- EF re-absorbs the discarded mass."""
+        cfg = _cfg(comm="packed", uplink=CompressorConfig(kind=kind, **kw))
+        step = jax.jit(
+            lambda s, b: rounds.round_step(s, b, npc.loss_pair, cfg))
+        state = rounds.init_state(params, cfg)
+        for _ in range(2):
+            state, _ = step(state, np_data)
+        ck = str(tmp_path / "ck")
+        checkpoint.save_round(ck, 2, state, cfg=cfg,
+                              compress_residual=True, params=params)
+        assert os.path.exists(os.path.join(ck, "round_2_eup.npz"))
+        # the main npz no longer carries the dense [n, d] rows
+        import numpy.lib.npyio  # noqa: F401  (np.load returns NpzFile)
+        main_keys = set(np.load(os.path.join(ck, "round_2.npz")).files)
+        assert not any("e_up" in k for k in main_keys)
+
+        restored, t = checkpoint.restore_round(
+            ck, rounds.init_state(params, cfg), params=params, cfg=cfg)
+        assert t == 2
+        _assert_trees_equal(restored.w, state.w)
+        spec = flat.spec_of(params)
+        ft = flat.flat_transports_for(cfg, spec)[0]
+        exp = np.asarray(ft.codec.decode(ft.codec.pack(state.e_up)))
+        np.testing.assert_array_equal(np.asarray(restored.e_up), exp)
+
+        # continue both runs; deterministic drift bounded by the injected
+        # residual compression error (scaled through the lr)
+        err = float(np.abs(np.asarray(state.e_up) - exp).max())
+        cont_u, cont_c = state, restored
+        for _ in range(2):
+            cont_u, _ = step(cont_u, np_data)
+            cont_c, _ = step(cont_c, np_data)
+        for a, b in zip(jax.tree_util.tree_leaves(cont_u.w),
+                        jax.tree_util.tree_leaves(cont_c.w)):
+            a, b = np.asarray(a), np.asarray(b)
+            assert np.isfinite(b).all()
+            assert np.abs(a - b).max() <= max(err, 1e-7)
+
+    def test_slot_store_pool_compresses(self, np_data, params, tmp_path):
+        """SlotStore residuals compress too: the pool rows go through the
+        wire format, the index fields ride the sidecar unchanged."""
+        cfg = _cfg(comm="packed", scale=ScaleConfig(ef_slots=N))
+        step = jax.jit(
+            lambda s, b: rounds.round_step(s, b, npc.loss_pair, cfg))
+        state = rounds.init_state(params, cfg)
+        for _ in range(2):
+            state, _ = step(state, np_data)
+        ck = str(tmp_path / "ck")
+        checkpoint.save_round(ck, 2, state, cfg=cfg,
+                              compress_residual=True, params=params)
+        restored, _ = checkpoint.restore_round(
+            ck, rounds.init_state(params, cfg), params=params, cfg=cfg)
+        assert isinstance(restored.e_up, slots.SlotStore)
+        _assert_trees_equal(restored.e_up.owner, state.e_up.owner)
+        _assert_trees_equal(restored.e_up.client_slot,
+                            state.e_up.client_slot)
+        ft = flat.flat_transports_for(cfg, flat.spec_of(params))[0]
+        exp = ft.codec.decode(ft.codec.pack(state.e_up.pool))
+        np.testing.assert_array_equal(np.asarray(restored.e_up.pool),
+                                      np.asarray(exp))
+
+    def test_no_packed_wire_falls_back_dense(self, np_data, params,
+                                             tmp_path):
+        """randk packs with per-client PRNG streams (no deterministic
+        re-encode), so compress_residual silently keeps the dense layout
+        and restore works without params/cfg."""
+        cfg = _cfg(comm="packed",
+                   uplink=CompressorConfig(kind="randk", ratio=0.25,
+                                           block=8))
+        step = jax.jit(
+            lambda s, b: rounds.round_step(s, b, npc.loss_pair, cfg))
+        state = rounds.init_state(params, cfg)
+        state, _ = step(state, np_data)
+        ck = str(tmp_path / "ck")
+        checkpoint.save_round(ck, 1, state, cfg=cfg,
+                              compress_residual=True, params=params)
+        assert not os.path.exists(os.path.join(ck, "round_1_eup.npz"))
+        restored, _ = checkpoint.restore_round(
+            ck, rounds.init_state(params, cfg))
+        _assert_trees_equal(restored.e_up, state.e_up)
+
+
+# ---------------------------------------------------------------------------
 # Client-axis sharding helpers
 # ---------------------------------------------------------------------------
 
@@ -333,18 +486,93 @@ class TestShard:
         store = slots.init(6, 4, 8, jnp.float32)
         _assert_trees_equal(store, shard.constrain_store(store))
 
-    def test_one_device_mesh_noop_parity(self, np_data, params):
-        """Slot-mode trajectories under an activated 1-device mesh are
-        bit-identical to the mesh-less run: the sharding constraints are
-        value-identities."""
-        ref = _traj(_cfg(scale=ScaleConfig(ef_slots=N)), params, np_data)[0]
-        mesh = jax.sharding.Mesh(
-            np.asarray(jax.devices()[:1]).reshape(1), ("data",))
-        partition.activate_mesh(mesh)
-        try:
-            under = _traj(_cfg(scale=ScaleConfig(ef_slots=N)),
-                          params, np_data)[0]
-        finally:
-            partition.activate_mesh(None)
-        _assert_trees_equal(ref.w, under.w)
-        _assert_trees_equal(ref.e_up, under.e_up)
+    @pytest.mark.multidev
+    def test_four_device_mesh_parity(self):
+        """Real multi-device parity: a subprocess forces 4 host-platform
+        devices (``XLA_FLAGS=--xla_force_host_platform_device_count=4``
+        must be set before jax imports, hence the subprocess), activates a
+        4-way client mesh and checks (a) ``sharded_take`` returns the exact
+        gathered rows from a client-sharded stack, (b) ``constrain_fleet``
+        / ``constrain_store`` are value-identities, and (c) a full
+        slot-mode engine trajectory under the mesh tracks the mesh-less
+        run to tight tolerance.  Data movement is exact; trajectories are
+        allclose rather than bit-equal because XLA partitions the
+        cross-client reductions differently over 4 devices (last-ulp
+        reassociation only)."""
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                            + " --xla_force_host_platform_device_count=4")
+        env["PYTHONPATH"] = os.pathsep.join(
+            [os.path.join(os.path.dirname(__file__), "..", "src"),
+             env.get("PYTHONPATH", "")])
+        proc = subprocess.run([sys.executable, "-c", _MULTIDEV_SCRIPT],
+                              env=env, capture_output=True, text=True,
+                              timeout=900)
+        assert proc.returncode == 0, proc.stdout + proc.stderr
+        assert "MULTIDEV-PARITY-OK" in proc.stdout
+
+
+_MULTIDEV_SCRIPT = """
+import numpy as np, jax, jax.numpy as jnp
+assert jax.device_count() == 4, jax.devices()
+from repro.configs.base import (CompressorConfig, FedConfig, ScaleConfig,
+                                SwitchConfig)
+from repro.engine import rounds
+from repro.fleet.provision import Fleet
+from repro.scale import shard, slots
+from repro.sharding import partition
+from repro.tasks import np_classification as npc
+
+N, M = 12, 4
+(xs, ys), _ = npc.make_dataset(jax.random.PRNGKey(0), n_clients=N)
+params = npc.init_params(jax.random.PRNGKey(1), xs.shape[-1])
+cfg = FedConfig(n_clients=N, m=M, local_steps=2, lr=0.1,
+                switch=SwitchConfig(mode="hard", eps=0.35),
+                participation="gather",
+                uplink=CompressorConfig(kind="topk", ratio=0.25, block=8),
+                downlink=CompressorConfig(kind="none"),
+                scale=ScaleConfig(ef_slots=N))
+
+def traj(T=3):
+    state = rounds.init_state(params, cfg)
+    step = jax.jit(lambda s, b: rounds.round_step(s, b, npc.loss_pair, cfg))
+    for _ in range(T):
+        state, _ = step(state, (xs, ys))
+    return state
+
+def eq(a, b):
+    for x, y in zip(jax.tree_util.tree_leaves(a),
+                    jax.tree_util.tree_leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+ref = traj()
+
+mesh = jax.sharding.Mesh(np.asarray(jax.devices()).reshape(4), ("data",))
+partition.activate_mesh(mesh)
+try:
+    data = {"x": jnp.arange(float(N * 24)).reshape(N, 4, 6)}
+    idx = jnp.asarray([1, 5, 8, 11], jnp.int32)
+    taken = shard.sharded_take(data, idx)
+    np.testing.assert_array_equal(np.asarray(taken["x"]),
+                                  np.asarray(data["x"][idx]))
+    fleet = Fleet(data, jnp.full((N,), 4, jnp.int32))
+    eq(fleet, shard.constrain_fleet(fleet))
+    store = slots.init(N, N, 16, jnp.float32)
+    eq(store, shard.constrain_store(store))
+    under = traj()
+finally:
+    partition.activate_mesh(None)
+
+def close(a, b):
+    for x, y in zip(jax.tree_util.tree_leaves(a),
+                    jax.tree_util.tree_leaves(b)):
+        np.testing.assert_allclose(np.asarray(x, np.float64),
+                                   np.asarray(y, np.float64),
+                                   rtol=1e-5, atol=1e-7)
+
+close(ref.w, under.w)
+close(ref.e_up.pool, under.e_up.pool)
+eq(ref.e_up.owner, under.e_up.owner)
+eq(ref.e_up.client_slot, under.e_up.client_slot)
+print("MULTIDEV-PARITY-OK")
+"""
