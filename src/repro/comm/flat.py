@@ -51,6 +51,7 @@ from repro.comm.payloads import (FlatPacked, FlatQuant, INDEX_DTYPE,
                                  choose_block, pack_codes, unpack_codes,
                                  words_per_block, _SORT_FREE_MIN)
 from repro.configs.base import CompressorConfig
+from repro.obs import trace as obs_trace
 from repro.sharding import partition
 
 tree_map = jax.tree_util.tree_map
@@ -567,6 +568,10 @@ class FlatTransport:
     # -- round-level call sites --------------------------------------------
 
     def _ef_clients(self, e, deltas, key, keys=None):
+        with obs_trace.stage("comm.ef_encode"):
+            return self._ef_clients_inner(e, deltas, key, keys)
+
+    def _ef_clients_inner(self, e, deltas, key, keys=None):
         if self.codec is not None and self.codec.fused_ef:
             return self.codec.ef(e, deltas)
         buf = e + deltas if e is not None else deltas
@@ -632,11 +637,12 @@ class FlatTransport:
         or unpack-multiply-add (quant words) over the client axis -- never
         a sequential per-client scan.  This is one edge reducer of the
         two-tier mode (and the whole of :meth:`reduce` at ``cohorts=1``)."""
-        if self.wire == "dense":
-            return jnp.tensordot(weights.astype(msgs.dtype), msgs,
-                                 axes=(0, 0)) / m
-        return partition.constrain_flat(
-            self.codec.reduce(msgs, weights, m))
+        with obs_trace.stage("comm.reduce"):
+            if self.wire == "dense":
+                return jnp.tensordot(weights.astype(msgs.dtype), msgs,
+                                     axes=(0, 0)) / m
+            return partition.constrain_flat(
+                self.codec.reduce(msgs, weights, m))
 
     def reduce(self, msgs, weights, m, like=None) -> jnp.ndarray:
         """Weighted aggregation of stacked wire messages into [d]; with
@@ -682,8 +688,9 @@ class FlatTransport:
         """Primal-EF21 downlink on flat buffers: w' = w + C(x_new - w)."""
         if self.is_identity:
             return x_new
-        msg = self.compress(x_new - w, key)
-        return w + self.decompress(msg)
+        with obs_trace.stage("comm.broadcast"):
+            msg = self.compress(x_new - w, key)
+            return w + self.decompress(msg)
 
 
 def flat_transports_for(cfg, spec: FlatSpec):

@@ -225,6 +225,31 @@ class AsyncConfig:
 
 
 @dataclass(frozen=True)
+class ObsConfig:
+    """In-jit observability (repro.obs, DESIGN.md §Obs).
+
+    Defaults are the bit-parity point: ``enabled=False`` leaves
+    ``RoundMetrics.telemetry`` as ``None`` -- an empty pytree subtree, so
+    the round adds *no* leaves to the scan carry/ys and the trajectory is
+    bit-for-bit the un-instrumented engine (the ``lean_metrics`` contract).
+    Enabled, a typed :class:`repro.obs.Telemetry` pytree of optimizer-health
+    counters rides the metric offload; the state trajectory stays
+    bit-identical either way (observation only, gated <= 5% per-round
+    overhead by the ``obs-smoke`` CI job).
+
+    Usage::
+
+        >>> fed = FedConfig(obs=ObsConfig(enabled=True))
+        >>> state, mets = rounds.drive(state, batches, loss_pair, fed, T=50)
+        >>> mets.telemetry.up_ratio        # [T] EF residual-to-delta ratio
+    """
+    enabled: bool = False
+    window: int = 8                 # trailing window (rounds) for the
+                                    # switching-fraction counter; the drive
+                                    # loop carries a [window] sigma ring
+
+
+@dataclass(frozen=True)
 class ScaleConfig:
     """Population scale-out knobs (repro.scale, DESIGN.md §Scale).
 
@@ -315,6 +340,8 @@ class FedConfig:
     async_: AsyncConfig = field(default_factory=AsyncConfig)
     # -- population scale-out (repro.scale, DESIGN.md §Scale) ---------------
     scale: ScaleConfig = field(default_factory=ScaleConfig)
+    # -- in-jit telemetry (repro.obs, DESIGN.md §Obs) -----------------------
+    obs: ObsConfig = field(default_factory=ObsConfig)
 
     def replace(self, **kw) -> "FedConfig":
         return dataclasses.replace(self, **kw)

@@ -54,6 +54,8 @@ from repro.configs.base import FedConfig
 from repro.engine import participation, rounds, strategies
 from repro.engine.rounds import FedState, RoundMetrics
 from repro.fleet import samplers
+from repro.obs import bus as obs_bus
+from repro.obs import trace as obs_trace
 
 tree_map = jax.tree_util.tree_map
 
@@ -278,13 +280,15 @@ def async_round_step(state: FedState, buf: Optional[StaleBuffer], batches,
     #    compress; EF residuals are client-local state, so they update for
     #    every participant), aggregate only the fresh fraction ------------
     uplink, downlink = flat.flat_transports_for(cfg, spec)
-    msgs, e_up, v_flush = participation.encode_flush(
-        uplink, state.e_up, deltas, part, like=wf, t=state.t, key=k_up)
+    with obs_trace.stage("round.encode"):
+        msgs, e_up, v_flush, slot_stats = participation.encode_flush(
+            uplink, state.e_up, deltas, part, like=wf, t=state.t, key=k_up)
 
     fresh = part.mask * (1.0 - ev.depart)
     part_fresh = participation.compose_weights(part, 1.0 - ev.depart)
     w_fresh = participation.agg_weights(part_fresh)
-    v_bar = uplink.reduce(msgs, w_fresh, m, like=wf)
+    with obs_trace.stage("round.reduce"):
+        v_bar = uplink.reduce(msgs, w_fresh, m, like=wf)
     if v_flush is not None:
         # slot-store eviction flush (cap < n): the evicted residual mass
         # merges with this round's fresh aggregate; statically absent at
@@ -321,7 +325,18 @@ def async_round_step(state: FedState, buf: Optional[StaleBuffer], batches,
     new_state, round_metrics = rounds.finish_round(
         state, strat, cfg, spec, wf, part_fresh, deltas, v_bar, e_up,
         uplink, downlink, samp_state, key, k_down, f_part, g_hat, g_full,
-        f_full, sigma)
+        f_full, sigma, slot_stats=slot_stats)
+
+    if cfg.obs.enabled:
+        # buffer-side telemetry: the staleness histogram over occupied
+        # slots (age 0 = parked this round) + the parked HT mass --
+        # reductions over the buffer the round already updated
+        round_metrics = round_metrics._replace(
+            telemetry=round_metrics.telemetry._replace(
+                buf_occupancy=jnp.sum(occupied),
+                buf_parked_weight=jnp.sum(buf_new.weight * occupied),
+                buf_stale_hist=obs_bus.staleness_hist(
+                    occupied, state.t - buf_new.origin, cfg)))
 
     metrics = AsyncMetrics(
         round=round_metrics,
@@ -344,7 +359,8 @@ def async_drive(state: FedState, batches, loss_pair: Callable,
                 cfg: FedConfig, T: int, *, buf: Optional[StaleBuffer] = None,
                 per_round: bool = False, block: int = 0,
                 progress: Optional[Callable] = None,
-                donate: Optional[bool] = None):
+                donate: Optional[bool] = None,
+                on_chunk: Optional[Callable] = None):
     """Fully-jitted multi-round async driver: the ``rounds.drive`` scan
     with the staleness buffer in the carry.
 
@@ -357,13 +373,24 @@ def async_drive(state: FedState, batches, loss_pair: Callable,
     ``drive`` metrics at the parity point."""
     if buf is None:
         buf = init_buffer(state.w, cfg)
-    (state, buf), mets = rounds._drive_loop(
-        lambda c, b: _step_carry(c, b, loss_pair, cfg),
-        (state, buf), batches, T, per_round=per_round, block=block,
-        progress=progress,
-        progress_of=lambda c, mets: (c[0].t, mets.round.f,
-                                     mets.round.g_hat, mets.round.sigma),
-        donate=donate)
+    step = lambda c, b: _step_carry(c, b, loss_pair, cfg)  # noqa: E731
+    carry = (state, buf)
+    progress_of = lambda c, mets: (c[0].t, mets.round.f,  # noqa: E731
+                                   mets.round.g_hat, mets.round.sigma)
+    if cfg.obs.enabled:
+        step = obs_bus.window_wrap(
+            step, cfg, sigma_of=lambda m: m.round.sigma,
+            tel_get=lambda m: m.round.telemetry,
+            tel_set=lambda m, tel: m._replace(
+                round=m.round._replace(telemetry=tel)))
+        carry = (carry, obs_bus.ring_init(cfg))
+        progress_of = lambda c, mets: (c[0][0].t, mets.round.f,  # noqa: E731
+                                       mets.round.g_hat, mets.round.sigma)
+    carry, mets = rounds._drive_loop(
+        step, carry, batches, T, per_round=per_round, block=block,
+        progress=progress, progress_of=progress_of, donate=donate,
+        on_chunk=on_chunk)
+    state, buf = carry[0] if cfg.obs.enabled else carry
     return state, buf, mets
 
 

@@ -143,15 +143,17 @@ def encode_flush(transport, e, deltas, part: Participation, like,
                  t=0, key=None):
     """:func:`encode` with slot-store residuals supported: when ``e`` is a
     :class:`repro.scale.slots.SlotStore` the encode runs through
-    ``slots.encode`` (pool lookup, LRU allocation, eviction flush) and the
+    ``slots.encode`` (pool lookup, LRU allocation, eviction flush); the
     third return is the flush aggregate partial to add to the round's fresh
-    reduce (``None`` for dense residuals and for cap >= n stores).  ``t``
-    is the round counter (the store's LRU stamp)."""
+    reduce (``None`` for dense residuals and for cap >= n stores) and the
+    fourth the store's :class:`repro.scale.slots.SlotStats` telemetry
+    counters (``None`` for dense residuals).  ``t`` is the round counter
+    (the store's LRU stamp)."""
     from repro.scale import slots
     if isinstance(e, slots.SlotStore):
         return slots.encode(transport, e, deltas, part, t, key=key)
     msgs, e_out = encode(transport, e, deltas, part, like, key)
-    return msgs, e_out, None
+    return msgs, e_out, None, None
 
 
 def transmit(transport, e, deltas, part: Participation, like,
@@ -161,7 +163,9 @@ def transmit(transport, e, deltas, part: Participation, like,
     comm.flat FlatTransport -- same contract, see :func:`encode`).  The
     sampler's aggregation weights ride in the mask slot (the transport only
     ever selects on ``> 0`` and reduces with it, so weighted laws need no
-    new wire API).
+    new wire API).  Returns ``(v_bar, e_new, slot_stats)`` -- the third is
+    the slot store's :class:`repro.scale.slots.SlotStats` telemetry
+    counters, ``None`` on the dense residual representations.
 
     A :class:`repro.scale.slots.SlotStore` in the ``e`` slot dispatches to
     the O(m*d) slot-store execution (``t`` stamps the LRU) -- same
@@ -172,9 +176,13 @@ def transmit(transport, e, deltas, part: Participation, like,
         return slots.transmit(transport, e, deltas, part, t, key=key)
     w = agg_weights(part)
     if part.idx is None:
-        return transport.transmit(e, deltas, w, part.m, like=like, key=key)
-    return transport.transmit_gathered(e, deltas, part.idx, w,
-                                       part.m, like=like, key=key)
+        v_bar, e_new = transport.transmit(e, deltas, w, part.m, like=like,
+                                          key=key)
+    else:
+        v_bar, e_new = transport.transmit_gathered(e, deltas, part.idx, w,
+                                                   part.m, like=like,
+                                                   key=key)
+    return v_bar, e_new, None
 
 
 def client_vmap(fn, chunk: int = 0):

@@ -40,6 +40,8 @@ from repro.configs.base import FedConfig
 from repro.core.compression import message_bytes
 from repro.engine import participation, strategies
 from repro.fleet import provision, samplers
+from repro.obs import bus as obs_bus
+from repro.obs import trace as obs_trace
 from repro.optim.sgd import tree_axpy, tree_zeros_like
 from repro.sharding import partition
 
@@ -72,6 +74,11 @@ class RoundMetrics(NamedTuple):
     up_bytes: jnp.ndarray
     down_bytes: jnp.ndarray
     f_full: jnp.ndarray     # mean objective over all clients (eval only)
+    # the in-jit telemetry record (repro.obs.bus.Telemetry) when
+    # cfg.obs.enabled; None otherwise -- an EMPTY pytree subtree, so the
+    # disabled round's scan ys/carry gain no leaves and the compiled
+    # engine is bit-for-bit the pre-obs one (the lean_metrics contract)
+    telemetry: object = None
 
 
 def transports_for(cfg: FedConfig):
@@ -210,23 +217,25 @@ def compute_round(state: FedState, wf, spec, batches, fleet, part, strat,
         fwd = participation.client_vmap(
             lambda wfj, b: loss_pair(flat.unflatten(spec, wfj), b),
             cfg.client_chunk)
-        (f_ev, g_ev), pull = jax.vjp(lambda W: fwd(W, local_b), W0)
-        f_part, g_hat, g_full, f_full = _eval_aggregates(
-            part, f_ev, g_ev, sparse_eval, m)
+        with obs_trace.stage("round.eval_round"):
+            (f_ev, g_ev), pull = jax.vjp(lambda W: fwd(W, local_b), W0)
+            f_part, g_hat, g_full, f_full = _eval_aggregates(
+                part, f_ev, g_ev, sparse_eval, m)
         sigma = strat.switch_weight(g_hat, cfg)
-        cots = jax.vmap(jax.grad(
-            lambda fg: strat.blend_values(fg[0], fg[1], sigma, cfg)))
-        df, dg = cots((f_ev, g_ev))
-        (dW,) = pull((df, dg))
-        W_E = W0 - eta * dW
-        if E > 1:
-            obj = strat.local_objective(loss_pair, sigma, cfg)
-            grad_fn = jax.grad(
-                lambda wfj, batch: obj(flat.unflatten(spec, wfj), batch))
-            W_E = participation.client_vmap(
-                lambda w1, b: scan_steps(w1, b, E - 1),
-                cfg.client_chunk)(W_E, local_b)
-        deltas = (wf - W_E) / eta
+        with obs_trace.stage("round.local_deltas"):
+            cots = jax.vmap(jax.grad(
+                lambda fg: strat.blend_values(fg[0], fg[1], sigma, cfg)))
+            df, dg = cots((f_ev, g_ev))
+            (dW,) = pull((df, dg))
+            W_E = W0 - eta * dW
+            if E > 1:
+                obj = strat.local_objective(loss_pair, sigma, cfg)
+                grad_fn = jax.grad(
+                    lambda wfj, batch: obj(flat.unflatten(spec, wfj), batch))
+                W_E = participation.client_vmap(
+                    lambda w1, b: scan_steps(w1, b, E - 1),
+                    cfg.client_chunk)(W_E, local_b)
+            deltas = (wf - W_E) / eta
         deltas = partition.constrain_flat(
             partition.constrain_leading(deltas, "client"))
         return (batches, pre_gathered, f_part, g_hat, g_full, f_full,
@@ -235,10 +244,11 @@ def compute_round(state: FedState, wf, spec, batches, fleet, part, strat,
     # -- unfused: separate eval forward (paper-faithful default) ------------
     eval_b = participation.gather(part, batches) \
         if (sparse_eval and not pre_gathered) else batches
-    f_ev, g_ev = participation.client_vmap(
-        lambda b: loss_pair(state.w, b), cfg.client_chunk)(eval_b)
-    f_part, g_hat, g_full, f_full = _eval_aggregates(
-        part, f_ev, g_ev, sparse_eval, m)
+    with obs_trace.stage("round.eval_round"):
+        f_ev, g_ev = participation.client_vmap(
+            lambda b: loss_pair(state.w, b), cfg.client_chunk)(eval_b)
+        f_part, g_hat, g_full, f_full = _eval_aggregates(
+            part, f_ev, g_ev, sparse_eval, m)
     sigma = strat.switch_weight(g_hat, cfg)
 
     obj = strat.local_objective(loss_pair, sigma, cfg)
@@ -246,9 +256,10 @@ def compute_round(state: FedState, wf, spec, batches, fleet, part, strat,
         lambda wfj, batch: obj(flat.unflatten(spec, wfj), batch))
     local_b = batches if pre_gathered else \
         participation.gather(part, batches)             # [m|n, ...]
-    deltas = participation.client_vmap(
-        lambda b: (wf - scan_steps(wf, b, E)) / eta,
-        cfg.client_chunk)(local_b)
+    with obs_trace.stage("round.local_deltas"):
+        deltas = participation.client_vmap(
+            lambda b: (wf - scan_steps(wf, b, E)) / eta,
+            cfg.client_chunk)(local_b)
     deltas = partition.constrain_flat(
         partition.constrain_leading(deltas, "client"))
     return (batches, pre_gathered, f_part, g_hat, g_full, f_full,
@@ -257,18 +268,22 @@ def compute_round(state: FedState, wf, spec, batches, fleet, part, strat,
 
 def finish_round(state: FedState, strat, cfg: FedConfig, spec, wf, part,
                  deltas, v_bar, e_up, uplink, downlink, samp_state, key,
-                 k_down, f_part, g_hat, g_full, f_full, sigma
-                 ) -> tuple[FedState, RoundMetrics]:
+                 k_down, f_part, g_hat, g_full, f_full, sigma,
+                 slot_stats=None) -> tuple[FedState, RoundMetrics]:
     """Stages 6-7 + bookkeeping, shared with the asynchronous round: server
     update on the aggregated direction, primal-EF21 downlink broadcast,
     averaged-iterate accounting (Theorems 1/2), metrics, next FedState.
 
     Everything runs on the flat [d] buffers (``wf``/``v_bar``/``deltas``
     from :mod:`repro.comm.flat`); the next FedState's pytrees are views
-    (unflatten) of the single updated buffer."""
-    xf = flat.flatten(spec, state.x) if state.x is not None else wf
-    x_new = strat.server_update(xf, v_bar, cfg, spec=spec)
-    w_new_f = downlink.broadcast(wf, x_new, key=k_down)
+    (unflatten) of the single updated buffer.  ``slot_stats`` carries the
+    slot store's per-round telemetry counters from the uplink call site
+    (None on the dense residual) into the obs bus."""
+    with obs_trace.stage("round.server_update"):
+        xf = flat.flatten(spec, state.x) if state.x is not None else wf
+        x_new = strat.server_update(xf, v_bar, cfg, spec=spec)
+    with obs_trace.stage("round.downlink"):
+        w_new_f = downlink.broadcast(wf, x_new, key=k_down)
     w_new = flat.unflatten(spec, partition.constrain_flat(w_new_f))
     x_keep = flat.unflatten(spec, x_new) if downlink.tracks_center else None
 
@@ -280,13 +295,21 @@ def finish_round(state: FedState, strat, cfg: FedConfig, spec, wf, part,
     # discards per-round diagnostics (cfg.lean_metrics) -- bit-parity when on
     delta_norm = jnp.zeros(()) if cfg.lean_metrics else \
         flat.tree_norm(spec, participation.aggregate(part, deltas))
+    # the telemetry bus (repro.obs): pure reductions over buffers this tail
+    # already holds; None when disabled -- an empty subtree, no new leaves
+    telemetry = None
+    if cfg.obs.enabled:
+        with obs_trace.stage("round.telemetry"):
+            telemetry = obs_bus.round_telemetry(
+                cfg, deltas, e_up, x_new, wf, w_new_f, g_hat, sigma,
+                uplink, downlink, slot_stats)
     metrics = RoundMetrics(
         f=f_part, g_hat=g_hat, g_full=g_full, sigma=sigma,
         feasible=(g_hat <= cfg.switch.eps).astype(jnp.float32),
         delta_norm=delta_norm,
         up_bytes=jnp.asarray(float(uplink.wire_bytes()), jnp.float32),
         down_bytes=jnp.asarray(float(downlink.wire_bytes()), jnp.float32),
-        f_full=f_full)
+        f_full=f_full, telemetry=telemetry)
 
     new_state = FedState(
         w=w_new, x=x_keep, e_up=e_up,
@@ -315,7 +338,8 @@ def round_step(state: FedState,
     strat.validate(cfg)
     key, k_part, k_up, k_down = jax.random.split(state.key, 4)
 
-    part, samp_state, fleet = sample_round(state, batches, k_part, cfg)
+    with obs_trace.stage("round.sample_round"):
+        part, samp_state, fleet = sample_round(state, batches, k_part, cfg)
     spec = flat.spec_of(state.w)
     wf = flat.flatten(spec, state.w)
     (batches, pre_gathered, f_part, g_hat, g_full, f_full, sigma,
@@ -327,12 +351,14 @@ def round_step(state: FedState,
     # transport layer (repro.comm / comm.flat); participation-mode dispatch
     # lives in engine.participation.
     uplink, downlink = flat_transports_for(cfg, spec)
-    v_bar, e_up = participation.transmit(
-        uplink, state.e_up, deltas, part, like=wf, key=k_up, t=state.t)
+    with obs_trace.stage("round.encode_reduce"):
+        v_bar, e_up, slot_stats = participation.transmit(
+            uplink, state.e_up, deltas, part, like=wf, key=k_up, t=state.t)
 
     return finish_round(state, strat, cfg, spec, wf, part, deltas, v_bar,
                         e_up, uplink, downlink, samp_state, key, k_down,
-                        f_part, g_hat, g_full, f_full, sigma)
+                        f_part, g_hat, g_full, f_full, sigma,
+                        slot_stats=slot_stats)
 
 
 # ---------------------------------------------------------------------------
@@ -342,7 +368,8 @@ def round_step(state: FedState,
 def drive(state: FedState, batches, loss_pair: Callable, cfg: FedConfig,
           T: int, *, per_round: bool = False, block: int = 0,
           progress: Optional[Callable] = None,
-          donate: Optional[bool] = None):
+          donate: Optional[bool] = None,
+          on_chunk: Optional[Callable] = None):
     """Fully-jitted multi-round driver: lax.scan over rounds with donated
     state buffers, metric offload per ``block`` rounds, and an optional
     host-callback progress hook.
@@ -358,34 +385,54 @@ def drive(state: FedState, batches, loss_pair: Callable, cfg: FedConfig,
       dispatch stall of the old host loop is amortized away).  0 => one
       segment of T rounds.
     * ``progress``: ``progress(t, f, g_hat, sigma)`` called from the device
-      via ``jax.debug.callback`` every round (async, does not stall
-      dispatch).
+      via ``jax.debug.callback`` every round (``ordered=True``: lines
+      cannot reorder across rounds or scan segments).
     * ``donate``: donate the state buffers to each scan segment (defaults to
       on for non-CPU backends; CPU ignores donation and would warn).  The
       caller's state is copied once up front so donation never invalidates
       caller-held arrays (FedState.w aliases the params it was built from).
+    * ``on_chunk``: host callback receiving each offloaded metric segment
+      (numpy, [<=block] leading axis) as it lands -- the metrics-sink hook
+      (repro.obs.sinks), so live sinks see telemetry at ``block``
+      granularity instead of end-of-run.
 
     Returns ``(final_state, metrics)`` with metrics stacked on the host
     ([T] leading axis, numpy).
     """
-    return _drive_loop(
-        lambda c, b: round_step(c, b, loss_pair, cfg),
-        state, batches, T, per_round=per_round, block=block,
-        progress=progress,
-        progress_of=lambda c, mets: (c.t, mets.f, mets.g_hat, mets.sigma),
-        donate=donate)
+    step = lambda c, b: round_step(c, b, loss_pair, cfg)  # noqa: E731
+    carry = state
+    progress_of = lambda c, mets: (c.t, mets.f, mets.g_hat,  # noqa: E731
+                                   mets.sigma)
+    if cfg.obs.enabled:
+        # the trailing switching-fraction ring rides the loop carry (the
+        # FedState itself is untouched -- state parity is unconditional)
+        step = obs_bus.window_wrap(
+            step, cfg, sigma_of=lambda m: m.sigma,
+            tel_get=lambda m: m.telemetry,
+            tel_set=lambda m, tel: m._replace(telemetry=tel))
+        carry = (state, obs_bus.ring_init(cfg))
+        progress_of = lambda c, mets: (c[0].t, mets.f,  # noqa: E731
+                                       mets.g_hat, mets.sigma)
+    carry, mets = _drive_loop(
+        step, carry, batches, T, per_round=per_round, block=block,
+        progress=progress, progress_of=progress_of, donate=donate,
+        on_chunk=on_chunk)
+    return (carry[0] if cfg.obs.enabled else carry), mets
 
 
 def _drive_loop(step: Callable, carry, batches, T: int, *,
                 per_round: bool = False, block: int = 0,
                 progress: Optional[Callable] = None,
                 progress_of: Optional[Callable] = None,
-                donate: Optional[bool] = None):
+                donate: Optional[bool] = None,
+                on_chunk: Optional[Callable] = None):
     """The shared scan machinery behind :func:`drive` and
     ``async_rounds.async_drive``: lax.scan segments over ``step(carry, b)
     -> (carry, mets)`` with donated carry buffers, per-``block`` metric
-    offload, and the ``jax.debug.callback`` progress hook
-    (``progress(*progress_of(carry, mets))`` per round)."""
+    offload (each host segment also fed to ``on_chunk`` -- the sink hook),
+    and the ``jax.debug.callback`` progress hook
+    (``progress(*progress_of(carry, mets))`` per round, ``ordered=True``
+    so lines cannot reorder within or across scan segments)."""
     if donate is None:
         donate = jax.default_backend() != "cpu"
     if donate:
@@ -399,7 +446,8 @@ def _drive_loop(step: Callable, carry, batches, T: int, *,
                 b = x if per_round else batches
                 carry, mets = step(carry, b)
                 if progress is not None:
-                    jax.debug.callback(progress, *progress_of(carry, mets))
+                    jax.debug.callback(progress, *progress_of(carry, mets),
+                                       ordered=True)
                 return carry, mets
             return jax.lax.scan(body, c, xs,
                                 length=None if per_round else length)
@@ -417,7 +465,10 @@ def _drive_loop(step: Callable, carry, batches, T: int, *,
         if per_round:
             xs = tree_map(lambda x: x[t:t + L], batches)
         carry, mets = runners[L](carry, xs)
-        chunks.append(jax.device_get(mets))     # offload one segment
+        host = jax.device_get(mets)             # offload one segment
+        chunks.append(host)
+        if on_chunk is not None:
+            on_chunk(host)
         t += L
     stacked = tree_map(lambda *xs: np.concatenate(xs, axis=0), *chunks)
     return carry, stacked

@@ -19,6 +19,7 @@ from repro.kernels.quantize_ef_pack import quantize_ef_pack
 from repro.kernels.switch_blend import switch_blend
 from repro.kernels.topk_block import block_topk
 from repro.kernels.unpack_mma import unpack_mma
+from repro.obs import trace as obs_trace
 
 
 def _to_blocks(x: jnp.ndarray, block: int):
@@ -37,7 +38,8 @@ def topk_compress(x: jnp.ndarray, ratio: float, block: int = 1024,
     k = max(1, int(round(b * ratio)))
     if k >= b:
         return x
-    vals, idx = block_topk(blocks, k, interpret=interpret)
+    with obs_trace.stage("kernel.block_topk"):
+        vals, idx = block_topk(blocks, k, interpret=interpret)
     dense = jnp.zeros_like(blocks)
     dense = jax.vmap(lambda dst, i, v: dst.at[i].set(v))(dense, idx, vals)
     return dense.reshape(-1)[:d].reshape(x.shape)
@@ -48,7 +50,8 @@ def quantize_ef_apply(e: jnp.ndarray, delta: jnp.ndarray, bits: int,
     """Fused EF14 quantization for arbitrary-shape arrays."""
     eb, d = _to_blocks(e, block)
     db, _ = _to_blocks(delta, block)
-    v, e_new = quantize_ef(eb, db, bits, interpret=interpret)
+    with obs_trace.stage("kernel.quantize_ef"):
+        v, e_new = quantize_ef(eb, db, bits, interpret=interpret)
     unb = lambda t: t.reshape(-1)[:d].reshape(e.shape)
     return unb(v), unb(e_new)
 
@@ -60,7 +63,9 @@ def quantize_ef_pack_apply(e: jnp.ndarray, delta: jnp.ndarray, bits: int,
     ``e``) -- the wire words ship 32//bits codes per uint32."""
     eb, d = _to_blocks(e, block)
     db, _ = _to_blocks(delta, block)
-    words, scale, e_new = quantize_ef_pack(eb, db, bits, interpret=interpret)
+    with obs_trace.stage("kernel.quantize_ef_pack"):
+        words, scale, e_new = quantize_ef_pack(eb, db, bits,
+                                               interpret=interpret)
     return words, scale, e_new.reshape(-1)[:d].reshape(e.shape)
 
 
@@ -70,7 +75,9 @@ def unpack_mma_apply(words: jnp.ndarray, scale: jnp.ndarray,
     """Fused unpack-multiply-add aggregation of stacked client payloads:
     words [n, nblocks, W] + scale [n, nblocks] + weight [n] -> the weighted
     payload-domain sum [nblocks * block] (flat)."""
-    acc = unpack_mma(words, scale, weight, bits, block, interpret=interpret)
+    with obs_trace.stage("kernel.unpack_mma"):
+        acc = unpack_mma(words, scale, weight, bits, block,
+                         interpret=interpret)
     return acc.reshape(-1)
 
 
@@ -183,18 +190,19 @@ def scatter_agg(vals: jnp.ndarray, idx: jnp.ndarray, weight: jnp.ndarray,
                              vals.astype(jnp.float32), axes=(0, 0))
     if plan is None:
         plan = tune.get_plan("scatter_agg", n=n, nblocks=nb, k=k, block=block)
-    if plan.impl == "gemm":
-        return _scatter_agg_gemm(vals, idx, weight, block,
-                                 int(plan.params.get("chunk", 8)))
-    if plan.impl == "onehot":
-        return _scatter_agg_onehot(vals, idx, weight, block,
-                                   int(plan.params.get("chunk", 8)))
-    if plan.impl == "pallas":
-        from repro.kernels.scatter_agg import scatter_agg as kernel
-        return kernel(vals, idx, weight, block,
-                      rows=int(plan.params.get("rows", 8)),
-                      interpret=interpret)
-    return _scatter_agg_scatter(vals, idx, weight, block)
+    with obs_trace.stage(f"kernel.scatter_agg[{plan.impl}]"):
+        if plan.impl == "gemm":
+            return _scatter_agg_gemm(vals, idx, weight, block,
+                                     int(plan.params.get("chunk", 8)))
+        if plan.impl == "onehot":
+            return _scatter_agg_onehot(vals, idx, weight, block,
+                                       int(plan.params.get("chunk", 8)))
+        if plan.impl == "pallas":
+            from repro.kernels.scatter_agg import scatter_agg as kernel
+            return kernel(vals, idx, weight, block,
+                          rows=int(plan.params.get("rows", 8)),
+                          interpret=interpret)
+        return _scatter_agg_scatter(vals, idx, weight, block)
 
 
 def quant_agg(words: jnp.ndarray, scale: jnp.ndarray, weight: jnp.ndarray,
@@ -208,14 +216,15 @@ def quant_agg(words: jnp.ndarray, scale: jnp.ndarray, weight: jnp.ndarray,
     if plan is None:
         plan = tune.get_plan("quant_agg", n=n, nblocks=nb, W=W,
                              bits=bits, block=block)
-    if plan.impl == "pallas":
-        return unpack_mma(words, scale, weight.astype(jnp.float32),
-                          bits, block, interpret=interpret)
-    from repro.comm.payloads import unpack_codes
-    levels = float(2 ** (bits - 1) - 1)
-    codes = unpack_codes(words, bits, block)
-    vals = codes.astype(jnp.float32) / levels * scale[..., None]
-    return jnp.tensordot(weight.astype(jnp.float32), vals, axes=(0, 0))
+    with obs_trace.stage(f"kernel.quant_agg[{plan.impl}]"):
+        if plan.impl == "pallas":
+            return unpack_mma(words, scale, weight.astype(jnp.float32),
+                              bits, block, interpret=interpret)
+        from repro.comm.payloads import unpack_codes
+        levels = float(2 ** (bits - 1) - 1)
+        codes = unpack_codes(words, bits, block)
+        vals = codes.astype(jnp.float32) / levels * scale[..., None]
+        return jnp.tensordot(weight.astype(jnp.float32), vals, axes=(0, 0))
 
 
 def segment_rows(rows: jnp.ndarray, seg: jnp.ndarray, n: int,
@@ -227,15 +236,16 @@ def segment_rows(rows: jnp.ndarray, seg: jnp.ndarray, n: int,
     m = rows.shape[0]
     if plan is None:
         plan = tune.get_plan("segment_rows", m=m, n=n)
-    if plan.impl == "pallas":
-        from repro.kernels.scatter_agg import segment_rows as kernel
-        out = kernel(rows.reshape(m, -1), seg, n,
-                     crows=int(plan.params.get("crows", 8)),
-                     cd=int(plan.params.get("cd", 512)),
-                     interpret=interpret)
-        return out.reshape((n,) + rows.shape[1:]).astype(rows.dtype)
-    out = jnp.zeros((n,) + rows.shape[1:], rows.dtype)
-    return out.at[seg].add(rows)
+    with obs_trace.stage(f"kernel.segment_rows[{plan.impl}]"):
+        if plan.impl == "pallas":
+            from repro.kernels.scatter_agg import segment_rows as kernel
+            out = kernel(rows.reshape(m, -1), seg, n,
+                         crows=int(plan.params.get("crows", 8)),
+                         cd=int(plan.params.get("cd", 512)),
+                         interpret=interpret)
+            return out.reshape((n,) + rows.shape[1:]).astype(rows.dtype)
+        out = jnp.zeros((n,) + rows.shape[1:], rows.dtype)
+        return out.at[seg].add(rows)
 
 
 def switch_blend_tree(gf_tree, gg_tree, sigma, block: int = 4096,

@@ -26,11 +26,13 @@ def run_one(arch: str, shape_name: str, mesh_kind: str, comm: str = "dense",
             dtype: str = None, seq_shard: bool = False,
             participation: str = "mask", client_chunk: int = 0,
             sampler: str = "uniform", async_buffer: bool = False,
-            staleness: str = "constant", verbose: bool = True) -> dict:
+            staleness: str = "constant", obs: bool = False,
+            verbose: bool = True) -> dict:
     import jax
     from repro import configs
     from repro.launch import roofline, steps
     from repro.launch.mesh import make_production_mesh
+    from repro.obs import log as obs_log
 
     t0 = time.time()
     mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
@@ -40,7 +42,8 @@ def run_one(arch: str, shape_name: str, mesh_kind: str, comm: str = "dense",
            "uplink_ratio": uplink_ratio, "dtype": dtype or "default",
            "seq_shard": seq_shard, "participation": participation,
            "client_chunk": client_chunk, "sampler": sampler,
-           "async_buffer": async_buffer, "staleness": staleness}
+           "async_buffer": async_buffer, "staleness": staleness,
+           "obs": obs}
 
     reason = steps.skip_reason(arch, shape_name)
     if reason:
@@ -52,7 +55,8 @@ def run_one(arch: str, shape_name: str, mesh_kind: str, comm: str = "dense",
                             seq_shard=seq_shard, uplink_ratio=uplink_ratio,
                             participation=participation,
                             client_chunk=client_chunk, sampler=sampler,
-                            async_buffer=async_buffer, staleness=staleness) \
+                            async_buffer=async_buffer, staleness=staleness,
+                            obs=obs) \
         if shape_name == "train_4k" else \
         steps.build_case(arch, shape_name, mesh, dtype=dtype)
     with mesh:
@@ -91,14 +95,14 @@ def run_one(arch: str, shape_name: str, mesh_kind: str, comm: str = "dense",
         n_params=cfg.n_params(), n_active_params=cfg.n_active_params(),
     )
     if verbose:
-        print(f"== {arch} × {shape_name} × {mesh_kind} ({chips} chips) ==")
-        print(f"  memory_analysis: {json.dumps(mem)}")
-        print(f"  cost_analysis: flops={cost['flops']:.3e} bytes={cost['bytes']:.3e}")
-        print(f"  collectives: {rec['collectives']}")
-        print(f"  roofline: compute={terms['compute_s']:.4f}s "
-              f"memory={terms['memory_s']:.4f}s coll={terms['collective_s']:.4f}s "
-              f"-> {terms['dominant']}-bound")
-        print(f"  MODEL_FLOPS={mf:.3e} useful/HLO={rec['useful_flops_ratio']:.3f}")
+        obs_log.log(f"== {arch} × {shape_name} × {mesh_kind} ({chips} chips) ==")
+        obs_log.log(f"  memory_analysis: {json.dumps(mem)}")
+        obs_log.log(f"  cost_analysis: flops={cost['flops']:.3e} bytes={cost['bytes']:.3e}")
+        obs_log.log(f"  collectives: {rec['collectives']}")
+        obs_log.log(f"  roofline: compute={terms['compute_s']:.4f}s "
+                    f"memory={terms['memory_s']:.4f}s coll={terms['collective_s']:.4f}s "
+                    f"-> {terms['dominant']}-bound")
+        obs_log.log(f"  MODEL_FLOPS={mf:.3e} useful/HLO={rec['useful_flops_ratio']:.3f}")
     return rec
 
 
@@ -149,6 +153,15 @@ def main():
     ap.add_argument("--staleness", default="constant",
                     choices=["constant", "poly", "constraint"],
                     help="staleness-decay law for the async round")
+    ap.add_argument("--obs", action="store_true",
+                    help="lower the instrumented round (in-jit telemetry "
+                         "bus, repro.obs): telemetry becomes extra scan "
+                         "outputs in the compiled step")
+    ap.add_argument("--log-level", default="info",
+                    help="log threshold for the analysis report "
+                         "(repro.obs.log)")
+    ap.add_argument("--quiet", action="store_true",
+                    help="shorthand for --log-level warning")
     ap.add_argument("--dtype", default=None, choices=[None, "float32", "bfloat16"])
     ap.add_argument("--seq-shard", action="store_true")
     ap.add_argument("--append", default=None, help="append JSONL record here")
@@ -158,6 +171,9 @@ def main():
     ap.add_argument("--shapes", default=None)
     ap.add_argument("--meshes", default="single,multi")
     args = ap.parse_args()
+
+    from repro.obs import log as obs_log
+    obs_log.set_level("warning" if args.quiet else args.log_level)
 
     if args.sweep:
         import os as _os
@@ -176,7 +192,7 @@ def main():
                       participation=args.participation,
                       client_chunk=args.client_chunk, sampler=args.sampler,
                       async_buffer=args.async_buffer,
-                      staleness=args.staleness)
+                      staleness=args.staleness, obs=args.obs)
     except Exception as e:  # noqa: BLE001
         rec = {"arch": args.arch, "shape": args.shape, "mesh": args.mesh,
                "comm": args.comm, "status": "error",

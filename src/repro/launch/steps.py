@@ -18,7 +18,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro import configs
 from repro.configs.base import (AsyncConfig, CompressorConfig, FedConfig,
                                 FleetConfig, InputShape, ModelConfig,
-                                SwitchConfig)
+                                ObsConfig, SwitchConfig)
 from repro.core import fedsgm
 from repro.models import build
 from repro.sharding import partition
@@ -67,7 +67,8 @@ def fed_config_for(cfg: ModelConfig, mesh: Mesh, local_steps: int = 1,
                    client_chunk: int = 0,
                    sampler: str = "uniform",
                    async_buffer: bool = False,
-                   staleness: str = "constant") -> FedConfig:
+                   staleness: str = "constant",
+                   obs: bool = False) -> FedConfig:
     """Default FedSGM policy per architecture class (DESIGN.md §5).
 
     ``comm`` selects the transport backend (DESIGN.md §Transport):
@@ -80,7 +81,9 @@ def fed_config_for(cfg: ModelConfig, mesh: Mesh, local_steps: int = 1,
     the abstract dry-run state; markov needs an engine-built FedState.
     ``async_buffer``/``staleness`` enable the asynchronous buffered round
     (engine.async_rounds, DESIGN.md §Async): the lowered step becomes
-    ``async_round_step`` with the staleness buffer as an extra input."""
+    ``async_round_step`` with the staleness buffer as an extra input.
+    ``obs`` turns on the in-jit telemetry bus (repro.obs, DESIGN.md §Obs)
+    so the dry-run lowers the instrumented round."""
     from repro import comm as comm_layer
     from repro.engine import async_rounds, participation as part_layer
     from repro.fleet import samplers as sampler_layer
@@ -92,6 +95,7 @@ def fed_config_for(cfg: ModelConfig, mesh: Mesh, local_steps: int = 1,
                          f"expected one of {part_layer.MODES}")
     fleet = FleetConfig(sampler=sampler)
     async_ = AsyncConfig(enabled=async_buffer, staleness=staleness)
+    obs_ = ObsConfig(enabled=obs)
     axes = dict(zip(mesh.axis_names, mesh.devices.shape))
     shards = axes.get("model", 1)   # shard-local compression blocks (§Perf A0)
     if cfg.name in GIANTS:
@@ -104,7 +108,8 @@ def fed_config_for(cfg: ModelConfig, mesh: Mesh, local_steps: int = 1,
             downlink=CompressorConfig(kind="none"),
             comm=comm, client_axis="pod" if "pod" in axes else None,
             track_wbar=False, participation=participation,
-            client_chunk=client_chunk, fleet=fleet, async_=async_)
+            client_chunk=client_chunk, fleet=fleet, async_=async_,
+            obs=obs_)
     n = axes.get("data", 1)
     m = max(1, int(0.75 * n)) if partial else n
     return FedConfig(
@@ -116,7 +121,7 @@ def fed_config_for(cfg: ModelConfig, mesh: Mesh, local_steps: int = 1,
                                   block=2048, shards=shards),
         comm=comm, client_axis="data", track_wbar=False,
         participation=participation, client_chunk=client_chunk, fleet=fleet,
-        async_=async_)
+        async_=async_, obs=obs_)
 
 
 def _activate(cfg: ModelConfig, mesh: Mesh, kind: str, fed: Optional[FedConfig]):
@@ -169,7 +174,8 @@ def build_train_case(cfg: ModelConfig, shape: InputShape, mesh: Mesh,
                      client_chunk: int = 0,
                      sampler: str = "uniform",
                      async_buffer: bool = False,
-                     staleness: str = "constant") -> Case:
+                     staleness: str = "constant",
+                     obs: bool = False) -> Case:
     if dtype:
         cfg = dataclasses.replace(cfg, param_dtype=dtype)
     fns = build(cfg)
@@ -178,7 +184,7 @@ def build_train_case(cfg: ModelConfig, shape: InputShape, mesh: Mesh,
                                 participation=participation,
                                 client_chunk=client_chunk,
                                 sampler=sampler, async_buffer=async_buffer,
-                                staleness=staleness)
+                                staleness=staleness, obs=obs)
     _activate(cfg, mesh, "train", fed)
     if seq_shard:
         # sequence parallelism for the residual stream (hillclimb knob):

@@ -5,6 +5,12 @@ config (``--reduced``, default when only one device is present).
 
     PYTHONPATH=src python -m repro.launch.train --arch smollm-360m --reduced \
         --rounds 20 --seq 64 --batch 2
+
+Observability (DESIGN.md §Obs): ``--obs`` turns on the in-jit telemetry
+bus, ``--sink {stdout,jsonl,memory}`` selects where per-round records go
+(``--sink-path`` the JSONL file), ``--profile start:stop`` captures a
+Perfetto trace for that round window, ``--log-level``/``--quiet`` gate
+the launcher's own chatter.
 """
 from __future__ import annotations
 
@@ -12,13 +18,18 @@ import argparse
 import time
 
 import jax
+import numpy as np
 
 from repro import configs
 from repro.configs.base import (AsyncConfig, CompressorConfig, FedConfig,
-                                FleetConfig, ScaleConfig, SwitchConfig)
+                                FleetConfig, ObsConfig, ScaleConfig,
+                                SwitchConfig)
 from repro.core import fedsgm
 from repro.data import synthetic
 from repro.models import build
+from repro.obs import log as obs_log
+from repro.obs import sinks as obs_sinks
+from repro.obs import trace as obs_trace
 from repro.sharding import partition
 from repro.tasks import lm
 
@@ -80,11 +91,37 @@ def main():
                     help="hierarchical two-tier payload aggregation: this "
                          "many edge reducers each reduce their cohort's "
                          "payloads, the server sums the partials")
+    ap.add_argument("--obs", action="store_true",
+                    help="in-jit telemetry bus (repro.obs, DESIGN.md §Obs): "
+                         "per-round optimizer-health counters ride the "
+                         "metric offload; off is bit-for-bit the plain "
+                         "engine")
+    ap.add_argument("--obs-window", type=int, default=8,
+                    help="trailing window (rounds) for the switching "
+                         "fraction telemetry")
+    ap.add_argument("--sink", default="stdout",
+                    choices=list(obs_sinks.sink_names()),
+                    help="per-round metric destination "
+                         "(repro.obs.sinks registry)")
+    ap.add_argument("--sink-path", default="metrics.jsonl",
+                    help="output file for --sink jsonl")
+    ap.add_argument("--log-level", default="info",
+                    choices=list(obs_log.LEVELS),
+                    help="launcher log threshold (repro.obs.log)")
+    ap.add_argument("--quiet", action="store_true",
+                    help="shorthand for --log-level warning (silences the "
+                         "stdout sink's progress lines too)")
+    ap.add_argument("--profile", default=None, metavar="START:STOP",
+                    help="capture a jax.profiler trace while START <= round "
+                         "< STOP (Perfetto-viewable dir under profiles/)")
     ap.add_argument("--multi-pod", action="store_true",
                     help="use the production mesh (needs devices)")
     ap.add_argument("--ckpt-dir", default=None,
                     help="save/restore round checkpoints here")
     args = ap.parse_args()
+
+    obs_log.set_level("warning" if args.quiet else args.log_level)
+    profile = obs_trace.ProfileWindow(args.profile)
 
     reduced = args.reduced
     if reduced is None:
@@ -115,7 +152,8 @@ def main():
                            staleness=args.staleness,
                            max_staleness=args.max_staleness,
                            depart=args.depart),
-        scale=ScaleConfig(ef_slots=args.ef_slots, cohorts=args.cohorts))
+        scale=ScaleConfig(ef_slots=args.ef_slots, cohorts=args.cohorts),
+        obs=ObsConfig(enabled=args.obs, window=args.obs_window))
     loss_pair = lm.make_loss_pair(fns.forward, cfg, budget=6.0,
                                   aux_constraint=cfg.moe is not None)
     state = fedsgm.init_state(params, fed)
@@ -125,7 +163,15 @@ def main():
         restored, t0 = checkpoint.restore_round(args.ckpt_dir, state)
         if restored is not None:
             state, start_round = restored, t0
-            print(f"restored checkpoint at round {t0}")
+            obs_log.log(f"restored checkpoint at round {t0}")
+
+    sink = obs_sinks.get_sink(
+        args.sink, **({"path": args.sink_path} if args.sink == "jsonl" else {}))
+    sink.open(meta={"arch": cfg.name, "rounds": args.rounds,
+                    "comm": args.comm, "strategy": args.strategy,
+                    "participation": args.participation,
+                    "async_buffer": args.async_buffer, "obs": args.obs,
+                    "start_round": start_round})
 
     t0 = time.time()
     if args.fleet:
@@ -152,24 +198,21 @@ def main():
                 async_rounds.buffer_wire_struct(state.w, fed))
             if wire is not None:
                 buf = async_rounds.buffer_from_wire(wire, state.w, fed)
-                print(f"restored staleness buffer at round {start_round}")
+                obs_log.log(f"restored staleness buffer at round "
+                            f"{start_round}")
         for chunk in range(max(args.rounds // 10, 1)):
+            profile.tick(start_round + 10 * chunk)
             if args.async_buffer:
-                state, buf, ahist = async_rounds.async_drive(
+                state, buf, hist = async_rounds.async_drive(
                     state, fleet, loss_pair, fed, T=10, buf=buf)
-                hist, extra = ahist.round, (
-                    f" buffered={int(ahist.occupancy[-1])} "
-                    f"merged={int(ahist.merged.sum())}")
             else:
                 state, hist = fedsgm.drive(state, fleet, loss_pair, fed,
                                            T=10)
-                extra = ""
             done = start_round + 10 * (chunk + 1)
-            print(f"round {done:4d}: f={float(hist.f[-1]):.4f} "
-                  f"g={float(hist.g_hat[-1]):+.4f} "
-                  f"sigma={float(hist.sigma[-1]):.2f} "
-                  f"({(time.time()-t0)/(done-start_round):.2f}s/round)"
-                  f"{extra}")
+            for rec in obs_sinks.rows(
+                    hist, start_round=done - 10,
+                    s_per_round=(time.time() - t0) / (done - start_round)):
+                sink.emit(rec)
             if args.ckpt_dir:
                 from repro import checkpoint
                 checkpoint.save_round(args.ckpt_dir, done, state,
@@ -178,6 +221,8 @@ def main():
                 checkpoint.save_buffer(
                     args.ckpt_dir, done,
                     async_rounds.buffer_wire(buf, state.w, fed))
+        profile.close()
+        sink.close()
         return
 
     def batch_fn(t, k):
@@ -198,22 +243,24 @@ def main():
             s, b, batch, loss_pair, fed))
 
     for chunk in range(max(args.rounds // 10, 1)):
+        profile.tick(start_round + 10 * chunk)
         if args.async_buffer:
             key = jax.random.PRNGKey(fed.seed + 1 + chunk)
+            per_round = []
             for t in range(10):
                 key, sub = jax.random.split(key)
-                state, buf, hist = astep(state, buf, batch_fn(t, sub))
-            hist = hist.round
+                state, buf, h = astep(state, buf, batch_fn(t, sub))
+                per_round.append(jax.device_get(h))
+            hist = jax.tree_util.tree_map(
+                lambda *xs: np.stack(xs), *per_round)
         else:
             state, hist = fedsgm.run_rounds(state, batch_fn, loss_pair,
                                             fed, T=10)
         done = start_round + 10 * (chunk + 1)
-        f_last, g_last, s_last = (
-            (hist.f, hist.g_hat, hist.sigma) if args.async_buffer else
-            (hist.f[-1], hist.g_hat[-1], hist.sigma[-1]))
-        print(f"round {done:4d}: f={float(f_last):.4f} "
-              f"g={float(g_last):+.4f} sigma={float(s_last):.2f} "
-              f"({(time.time()-t0)/(done-start_round):.2f}s/round)")
+        for rec in obs_sinks.rows(
+                hist, start_round=done - 10,
+                s_per_round=(time.time() - t0) / (done - start_round)):
+            sink.emit(rec)
         if args.ckpt_dir:
             from repro import checkpoint
             checkpoint.save_round(args.ckpt_dir, done, state,
@@ -223,6 +270,8 @@ def main():
                 checkpoint.save_buffer(
                     args.ckpt_dir, done,
                     async_rounds.buffer_wire(buf, state.w, fed))
+    profile.close()
+    sink.close()
 
 
 if __name__ == "__main__":

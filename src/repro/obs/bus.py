@@ -1,0 +1,159 @@
+"""The in-jit telemetry bus (DESIGN.md §Obs).
+
+:class:`Telemetry` is a typed pytree of optimizer-health counters computed
+*inside* the jitted round and offloaded with the existing metric segments
+(``rounds._drive_loop``): EF residual norms and residual-to-delta ratios
+per direction, the constraint margin, the trailing switching fraction,
+slot-store occupancy / evictions / flush credit, the StaleBuffer staleness
+histogram + parked HT mass, and measured wire bytes.
+
+Parity law (tests/test_obs.py, ``benchmarks/obs_bench.py --smoke``): with
+``ObsConfig.enabled=False`` the ``RoundMetrics.telemetry`` field is
+``None`` -- an *empty pytree subtree*, so the scan ys gain no leaves and
+the compiled round is the un-instrumented engine exactly.  Enabled,
+telemetry is observation-only: the state trajectory is bit-identical to
+the disabled run (every counter is a reduction over arrays the round
+already materializes).
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+_TINY = 1e-30
+
+
+class Telemetry(NamedTuple):
+    """Per-round optimizer-health counters (f32 scalars unless noted).
+
+    ``up_res_norm``/``up_ratio``: Frobenius norm of the post-round uplink
+    EF residual stack and its ratio to the local-delta stack norm -- for
+    EF14 the new residual IS this round's uplink compression error, so the
+    ratio is the ROADMAP item-4 controller signal (wire budget vs. where
+    the optimizer is actually moving).  ``down_err_norm``/``down_ratio``:
+    the downlink compression error ``x_{t+1} - w_{t+1}`` against the
+    server step ``x_{t+1} - w_t`` (zero under an identity downlink).
+    ``buf_stale_hist`` is the one non-scalar leaf: ``[max_staleness + 1]``
+    occupied-slot counts by age (all zeros in synchronous rounds)."""
+    up_res_norm: jnp.ndarray    # ||e_up||_F after the round's EF step
+    up_ratio: jnp.ndarray       # up_res_norm / ||deltas||_F
+    down_err_norm: jnp.ndarray  # ||x_new - w_new||
+    down_ratio: jnp.ndarray     # down_err_norm / ||x_new - w_old||
+    margin: jnp.ndarray         # g_hat - eps (signed constraint margin)
+    switch_frac: jnp.ndarray    # mean sigma over the trailing obs.window
+                                # (rewritten by the drive-loop ring; a bare
+                                # round_step reports this round's sigma)
+    wire_up_bytes: jnp.ndarray  # measured uplink wire bytes, whole round
+    wire_down_bytes: jnp.ndarray  # measured downlink broadcast bytes
+    slot_occupancy: jnp.ndarray   # slot-store owned slots (0 dense)
+    slot_evictions: jnp.ndarray   # LRU evictions this round (0 dense)
+    slot_flush_weight: jnp.ndarray  # HT mass flushed by evictions (0 dense)
+    buf_occupancy: jnp.ndarray    # StaleBuffer occupied slots (0 sync)
+    buf_parked_weight: jnp.ndarray  # HT mass parked in the buffer (0 sync)
+    buf_stale_hist: jnp.ndarray   # [max_staleness + 1] occupied by age
+
+
+def empty_telemetry(cfg) -> Telemetry:
+    """An all-zero telemetry record with ``cfg``'s static shapes (the
+    disabled-field filler and the test-side structure reference)."""
+    z = jnp.zeros((), jnp.float32)
+    return Telemetry(*([z] * 13),
+                     buf_stale_hist=jnp.zeros(
+                         (cfg.async_.max_staleness + 1,), jnp.float32))
+
+
+def _fro(x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.sqrt(jnp.sum(jnp.square(x.astype(jnp.float32))))
+
+
+def residual_norm(e_up) -> jnp.ndarray:
+    """Frobenius norm of the uplink EF residual in any of its engine
+    representations: dense ``[n|m, d]`` stack, :class:`repro.scale.slots
+    .SlotStore` (owned pool rows only -- free slots hold stale garbage),
+    or ``None`` (uncompressed uplink: the residual does not exist)."""
+    if e_up is None:
+        return jnp.zeros((), jnp.float32)
+    from repro.scale import slots
+    if isinstance(e_up, slots.SlotStore):
+        owned = (e_up.owner >= 0).astype(e_up.pool.dtype)
+        return _fro(e_up.pool * owned[:, None])
+    return _fro(e_up)
+
+
+def round_telemetry(cfg, deltas, e_up, x_new, wf, w_new_f,
+                    g_hat, sigma, uplink, downlink,
+                    slot_stats=None) -> Telemetry:
+    """Build one round's :class:`Telemetry` from the tail of
+    ``rounds.finish_round`` (every input is already materialized there;
+    the counters are pure reductions, so the state trajectory is
+    untouched).  ``slot_stats`` is the :class:`repro.scale.slots.SlotStats`
+    from this round's slot-store encode, or None on the dense residual."""
+    delta_n = _fro(deltas)
+    res_n = residual_norm(e_up)
+    step_n = _fro(x_new - wf)
+    err_n = _fro(x_new - w_new_f)
+    occ = ev = flw = jnp.zeros((), jnp.float32)
+    if slot_stats is not None:
+        occ, ev, flw = (slot_stats.occupancy, slot_stats.evictions,
+                        slot_stats.flush_weight)
+    return Telemetry(
+        up_res_norm=res_n,
+        up_ratio=res_n / jnp.maximum(delta_n, _TINY),
+        down_err_norm=err_n,
+        down_ratio=err_n / jnp.maximum(step_n, _TINY),
+        margin=(g_hat - cfg.switch.eps).astype(jnp.float32),
+        switch_frac=sigma.astype(jnp.float32),
+        wire_up_bytes=jnp.asarray(float(uplink.wire_bytes()) * cfg.m,
+                                  jnp.float32),
+        wire_down_bytes=jnp.asarray(float(downlink.wire_bytes()),
+                                    jnp.float32),
+        slot_occupancy=occ, slot_evictions=ev, slot_flush_weight=flw,
+        buf_occupancy=jnp.zeros((), jnp.float32),
+        buf_parked_weight=jnp.zeros((), jnp.float32),
+        buf_stale_hist=jnp.zeros((cfg.async_.max_staleness + 1,),
+                                 jnp.float32))
+
+
+def staleness_hist(occupied: jnp.ndarray, age: jnp.ndarray,
+                   cfg) -> jnp.ndarray:
+    """Occupied-slot counts by age: ``hist[h] = sum_j occupied_j *
+    1[age_j == h]`` for h in [0, max_staleness] (static shape; a one-hot
+    contraction, no scatter)."""
+    hs = jnp.arange(cfg.async_.max_staleness + 1, dtype=jnp.float32)
+    onehot = (age.astype(jnp.float32)[:, None] == hs).astype(jnp.float32)
+    return jnp.sum(occupied.astype(jnp.float32)[:, None] * onehot, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# The trailing switching-fraction window (drive-loop ring)
+# ---------------------------------------------------------------------------
+
+def ring_init(cfg):
+    """The sigma ring riding the drive-loop carry when telemetry is on:
+    a ``[window]`` f32 buffer + the rounds-seen counter."""
+    w = max(1, int(cfg.obs.window))
+    return (jnp.zeros((w,), jnp.float32), jnp.zeros((), jnp.int32))
+
+
+def window_wrap(step: Callable, cfg, *, sigma_of: Callable,
+                tel_get: Callable, tel_set: Callable) -> Callable:
+    """Wrap a drive step ``step(carry, b) -> (carry, mets)`` so the
+    telemetry's ``switch_frac`` reports the mean sigma over the trailing
+    ``cfg.obs.window`` rounds (a scan-carried ring; rounds seen < window
+    average over what exists).  ``sigma_of(mets)`` reads the round's
+    sigma; ``tel_get``/``tel_set`` address the telemetry record inside
+    the step's metric type (RoundMetrics vs AsyncMetrics)."""
+    w = max(1, int(cfg.obs.window))
+
+    def wrapped(carry2, b):
+        carry, (buf, seen) = carry2
+        carry, mets = step(carry, b)
+        buf = buf.at[seen % w].set(sigma_of(mets).astype(jnp.float32))
+        seen = seen + 1
+        frac = jnp.sum(buf) / jnp.minimum(seen, w).astype(jnp.float32)
+        mets = tel_set(mets, tel_get(mets)._replace(switch_frac=frac))
+        return (carry, (buf, seen)), mets
+
+    return wrapped

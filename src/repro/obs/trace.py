@@ -1,0 +1,84 @@
+"""Stage-level tracing (DESIGN.md §Obs).
+
+:func:`stage` is the one span primitive used across the codebase: it
+enters a ``jax.named_scope`` (names the emitted HLO ops, so XLA profiles
+group by round stage) *and* a ``jax.profiler.TraceAnnotation`` (a host
+TraceMe span, so Python-side dispatch shows under the same label in a
+Perfetto capture).  Both are metadata-only -- wrapping a stage changes no
+numerics, which is why the engine wraps its stages unconditionally
+(bit-parity needs no gate; verified by the obs parity matrix).
+
+:class:`ProfileWindow` backs the launcher's ``--profile start:stop`` flag:
+it starts ``jax.profiler.start_trace`` when the round counter enters the
+window and writes a Perfetto-viewable trace directory when it leaves
+(view at https://ui.perfetto.dev or ``tensorboard --logdir <dir>``).
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+
+@contextlib.contextmanager
+def stage(name: str):
+    """A named tracing span: ``jax.named_scope(name)`` for the lowered HLO
+    + ``jax.profiler.TraceAnnotation(name)`` for the host timeline.
+    Metadata only -- numerics are untouched."""
+    with jax.named_scope(name), jax.profiler.TraceAnnotation(name):
+        yield
+
+
+class ProfileWindow:
+    """Capture a profiler trace for a window of rounds.
+
+    ``spec`` is ``"start:stop"`` in round numbers (capture while
+    ``start <= round < stop``), e.g. ``--profile 10:20``; ``""``/None
+    disables (every call is a no-op).  Drive the window from the training
+    loop with :meth:`tick` -- idempotent per state, so chunked drivers may
+    call it at chunk granularity::
+
+        >>> win = ProfileWindow("10:20", out_dir="profiles")
+        >>> for chunk in range(...):
+        ...     win.tick(done_rounds)      # starts/stops as the window
+        ...     state, hist = drive(...)   # boundary is crossed
+        >>> win.close()                    # stop if still capturing
+    """
+
+    def __init__(self, spec: str | None, out_dir: str = "profiles"):
+        self.out_dir = out_dir
+        self.active = False
+        self.done = False
+        if not spec:
+            self.start = self.stop = None
+            self.done = True
+            return
+        try:
+            a, b = spec.split(":")
+            self.start, self.stop = int(a), int(b)
+        except ValueError:
+            raise ValueError(
+                f"--profile expects 'start:stop' round numbers, got {spec!r}")
+        if self.stop <= self.start:
+            raise ValueError(
+                f"--profile window is empty: {self.start}:{self.stop}")
+
+    def tick(self, rnd: int) -> None:
+        """Advance to round ``rnd``: start capturing when the window opens,
+        write the trace when it closes."""
+        if self.done:
+            return
+        if not self.active and self.start <= rnd < self.stop:
+            jax.profiler.start_trace(self.out_dir)
+            self.active = True
+        elif self.active and rnd >= self.stop:
+            jax.profiler.stop_trace()
+            self.active = False
+            self.done = True
+
+    def close(self) -> None:
+        """Stop a still-open capture (end of run inside the window)."""
+        if self.active:
+            jax.profiler.stop_trace()
+            self.active = False
+            self.done = True

@@ -50,6 +50,21 @@ from repro.sharding import partition
 FLUSH_TAG = 0x666C7368
 
 
+class SlotStats(NamedTuple):
+    """One round's slot-store health counters (f32 scalars), computed by
+    :func:`encode` from values the update already materializes and surfaced
+    as telemetry (``Telemetry.slot_*``, repro.obs) -- previously the
+    eviction count and the flushed HT mass were computed and dropped.
+
+    ``occupancy`` counts owned slots *after* the update; ``evictions`` the
+    rows reallocated from a previous owner this round; ``flush_weight``
+    the Horvitz-Thompson mass their orphaned residuals re-entered the
+    aggregate with (0 when ``cap >= n``: eviction statically absent)."""
+    occupancy: jnp.ndarray
+    evictions: jnp.ndarray
+    flush_weight: jnp.ndarray
+
+
 class SlotStore(NamedTuple):
     """Capacity-bounded uplink EF residual pool (one row per *slot*, not per
     client).  A plain pytree: it scans, jits, donates and checkpoints like
@@ -157,14 +172,16 @@ def encode(uplink, store: SlotStore, deltas: jnp.ndarray,
            part: participation.Participation, t, key=None):
     """The slot-store EF encode: EF14 over the m sampled rows with
     residuals from the pool, LRU allocation, store update, and the
-    eviction flush partial.  Returns ``(msgs_full, new_store, v_flush)``
+    eviction flush partial.  Returns ``(msgs_full, new_store, v_flush,
+    stats)``
     where ``msgs_full`` are the wire messages scattered back into the full
     [n] client layout (the gather path's layout, so any downstream
     ``uplink.reduce`` -- synchronous or async staleness-weighted -- applies
     unchanged) and ``v_flush`` is the evicted-residual aggregate partial to
     add to this round's fresh reduce (``None`` when ``cap >= n``: eviction
     is statically impossible, which is the bit-parity regime vs the dense
-    residual).
+    residual).  ``stats`` is the round's :class:`SlotStats` -- byproducts
+    of the update, never fed back into it.
 
     ``deltas`` are the gather path's [m, d] rows (sorted client order);
     ``t`` is the round counter (the LRU stamp)."""
@@ -204,7 +221,12 @@ def encode(uplink, store: SlotStore, deltas: jnp.ndarray,
         client_slot=store.client_slot
         .at[jnp.where(evict, old_owner, n)].set(-1, mode="drop")
         .at[idx].set(slots.astype(jnp.int32)))
-    return full, new_store, v_flush
+    stats = SlotStats(
+        occupancy=jnp.sum((new_store.owner >= 0).astype(jnp.float32)),
+        evictions=jnp.sum(evict.astype(jnp.float32)),
+        flush_weight=jnp.sum(
+            jnp.where(evict, jnp.take(store.weight, slots), 0.0)))
+    return full, new_store, v_flush, stats
 
 
 def transmit(uplink, store: SlotStore, deltas: jnp.ndarray,
@@ -212,10 +234,11 @@ def transmit(uplink, store: SlotStore, deltas: jnp.ndarray,
     """The synchronous slot-store uplink call site (what
     ``participation.transmit`` dispatches to when ``FedState.e_up`` is a
     :class:`SlotStore`): :func:`encode` + the gather path's exact
-    aggregation op.  Returns ``(v_bar, new_store)``."""
-    full, new_store, v_flush = encode(uplink, store, deltas, part, t, key)
+    aggregation op.  Returns ``(v_bar, new_store, stats)``."""
+    full, new_store, v_flush, stats = encode(uplink, store, deltas, part,
+                                             t, key)
     w = participation.agg_weights(part)
     v_bar = uplink.reduce(full, w, part.m)
     if v_flush is not None:
         v_bar = v_bar + v_flush
-    return v_bar, new_store
+    return v_bar, new_store, stats

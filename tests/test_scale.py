@@ -233,13 +233,13 @@ class TestEvictionFlush:
 
         part0 = _part([0, 1], n)
         d0 = jax.random.normal(key, (m, d))
-        _, store1 = slots.transmit(ft, store, d0, part0, 0)
+        _, store1, _ = slots.transmit(ft, store, d0, part0, 0)
         # residents hold nonzero residuals (top-k is lossy)
         assert float(jnp.abs(store1.pool).sum()) > 0
 
         part1 = _part([2, 3], n)
         d1 = jax.random.normal(jax.random.fold_in(key, 1), (m, d))
-        v1, store2 = slots.transmit(ft, store1, d1, part1, 1)
+        v1, store2, _ = slots.transmit(ft, store1, d1, part1, 1)
 
         # manual decomposition, replicating the flush row order (the slot
         # each new client claimed)
@@ -274,9 +274,9 @@ class TestEvictionFlush:
                                 tmpl)
         store = slots.init(n, n, d, jnp.float32)
         key = jax.random.PRNGKey(0)
-        _, s1 = slots.transmit(ft, store, jax.random.normal(key, (2, d)),
+        _, s1, _ = slots.transmit(ft, store, jax.random.normal(key, (2, d)),
                                _part([0, 1], n), 0)
-        _, s2 = slots.transmit(ft, s1,
+        _, s2, _ = slots.transmit(ft, s1,
                                jax.random.normal(jax.random.fold_in(key, 1),
                                                  (2, d)),
                                _part([2, 3], n), 1)

@@ -1,0 +1,106 @@
+#!/usr/bin/env python3
+"""Schema validator for the committed BENCH_*.json tables (docs-lint CI).
+
+Every benchmark seeds a ``BENCH_<layer>.json`` at the repo root with the
+shape ``{"bench": <name>, "records": <list-or-dict>}``.  CI smoke jobs
+read these as regression tie-breakers, so a malformed table (truncated
+write, NaN overhead, records under the wrong key) must fail docs-lint
+rather than silently disarm a gate.
+
+Checks, per file (stdlib only, no repro import):
+
+* parses as strict JSON -- NaN / Infinity literals are rejected (they are
+  not JSON, and a NaN ratio would poison every gate comparison);
+* top level is an object with a non-empty string ``bench`` and a
+  non-empty ``records`` (list of objects, or an object of named groups);
+* list records are flat objects; every numeric leaf is finite.
+
+    python tools/check_bench.py [paths...]   # defaults to BENCH_*.json
+"""
+from __future__ import annotations
+
+import glob
+import json
+import math
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _reject_constant(name):
+    raise ValueError(f"non-JSON constant {name!r} (NaN/Infinity not allowed)")
+
+
+def _finite_leaves(node, path, errors):
+    if isinstance(node, dict):
+        for k, v in node.items():
+            _finite_leaves(v, f"{path}.{k}", errors)
+    elif isinstance(node, list):
+        for i, v in enumerate(node):
+            _finite_leaves(v, f"{path}[{i}]", errors)
+    elif isinstance(node, float) and not math.isfinite(node):
+        errors.append(f"{path}: non-finite number {node!r}")
+
+
+def check_file(path: str) -> list:
+    errors = []
+    try:
+        with open(path) as f:
+            table = json.load(f, parse_constant=_reject_constant)
+    except (ValueError, OSError) as e:
+        return [f"{path}: unreadable ({e})"]
+    if not isinstance(table, dict):
+        return [f"{path}: top level must be an object, got "
+                f"{type(table).__name__}"]
+    bench = table.get("bench")
+    if not isinstance(bench, str) or not bench:
+        errors.append(f"{path}: 'bench' must be a non-empty string, got "
+                      f"{bench!r}")
+    records = table.get("records")
+    if isinstance(records, list):
+        if not records:
+            errors.append(f"{path}: 'records' list is empty")
+        for i, rec in enumerate(records):
+            if not isinstance(rec, dict):
+                errors.append(f"{path}: records[{i}] must be an object, "
+                              f"got {type(rec).__name__}")
+    elif isinstance(records, dict):
+        if not records:
+            errors.append(f"{path}: 'records' object is empty")
+    else:
+        errors.append(f"{path}: 'records' must be a list or object, got "
+                      f"{type(records).__name__}")
+    _finite_leaves(table, path, errors)
+    extra = sorted(set(table) - {"bench", "records", "meta"})
+    if extra:
+        errors.append(f"{path}: unexpected top-level keys {extra} "
+                      "(schema is bench/records[/meta])")
+    return errors
+
+
+def main(argv) -> int:
+    paths = argv[1:] or sorted(glob.glob(os.path.join(ROOT, "BENCH_*.json")))
+    if not paths:
+        print("check_bench: no BENCH_*.json tables found", file=sys.stderr)
+        return 1
+    failures = []
+    for path in paths:
+        errs = check_file(path)
+        rel = os.path.relpath(path, ROOT)
+        if errs:
+            failures.extend(errs)
+            print(f"FAIL {rel}")
+            for e in errs:
+                print(f"  {e}")
+        else:
+            print(f"ok   {rel}")
+    if failures:
+        print(f"check_bench: {len(failures)} error(s)", file=sys.stderr)
+        return 1
+    print(f"check_bench: {len(paths)} table(s) valid")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
