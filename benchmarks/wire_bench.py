@@ -1,0 +1,193 @@
+"""Wire throughput benchmark: rounds/sec and per-frame latency for the
+cross-process federation of :mod:`repro.wire` at 1/2/4 workers.
+
+Seeds BENCH_wire.json for the wire layer (ISSUE 9).  The numbers measure
+the protocol overhead (framing, loopback TCP, the two-phase sigma round
+trip) around the same jitted stage programs the single-process engine
+runs, so rounds/sec here vs the engine bench is the cost of going
+multi-process.
+
+``--smoke`` is the CI guard (the ``wire-smoke`` job):
+
+1. differential parity -- a 2-worker thread-spawn ``wire_drive`` must be
+   BIT-identical (state w/e_up/key + every metric field) to the
+   single-process ``rounds.drive`` oracle;
+2. loopback dryrun -- a 2-process run over real subprocesses completes
+   all rounds with zero missing/rejected frames;
+3. codec fuzz -- seeded random payload round-trips through the frame
+   codec byte-for-byte, and truncated/corrupted/desynced frames are
+   rejected with :class:`repro.wire.frames.FrameError`, never decoded.
+
+    PYTHONPATH=src python -m benchmarks.wire_bench [--smoke] [--out F.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+import numpy as np
+
+import jax
+
+from repro.configs.base import CompressorConfig, FedConfig, SwitchConfig
+from repro.engine import rounds
+from repro.wire import bootstrap, frames, testing
+from repro.wire.coordinator import wire_drive
+
+DEFAULT_OUT = "BENCH_wire.json"
+
+tree_leaves = jax.tree_util.tree_leaves
+
+
+def _cfg(n=8, m=4, uplink=None):
+    return FedConfig(
+        n_clients=n, m=m, local_steps=2, lr=0.1, strategy="fedsgm",
+        switch=SwitchConfig(mode="hard", eps=0.35),
+        uplink=uplink or CompressorConfig(kind="quant", bits=4, block=8),
+        downlink=CompressorConfig(kind="none"),
+        participation="gather", full_eval=True, lean_metrics=True,
+        comm="packed")
+
+
+def _oracle(fed, T):
+    params, batches, loss_pair = bootstrap.build_problem(
+        "np", {"n_clients": fed.n_clients})
+    return rounds.drive(rounds.init_state(params, fed), batches,
+                        loss_pair, fed, T)
+
+
+def wire_records(n=8, T=8, workers=(1, 2, 4), spawn="process"):
+    """rounds/sec + frame latency per worker count.  T warm rounds are
+    timed after a 1-round compile warmup inside the same run (the first
+    round pays every jit compile; steady-state is what the wire adds)."""
+    records = []
+    fed = _cfg(n=n)
+    for k in workers:
+        t0 = time.perf_counter()
+        _, mets, stats = wire_drive(fed, T, workers=k, spawn=spawn,
+                                    deadline=120.0)
+        wall = time.perf_counter() - t0
+        lat = stats.latencies_s
+        rec = {
+            "workers": k, "n": n, "rounds": T, "spawn": spawn,
+            "rounds_per_s": round(T / wall, 3),
+            "wall_s": round(wall, 3),
+            "frame_ms_mean": round(1e3 * float(np.mean(lat)), 3)
+            if lat else 0.0,
+            "frame_ms_p95": round(
+                1e3 * float(np.percentile(lat, 95)), 3) if lat else 0.0,
+            "frames": stats.totals["frames"],
+            "bytes": stats.totals["bytes"],
+        }
+        records.append(rec)
+        print(f"wire_{spawn}_w{k},{1e6 * wall / T:.1f},"
+              f"rounds_per_s={rec['rounds_per_s']};"
+              f"frame_ms={rec['frame_ms_mean']}")
+    return records
+
+
+def _fuzz_codec(examples=50, seed=0) -> int:
+    """Seeded random payload/header round-trips + malformed-frame
+    rejection.  Returns the number of failures (0 = clean)."""
+    rng = np.random.default_rng(seed)
+    failures = 0
+    for i in range(examples):
+        kind = rng.choice(["dense", "stack"])
+        words = int(rng.integers(1, 128))
+        if kind == "dense":
+            payload = rng.standard_normal(words).astype(np.float32)
+        else:
+            payload = (rng.integers(0, 2**32, words).astype(np.uint32),
+                       rng.standard_normal(
+                           (int(rng.integers(1, 8)), 2)).astype(np.float32))
+        sig, body = frames.pack_payload(payload)
+        raw = frames.encode_frame(
+            frames.K_UPLINK, body, client_id=int(rng.integers(0, 2**32)),
+            origin_round=int(rng.integers(-2**31, 2**31)),
+            sigma=float(rng.random()), weight=float(rng.random()), sig=sig)
+        header, got_body = frames.decode_frame(raw)
+        out = frames.unpack_payload(header.sig, got_body)
+        for a, b in zip(tree_leaves(payload), tree_leaves(out)):
+            if not np.array_equal(np.asarray(a), np.asarray(b)):
+                print(f"fuzz[{i}]: payload round-trip mismatch ({sig})")
+                failures += 1
+        # every mutilation must be rejected, never mis-decoded
+        for mutate in (lambda r: testing.truncate_frame(
+                           r, cut=1 + int(rng.integers(0, 8))),
+                       testing.corrupt_frame):
+            try:
+                frames.decode_frame(mutate(raw))
+                print(f"fuzz[{i}]: mutilated frame decoded without error")
+                failures += 1
+            except frames.FrameError:
+                pass
+    return failures
+
+
+def smoke(T=3) -> int:
+    fed = _cfg()
+
+    # 1) differential parity: thread-spawn wire == single-process oracle
+    st_o, mets_o = _oracle(fed, T)
+    st_w, mets_w, stats = wire_drive(fed, T, workers=2, spawn="thread",
+                                     deadline=60.0)
+    for a, b in zip(tree_leaves((st_o.w, st_o.e_up, st_o.key)),
+                    tree_leaves((st_w.w, st_w.e_up, st_w.key))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for fname in ("f", "g_hat", "g_full", "sigma", "feasible", "f_full"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(mets_o, fname)),
+            np.asarray(getattr(mets_w, fname)))
+    print(f"smoke: 2-worker thread parity (bit-for-bit, "
+          f"{stats.totals['frames']} frames) .. ok")
+
+    # 2) loopback dryrun over real subprocesses
+    _, mets_p, stats_p = wire_drive(fed, T, workers=2, spawn="process",
+                                    deadline=120.0)
+    assert len(np.asarray(mets_p.f)) == T
+    assert stats_p.totals["missing"] == 0, stats_p.totals
+    assert stats_p.totals["rejected"] == 0, stats_p.totals
+    print(f"smoke: 2-process loopback dryrun ({T} rounds, "
+          f"{stats_p.totals['bytes']} wire bytes) .. ok")
+
+    # 3) codec fuzz
+    failures = _fuzz_codec()
+    if failures:
+        print(f"smoke: FAIL -- {failures} codec fuzz failures")
+        return 1
+    print("smoke: codec fuzz (50 round-trips + rejection paths) .. ok")
+    print("smoke: ok")
+    return 0
+
+
+def wire_table(out: str = DEFAULT_OUT, spawn="process"):
+    records = wire_records(spawn=spawn)
+    with open(out, "w") as f:
+        json.dump({"bench": "wire", "records": records}, f, indent=1)
+    return records
+
+
+ALL = [wire_table]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI guard (parity + 2-process dryrun + codec fuzz)")
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    ap.add_argument("--spawn", default="process",
+                    choices=("process", "thread"))
+    args = ap.parse_args()
+    if args.smoke:
+        sys.exit(smoke())
+    print("name,us_per_call,derived")
+    records = wire_records(spawn=args.spawn)
+    with open(args.out, "w") as f:
+        json.dump({"bench": "wire", "records": records}, f, indent=1)
+    print(f"wrote {args.out} ({len(records)} records)", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

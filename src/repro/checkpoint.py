@@ -64,6 +64,20 @@ def restore(path: str, like_tree):
         jax.tree_util.tree_structure(like_tree), leaves)
 
 
+def read_metadata(path: str) -> dict:
+    """The ``metadata`` dict recorded in a checkpoint's json sidecar
+    (``{}`` when the sidecar is absent or unreadable).  Restore paths that
+    must validate provenance before touching the arrays -- e.g. the wire
+    coordinator checking a buffer sidecar's payload signature against its
+    own transport config -- read it through this instead of re-parsing the
+    sidecar layout."""
+    try:
+        with open(path + ".json") as f:
+            return json.load(f).get("metadata", {}) or {}
+    except (OSError, ValueError):
+        return {}
+
+
 def _round_numbers(ckpt_dir: str) -> list:
     """Round numbers of the round_<t>.npz checkpoints in a directory
     (sidecar files like round_<t>_fleet.npz are skipped, not crashed on)."""

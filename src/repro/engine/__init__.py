@@ -22,23 +22,29 @@ this package.
 from repro.engine import async_rounds, participation, strategies
 from repro.engine.async_rounds import (AsyncMetrics, StaleBuffer,
                                        async_drive, async_round_step,
+                                       buffer_from_wire, buffer_wire,
                                        get_staleness_law, init_buffer,
-                                       staleness_law, staleness_law_names)
+                                       staleness_law, staleness_law_names,
+                                       wire_msg_struct)
 from repro.engine.participation import (Participation, client_vmap,
                                         compose_weights, participation_mask)
 from repro.engine.rounds import (FedState, RoundMetrics, averaged_iterate,
-                                 drive, init_state, round_bytes, round_step,
-                                 run_rounds, run_rounds_scan, transports_for)
+                                 drive, eval_clients, finish_round,
+                                 init_state, local_deltas, round_bytes,
+                                 round_step, run_rounds, run_rounds_scan,
+                                 sample_round, transports_for)
 from repro.engine.strategies import (Strategy, get_strategy,
                                      register_strategy, strategy_names)
 
 __all__ = [
     "AsyncMetrics", "FedState", "Participation", "RoundMetrics",
     "StaleBuffer", "Strategy", "async_drive", "async_round_step",
-    "async_rounds", "averaged_iterate", "client_vmap", "compose_weights",
-    "drive", "get_staleness_law", "get_strategy", "init_buffer",
-    "init_state", "participation", "participation_mask",
-    "register_strategy", "round_bytes", "round_step", "run_rounds",
-    "run_rounds_scan", "staleness_law", "staleness_law_names",
-    "strategies", "strategy_names", "transports_for",
+    "async_rounds", "averaged_iterate", "buffer_from_wire", "buffer_wire",
+    "client_vmap", "compose_weights",
+    "drive", "eval_clients", "finish_round", "get_staleness_law",
+    "get_strategy", "init_buffer", "init_state", "local_deltas",
+    "participation", "participation_mask", "register_strategy",
+    "round_bytes", "round_step", "run_rounds", "run_rounds_scan",
+    "sample_round", "staleness_law", "staleness_law_names", "strategies",
+    "strategy_names", "transports_for", "wire_msg_struct",
 ]

@@ -167,13 +167,13 @@ class AsyncMetrics(NamedTuple):
     max_age: jnp.ndarray        # oldest occupied entry, rounds (post-round)
 
 
-def init_buffer(params, cfg: FedConfig) -> Optional[StaleBuffer]:
-    """A fresh (empty) buffer whose ``msgs`` leaves have the uplink
-    transport's exact wire shapes for a ``params``-shaped model ([n]
-    leading axis); None when the buffer is disabled -- the carry gains no
-    pytree leaves at the parity point."""
-    if not cfg.async_.enabled:
-        return None
+def wire_msg_struct(params, cfg: FedConfig):
+    """Shape/dtype structure of the [n]-stacked uplink wire messages under
+    this config's transport -- the ``msgs`` leaves of a :class:`StaleBuffer`
+    (and the template the `repro.wire` coordinator fills with decoded frame
+    payloads).  Computed via ``jax.eval_shape`` over the uplink encode, so
+    it tracks the transport's exact wire representation; available whether
+    or not the async buffer is enabled."""
     spec = flat.spec_of(params)
     uplink, _ = flat.flat_transports_for(cfg, spec)
     n = cfg.n_clients
@@ -184,6 +184,18 @@ def init_buffer(params, cfg: FedConfig) -> Optional[StaleBuffer]:
     msg_sds, _ = jax.eval_shape(
         lambda e, d: uplink.encode(e, d, ones, key=key0),
         e_sds, stacked)
+    return msg_sds
+
+
+def init_buffer(params, cfg: FedConfig) -> Optional[StaleBuffer]:
+    """A fresh (empty) buffer whose ``msgs`` leaves have the uplink
+    transport's exact wire shapes for a ``params``-shaped model ([n]
+    leading axis); None when the buffer is disabled -- the carry gains no
+    pytree leaves at the parity point."""
+    if not cfg.async_.enabled:
+        return None
+    n = cfg.n_clients
+    msg_sds = wire_msg_struct(params, cfg)
     return StaleBuffer(
         msgs=tree_map(lambda s: jnp.zeros(s.shape, s.dtype), msg_sds),
         origin=jnp.zeros((n,), jnp.int32),
@@ -214,10 +226,32 @@ def buffer_wire(buf: Optional[StaleBuffer], params,
     return buf
 
 
-def buffer_from_wire(wire: Optional[StaleBuffer], params,
-                     cfg: FedConfig) -> Optional[StaleBuffer]:
+def buffer_from_wire(wire: Optional[StaleBuffer], params, cfg: FedConfig,
+                     sig: Optional[str] = None) -> Optional[StaleBuffer]:
     """Rehydrate a :func:`buffer_wire` sidecar back into the engine's
-    in-memory buffer (the inverse boundary; currently the identity)."""
+    in-memory buffer (the inverse boundary; the payload itself passes
+    through unchanged).
+
+    ``sig`` is the payload kind/shape signature the sidecar (or a wire
+    frame header, :mod:`repro.wire.frames`) recorded at save/encode time.
+    When given, it is validated against THIS process's transport config
+    before the payloads reach any ``reduce`` call site: a buffer encoded
+    by a differently-configured process (other compressor kind, bit
+    width, block size, or comm backend) would otherwise decode as silent
+    garbage -- the packed uint32 words carry no self-description.  A
+    mismatch raises ``ValueError`` naming both signatures and the config
+    knobs to check."""
+    if sig is not None:
+        from repro.wire import frames as wire_frames
+        expect = wire_frames.row_signature(params, cfg)
+        if sig != expect:
+            raise ValueError(
+                "staleness-buffer payload signature mismatch: the sidecar "
+                f"(or frame) was encoded as {sig!r}, but this process's "
+                f"uplink transport produces {expect!r}.  The encoding and "
+                "decoding processes must agree on cfg.uplink (kind / bits "
+                "/ ratio / block) and cfg.comm -- refusing to merge "
+                "foreign payload words as if they were ours.")
     return wire
 
 

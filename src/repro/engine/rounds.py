@@ -155,6 +155,54 @@ def _eval_aggregates(part, f_ev, g_ev, sparse_eval: bool, m: int):
     return f_part, g_hat, jnp.mean(g_ev), jnp.mean(f_ev)
 
 
+def eval_clients(w, batches, loss_pair: Callable, cfg: FedConfig):
+    """Stage 2's per-client eval forward: ``(f_j, g_j) = loss_pair(w, b_j)``
+    vmapped over the stacked batch rows (chunked by ``cfg.client_chunk``).
+
+    Rows are independent (the vmap carries no cross-row reductions), so any
+    client subset computes bit-identical per-row values -- the property the
+    gather-vs-mask parity oracle pins, and the reason a `repro.wire` worker
+    holding only its own clients' rows reproduces the single-process eval
+    exactly.
+
+    The stage is sandwiched between ``optimization_barrier``s: embedded in
+    a larger program (the scanned round body), XLA would otherwise fuse
+    surrounding ops into the loss forward and reassociate its per-row
+    reductions -- last-ulp row values that NO standalone program can
+    reproduce, breaking the cross-process parity above.  The barriers pin
+    the stage to compile exactly as it does alone; they only cost the
+    (tiny) eval<->aggregate fusion in the unfused round path."""
+    w, batches = jax.lax.optimization_barrier((w, batches))
+    f_ev, g_ev = participation.client_vmap(
+        lambda b: loss_pair(w, b), cfg.client_chunk)(batches)
+    return jax.lax.optimization_barrier((f_ev, g_ev))
+
+
+def _sgd_scan(w0, batch, grad_fn, eta, steps: int):
+    """``steps`` local SGD steps on the flat buffer (one client's batch)."""
+    def body(w, _):
+        return w - eta * grad_fn(w, batch), None
+    w_E, _ = jax.lax.scan(body, w0, None, length=steps)
+    return w_E
+
+
+def local_deltas(wf, spec, strat, sigma, local_b, loss_pair: Callable,
+                 cfg: FedConfig):
+    """Stage 4's E local steps on the strategy objective, per client row:
+    ``Delta_j = (wf - w_{j,E}) / eta`` over the stacked ``local_b`` rows.
+
+    Shared verbatim between :func:`compute_round`'s unfused path and the
+    `repro.wire` worker loop -- one copy of the math, so cross-process
+    parity cannot drift from the single-process oracle."""
+    E, eta = cfg.local_steps, cfg.lr
+    obj = strat.local_objective(loss_pair, sigma, cfg)
+    grad_fn = jax.grad(
+        lambda wfj, batch: obj(flat.unflatten(spec, wfj), batch))
+    return participation.client_vmap(
+        lambda b: (wf - _sgd_scan(wf, b, grad_fn, eta, E)) / eta,
+        cfg.client_chunk)(local_b)
+
+
 def compute_round(state: FedState, wf, spec, batches, fleet, part, strat,
                   loss_pair: Callable, cfg: FedConfig):
     """Stages 2-4 on the flat buffer: in-jit fleet provisioning, the
@@ -185,15 +233,6 @@ def compute_round(state: FedState, wf, spec, batches, fleet, part, strat,
         prov_idx = part.idx if sparse_eval else None
         batches = provision.minibatch(fleet, k_prov, cfg, idx=prov_idx)
         pre_gathered = prov_idx is not None
-
-    obj = None
-    grad_fn = None
-
-    def scan_steps(w0, batch, steps):
-        def body(w, _):
-            return w - eta * grad_fn(w, batch), None
-        w_E, _ = jax.lax.scan(body, w0, None, length=steps)
-        return w_E
 
     # -- fused path: eval forward IS the step-1 forward ---------------------
     # Only when the eval rows coincide with the local-step rows -- full_eval
@@ -233,7 +272,7 @@ def compute_round(state: FedState, wf, spec, batches, fleet, part, strat,
                 grad_fn = jax.grad(
                     lambda wfj, batch: obj(flat.unflatten(spec, wfj), batch))
                 W_E = participation.client_vmap(
-                    lambda w1, b: scan_steps(w1, b, E - 1),
+                    lambda w1, b: _sgd_scan(w1, b, grad_fn, eta, E - 1),
                     cfg.client_chunk)(W_E, local_b)
             deltas = (wf - W_E) / eta
         deltas = partition.constrain_flat(
@@ -245,21 +284,16 @@ def compute_round(state: FedState, wf, spec, batches, fleet, part, strat,
     eval_b = participation.gather(part, batches) \
         if (sparse_eval and not pre_gathered) else batches
     with obs_trace.stage("round.eval_round"):
-        f_ev, g_ev = participation.client_vmap(
-            lambda b: loss_pair(state.w, b), cfg.client_chunk)(eval_b)
+        f_ev, g_ev = eval_clients(state.w, eval_b, loss_pair, cfg)
         f_part, g_hat, g_full, f_full = _eval_aggregates(
             part, f_ev, g_ev, sparse_eval, m)
     sigma = strat.switch_weight(g_hat, cfg)
 
-    obj = strat.local_objective(loss_pair, sigma, cfg)
-    grad_fn = jax.grad(
-        lambda wfj, batch: obj(flat.unflatten(spec, wfj), batch))
     local_b = batches if pre_gathered else \
         participation.gather(part, batches)             # [m|n, ...]
     with obs_trace.stage("round.local_deltas"):
-        deltas = participation.client_vmap(
-            lambda b: (wf - scan_steps(wf, b, E)) / eta,
-            cfg.client_chunk)(local_b)
+        deltas = local_deltas(wf, spec, strat, sigma, local_b,
+                              loss_pair, cfg)
     deltas = partition.constrain_flat(
         partition.constrain_leading(deltas, "client"))
     return (batches, pre_gathered, f_part, g_hat, g_full, f_full,

@@ -34,6 +34,65 @@ from repro.sharding import partition
 from repro.tasks import lm
 
 
+def _run_wire(args, cfg):
+    """``--wire K``: run the rounds over K real worker processes
+    (repro.wire.coordinator.wire_drive) on the reduced LM problem.  The
+    wire drives the pinned parity surface, so the single-process launcher
+    with the same flags is its bit-exact oracle; per-round wire telemetry
+    rides the selected sink."""
+    for on, name in ((args.fleet, "--fleet"),
+                     (args.async_buffer, "--async-buffer"),
+                     (args.obs, "--obs"), (args.multi_pod, "--multi-pod"),
+                     (args.ef_slots, "--ef-slots")):
+        if on:
+            raise SystemExit(
+                f"--wire drives the pinned parity surface of repro.wire "
+                f"(coordinator.validate_wire_cfg): {name} is not drivable "
+                "over the wire -- drop one of the two flags")
+    from repro import checkpoint
+    from repro.wire import coordinator as wire_coordinator
+
+    n = args.clients
+    fed = FedConfig(
+        n_clients=n, m=args.participating or n,
+        local_steps=args.local_steps, lr=args.lr,
+        switch=SwitchConfig(mode=args.switch, eps=0.0, beta=2.0),
+        uplink=CompressorConfig(kind=args.uplink, ratio=args.ratio),
+        downlink=CompressorConfig(kind="none"),
+        comm=args.comm, strategy=args.strategy,
+        participation="gather", full_eval=True, lean_metrics=True,
+        client_chunk=args.client_chunk,
+        fleet=FleetConfig(sampler=args.sampler))
+    sink = obs_sinks.get_sink(
+        args.sink, **({"path": args.sink_path} if args.sink == "jsonl"
+                      else {}))
+    sink.open(meta={"arch": cfg.name, "rounds": args.rounds,
+                    "comm": args.comm, "strategy": args.strategy,
+                    "wire_workers": args.wire})
+    resume = bool(args.ckpt_dir
+                  and checkpoint.latest_round(args.ckpt_dir) is not None)
+    t0 = time.time()
+    state, mets, stats = wire_coordinator.wire_drive(
+        fed, args.rounds, workers=args.wire, problem="lm",
+        problem_args={"arch": args.arch, "n_clients": n,
+                      "batch": args.batch, "seq": args.seq},
+        sink=sink, deadline=args.wire_deadline,
+        ckpt_dir=args.ckpt_dir,
+        ckpt_every=10 if args.ckpt_dir else 0, resume=resume,
+        progress=lambda t, f, g, s: obs_log.log(
+            f"wire round {t}: f={float(f):.4f} g_hat={float(g):.4f} "
+            f"sigma={float(s):.2f}"))
+    sink.close()
+    wall = time.time() - t0
+    obs_log.log(
+        f"wire run done: {args.rounds} rounds over {args.wire} workers in "
+        f"{wall:.1f}s ({stats.totals['frames']} frames, "
+        f"{stats.totals['bytes']} bytes, "
+        f"missing={stats.totals['missing']}, "
+        f"rejected={stats.totals['rejected']})")
+    return state
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm-360m")
@@ -118,6 +177,17 @@ def main():
                     help="use the production mesh (needs devices)")
     ap.add_argument("--ckpt-dir", default=None,
                     help="save/restore round checkpoints here")
+    ap.add_argument("--wire", type=int, default=0, metavar="K",
+                    help="cross-process federation (repro.wire, DESIGN.md "
+                         "§Wire): spawn K worker processes over loopback "
+                         "TCP, each owning a contiguous client range; the "
+                         "coordinator drives the pinned parity surface "
+                         "(gather participation, full eval, lean metrics). "
+                         "Per-round wire telemetry (frames, bytes, frame "
+                         "latency, fault counters) flows through --sink")
+    ap.add_argument("--wire-deadline", type=float, default=120.0,
+                    help="per-collection deadline (seconds) before a "
+                         "missing worker frame is treated as dead/droppable")
     args = ap.parse_args()
 
     obs_log.set_level("warning" if args.quiet else args.log_level)
@@ -127,6 +197,9 @@ def main():
     if reduced is None:
         reduced = jax.device_count() == 1
     cfg = configs.get_reduced(args.arch) if reduced else configs.get_config(args.arch)
+
+    if args.wire:
+        return _run_wire(args, cfg)
 
     if args.multi_pod:
         from repro.launch.mesh import make_production_mesh

@@ -1,0 +1,121 @@
+"""Deterministic problem bootstrap for wire worker processes.
+
+A worker process starts with nothing but its CLI arguments, yet must hold
+*bit-identical* params, per-client batches, and loss function to the
+coordinator's -- cross-process parity is only meaningful if both sides
+build the same problem from the same seeds.  This module is that shared
+recipe: a registry of named problem builders (every builder is a pure
+function of its JSON-able ``args``), plus the :class:`FedConfig` <-> JSON
+round-trip the coordinator uses to ship the federation config to workers.
+
+    >>> params, batches, loss_pair = build_problem("np", {"seed": 0,
+    ...                                                   "n_clients": 8})
+
+Builders return ``(params, batches, loss_pair)`` with ``batches`` a pytree
+stacked over the ``[n_clients]`` leading axis -- a worker then slices its
+own client rows, the coordinator keeps only ``params``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Callable, Dict
+
+import jax
+
+from repro.configs.base import (AsyncConfig, CompressorConfig, FedConfig,
+                                FleetConfig, ObsConfig, ScaleConfig,
+                                SwitchConfig)
+
+_PROBLEMS: Dict[str, Callable] = {}
+
+
+def problem(name: str):
+    """Register a named problem builder: ``fn(args: dict) -> (params,
+    batches, loss_pair)``, deterministic in ``args``."""
+    def deco(fn):
+        _PROBLEMS[name] = fn
+        return fn
+    return deco
+
+
+def problem_names():
+    return sorted(_PROBLEMS)
+
+
+def build_problem(name: str, args: dict):
+    """Build ``(params, batches, loss_pair)`` for a registered problem."""
+    if name not in _PROBLEMS:
+        raise KeyError(f"unknown wire problem {name!r} "
+                       f"(registered: {problem_names()})")
+    return _PROBLEMS[name](dict(args or {}))
+
+
+@problem("np")
+def _np_problem(args: dict):
+    """Neyman-Pearson classification on the synthetic breast-cancer-like
+    task (repro.tasks.np_classification) -- the standard small test
+    problem.  args: seed (default 0), n_clients (default 8), hetero."""
+    from repro.tasks import np_classification as npc
+    seed = int(args.get("seed", 0))
+    n = int(args.get("n_clients", 8))
+    hetero = bool(args.get("hetero", False))
+    (xs, ys), _ = npc.make_dataset(jax.random.PRNGKey(seed), n,
+                                   hetero=hetero)
+    params = npc.init_params(jax.random.PRNGKey(seed + 1), xs.shape[-1])
+    return params, (xs, ys), npc.loss_pair
+
+
+@problem("lm")
+def _lm_problem(args: dict):
+    """Reduced-config LM dry-run task (repro.tasks.lm over a registered
+    architecture): one fixed synthetic token batch per client.  args:
+    arch (default smollm-360m), seed, n_clients, batch, seq."""
+    from repro import configs
+    from repro.data import synthetic
+    from repro.models import build
+    from repro.tasks import lm
+    arch = args.get("arch", "smollm-360m")
+    seed = int(args.get("seed", 0))
+    n = int(args.get("n_clients", 4))
+    batch = int(args.get("batch", 2))
+    seq = int(args.get("seq", 32))
+    cfg = configs.get_reduced(arch)
+    fns = build(cfg)
+    params = fns.init(jax.random.PRNGKey(seed), cfg)
+    toks, mask = synthetic.client_token_batches(
+        jax.random.PRNGKey(seed + 1), n, batch, seq, cfg.vocab, hetero=0.5)
+    batches = lm.LMBatch(tokens=toks, minority_mask=mask, media=None)
+    loss_pair = lm.make_loss_pair(fns.forward, cfg, budget=6.0,
+                                  aux_constraint=cfg.moe is not None)
+    return params, batches, loss_pair
+
+
+# ---------------------------------------------------------------------------
+# FedConfig <-> JSON
+# ---------------------------------------------------------------------------
+
+_NESTED = {
+    "switch": SwitchConfig, "uplink": CompressorConfig,
+    "downlink": CompressorConfig, "fleet": FleetConfig,
+    "async_": AsyncConfig, "scale": ScaleConfig, "obs": ObsConfig,
+}
+
+
+def fed_to_json(fed: FedConfig) -> str:
+    """Serialize a FedConfig (nested frozen dataclasses) to JSON."""
+    return json.dumps(dataclasses.asdict(fed), sort_keys=True)
+
+
+def fed_from_json(text: str) -> FedConfig:
+    """Inverse of :func:`fed_to_json`.  Unknown keys fail loudly -- a
+    worker running a different repro version must not silently drop config
+    knobs and then diverge from the oracle."""
+    raw = json.loads(text)
+    kw = {}
+    for name, value in raw.items():
+        if name in _NESTED:
+            kw[name] = _NESTED[name](**value)
+        else:
+            kw[name] = value
+    return FedConfig(**kw)

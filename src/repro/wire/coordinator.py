@@ -1,0 +1,755 @@
+"""The wire coordinator: the server side of cross-process federation.
+
+One coordinator process owns the FedState and drives the round machinery of
+:mod:`repro.engine.rounds` over K worker processes (or threads), each
+holding a contiguous range of client ids and speaking the frame protocol of
+:mod:`repro.wire.frames` over loopback TCP.
+
+Per round t (two-phase, because the switch weight sigma_t needs the GLOBAL
+constraint eval before any client can start its local steps):
+
+1. host-side ``jax.random.split`` + :func:`repro.engine.rounds.sample_round`
+   (threefry is deterministic, so the eager draw is bit-identical to the
+   in-jit oracle's), then one ``ACTIVATE`` frame per worker carrying the
+   flat model, the worker's mask/weight rows and the round's uplink key,
+2. collect one ``EVAL`` frame per worker (hard deadline: a missing eval is
+   a dead worker, not a droppable payload), aggregate the (f, g) rows and
+   compute sigma_t in ONE jitted switch program -- the same scalars feed
+   the workers (via the ``SIGMA`` frame) and the server update, so there
+   is exactly one place those reductions happen,
+3. collect per-client ``UPLINK`` frames until every worker's
+   ``ROUND_DONE`` (or the round deadline).  Frames are deduped by
+   (client id, origin round); malformed frames (truncation, CRC) are
+   rejected with a counter; a frame whose payload signature does not match
+   this process's transport config fails loudly
+   (:func:`repro.engine.async_rounds.buffer_from_wire`); frames from an
+   EARLIER round park in the host-side :class:`StaleBuffer` mirror with
+   their origin-round age (older than ``cfg.async_.max_staleness`` drops),
+4. scatter the decoded payload rows into the [n]-stacked wire template,
+   merge any parked frames under the strategy's staleness law, and run one
+   jitted server program ending in
+   :func:`repro.engine.rounds.finish_round` -- the oracle round's exact
+   tail on the flat [d] buffer.
+
+Parity contract: with no faults injected, the (state, metrics) trajectory
+is bit-identical to the single-process ``rounds.drive`` under the pinned
+config (gather participation, ``full_eval=True``, ``lean_metrics=True``,
+async buffer off, dense EF residual, obs off) -- the per-row vmap
+independence bet of DESIGN.md §Engine, now stretched across process
+boundaries (tests/test_wire.py).
+
+Checkpoint/restart: ``EF_REQ``/``EF_DUMP`` assemble the workers' residual
+rows into the saved state; the parked-frame buffer saves beside it
+(``checkpoint.save_buffer``) with its payload signature in the sidecar
+metadata, and restore refuses a sidecar whose signature does not match
+this process's transport (satellite: no silent garbage merges).  On
+resume, ``EF_LOAD`` re-seeds each worker's residual rows.  Dedup state is
+NOT persisted: a duplicate of a frame merged before the restart can
+re-park once (at-least-once wire semantics across restarts; within one
+coordinator life dedup is exact).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import selectors
+import socket
+import subprocess
+import sys
+import threading
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import checkpoint
+from repro.comm import flat
+from repro.configs.base import FedConfig
+from repro.engine import async_rounds, participation, rounds, strategies
+from repro.engine.async_rounds import StaleBuffer
+from repro.obs import log as obs_log
+from repro.wire import bootstrap, frames
+from repro.wire import worker as worker_mod
+
+tree_map = jax.tree_util.tree_map
+
+
+def validate_wire_cfg(cfg: FedConfig) -> None:
+    """The wire drive's pinned config surface.  Everything here is a parity
+    precondition, not a taste preference -- each knob below would make the
+    coordinator's staged round diverge from (or crash against) the
+    single-process oracle it must reproduce bit-for-bit."""
+    bad = []
+    if cfg.participation != "gather":
+        bad.append("participation must be 'gather' (workers compute only "
+                   "their sampled rows; the mask-mode oracle runs local "
+                   "steps on all n rows)")
+    if not cfg.full_eval:
+        bad.append("full_eval must be True (the sigma phase needs the "
+                   "global eval; full_eval=False takes the fused "
+                   "eval/step-1 path the staged wire round cannot split)")
+    if not cfg.lean_metrics:
+        bad.append("lean_metrics must be True (the coordinator never holds "
+                   "dense per-client deltas, so the delta_norm diagnostic "
+                   "cannot be computed server-side)")
+    if cfg.async_.enabled:
+        bad.append("async_.enabled must be False (the wire has its own "
+                   "staleness buffer, fed by genuinely late frames)")
+    if cfg.scale.ef_slots:
+        bad.append("scale.ef_slots must be 0 (EF residual rows live on the "
+                   "workers; the slot store is a single-process layout)")
+    if cfg.obs.enabled:
+        bad.append("obs.enabled must be False (in-jit telemetry reduces "
+                   "over buffers the coordinator does not hold; wire "
+                   "telemetry flows through the sink records instead)")
+    if bad:
+        raise ValueError("config not drivable over the wire:\n  - "
+                         + "\n  - ".join(bad))
+
+
+@dataclasses.dataclass
+class WireStats:
+    """What the wire did, beyond the engine metrics: per-round records
+    (also emitted to the sink) plus cumulative fault/traffic counters."""
+    rounds: list = dataclasses.field(default_factory=list)
+    totals: dict = dataclasses.field(default_factory=lambda: {
+        "frames": 0, "bytes": 0, "dup": 0, "rejected": 0, "parked": 0,
+        "merged_stale": 0, "dropped_stale": 0, "missing": 0})
+    latencies_s: list = dataclasses.field(default_factory=list)
+    merge_ages: list = dataclasses.field(default_factory=list)
+    drop_ages: list = dataclasses.field(default_factory=list)
+    workers: list = dataclasses.field(default_factory=list)
+
+
+class _Conn:
+    """One worker connection: the non-blocking socket, its incremental
+    frame reader, and the client range the worker announced in HELLO."""
+
+    def __init__(self, sock):
+        self.sock = sock
+        self.reader = frames.FrameReader()
+        self.gids: Optional[np.ndarray] = None
+        self.lo = self.hi = -1
+        self.closed = False
+        self.got_eval = False
+        self.done_round = -1
+        self.ef_rows = None
+        self.ef_epoch = -1
+
+
+class Coordinator:
+    """See the module docstring.  Construct with the model/config, call
+    :meth:`serve` with connected workers; :func:`wire_drive` wraps the
+    listener + spawn + serve lifecycle."""
+
+    def __init__(self, params, fed: FedConfig, *, deadline: float = 30.0,
+                 sink=None, ckpt_dir: Optional[str] = None,
+                 ckpt_every: int = 0, stats: Optional[WireStats] = None):
+        validate_wire_cfg(fed)
+        self.params = params
+        self.fed = fed
+        self.deadline = float(deadline)
+        self.sink = sink
+        self.ckpt_dir = ckpt_dir
+        self.ckpt_every = int(ckpt_every)
+        self.stats = stats if stats is not None else WireStats()
+
+        self.spec = flat.spec_of(params)
+        self.strat = strategies.get_strategy(fed.strategy)
+        self.strat.validate(fed)
+        self.uplink, self.downlink = flat.flat_transports_for(fed, self.spec)
+        self.row_sig = frames.row_signature(params, fed)
+        self.msg_struct = async_rounds.wire_msg_struct(params, fed)
+
+        state = rounds.init_state(params, fed)
+        # EF residual rows live on the workers; the coordinator's state
+        # carries None and re-assembles the [n, d] stack only at
+        # checkpoint/finish time (EF_REQ/EF_DUMP)
+        self.has_residual = state.e_up is not None
+        self.state = state._replace(e_up=None)
+        self.t = 0
+
+        self._switch = jax.jit(self._switch_impl)
+        self._server = jax.jit(self._server_impl)
+
+        n = fed.n_clients
+        self.buf_msgs = tree_map(
+            lambda s: np.zeros(s.shape, s.dtype), self.msg_struct)
+        self.buf_origin = np.zeros(n, np.int32)
+        self.buf_sigma = np.zeros(n, np.float32)
+        self.buf_weight = np.zeros(n, np.float32)
+        self.buf_occupied = np.zeros(n, np.float32)
+        self.seen: set = set()          # (client_id, origin_round) dedup
+        self._sigma_ts: dict = {}       # round -> SIGMA send time
+        self._ef_epoch = 0
+
+        self.sel = selectors.DefaultSelector()
+        self.conns: list = []
+        self.metrics: list = []
+
+    # -- jitted programs ----------------------------------------------------
+
+    def _switch_impl(self, mask, weights, f_ev, g_ev):
+        """The round's scalar aggregates + switch weight, computed ONCE:
+        the same bits go to the workers (sigma in the SIGMA frame) and into
+        the server program -- no second place for the reductions to
+        reassociate."""
+        part = participation.Participation(
+            mask, None, self.fed.n_clients, self.fed.m, weights)
+        f_part, g_hat, g_full, f_full = rounds._eval_aggregates(
+            part, f_ev, g_ev, False, self.fed.m)
+        sigma = self.strat.switch_weight(g_hat, self.fed)
+        return f_part, g_hat, g_full, f_full, sigma
+
+    def _server_impl(self, state, mask, idx, weights, samp_state, msgs,
+                     w_fresh, key, k_down, f_part, g_hat, g_full, f_full,
+                     sigma, stale_msgs, w_stale):
+        """The oracle round's tail as one program: fresh reduce (+ the
+        stale-buffer merge when parked frames delivered), then
+        ``rounds.finish_round`` on the flat buffer.  ``stale_msgs=None`` on
+        clean rounds keeps the compiled program structurally identical to
+        the parity path."""
+        part = participation.Participation(
+            mask, idx, self.fed.n_clients, self.fed.m, weights)
+        wf = flat.flatten(self.spec, state.w)
+        v_bar = self.uplink.reduce(msgs, w_fresh, self.fed.m, like=wf)
+        if stale_msgs is not None:
+            v_bar = v_bar + self.uplink.reduce(stale_msgs, w_stale,
+                                               self.fed.m, like=wf)
+        return rounds.finish_round(
+            state, self.strat, self.fed, self.spec, wf, part, None, v_bar,
+            None, self.uplink, self.downlink, samp_state, key, k_down,
+            f_part, g_hat, g_full, f_full, sigma)
+
+    # -- connection setup ---------------------------------------------------
+
+    def attach(self, socks: list) -> None:
+        """Register connected worker sockets and collect their HELLOs;
+        verifies the announced client ranges tile [0, n) exactly."""
+        for sock in socks:
+            sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            # blocking sockets + recv-after-select: reads never stall (we
+            # only recv what select reported) and large ACTIVATE sendall
+            # calls cannot fail with a partial write
+            sock.settimeout(None)
+            conn = _Conn(sock)
+            self.sel.register(sock, selectors.EVENT_READ, conn)
+            self.conns.append(conn)
+        self._collect(lambda: all(c.gids is not None for c in self.conns),
+                      what="worker HELLO")
+        self.conns.sort(key=lambda c: c.lo)
+        covered = np.concatenate([c.gids for c in self.conns])
+        want = np.arange(self.fed.n_clients)
+        if covered.shape != want.shape or not np.array_equal(covered, want):
+            raise RuntimeError(
+                f"worker client ranges {[(c.lo, c.hi) for c in self.conns]} "
+                f"do not tile [0, {self.fed.n_clients}) -- every client id "
+                "must be owned by exactly one worker")
+
+    # -- the collection pump ------------------------------------------------
+
+    def _collect(self, until: Callable[[], bool], *, what: str,
+                 round_ctx: Optional[dict] = None,
+                 hard: bool = True) -> bool:
+        """Pump frames from all workers until ``until()`` or the deadline.
+        ``hard=True`` raises on timeout (control frames are mandatory);
+        ``hard=False`` returns False (payload frames are droppable)."""
+        end = time.monotonic() + self.deadline
+        while not until():
+            if all(c.closed for c in self.conns):
+                if hard:
+                    closed = [(c.lo, c.hi) for c in self.conns]
+                    raise RuntimeError(
+                        f"all workers {closed} disconnected while the "
+                        f"coordinator was still waiting for {what}")
+                return False
+            remaining = end - time.monotonic()
+            if remaining <= 0:
+                if hard:
+                    raise RuntimeError(
+                        f"wire deadline ({self.deadline}s) waiting for "
+                        f"{what} -- a worker is dead or wedged")
+                return False
+            for key, _ in self.sel.select(timeout=min(remaining, 0.05)):
+                conn = key.data
+                try:
+                    data = conn.sock.recv(1 << 20)
+                except BlockingIOError:       # spurious readiness
+                    continue
+                if not data:
+                    # EOF: frames already buffered stay valid; whether the
+                    # close is clean (post-FINISH) or a crash is decided by
+                    # whoever is still waiting on this worker
+                    conn.closed = True
+                    self.sel.unregister(conn.sock)
+                    continue
+                conn.reader.feed(data)
+                for raw in conn.reader.frames():
+                    self._dispatch(conn, raw, round_ctx)
+        return True
+
+    def _dispatch(self, conn: _Conn, raw: bytes,
+                  round_ctx: Optional[dict]) -> None:
+        self.stats.totals["frames"] += 1
+        self.stats.totals["bytes"] += len(raw) + 4      # + length prefix
+        try:
+            header, body = frames.decode_frame(raw)
+        except frames.FrameError as e:
+            self.stats.totals["rejected"] += 1
+            if round_ctx is not None:
+                round_ctx["rejected"] += 1
+            obs_log.log(f"wire: rejecting frame: {e}", level="warning")
+            return
+        kind = header.kind
+        if kind == frames.K_HELLO:
+            gids = np.asarray(frames.unpack_payload(header.sig, body))
+            conn.gids = gids
+            conn.lo, conn.hi = int(gids[0]), int(gids[-1]) + 1
+        elif kind == frames.K_EVAL:
+            if round_ctx is not None and header.origin_round == self.t:
+                f_ev, g_ev = frames.unpack_payload(header.sig, body)
+                round_ctx["f_ev"][conn.lo:conn.hi] = f_ev
+                round_ctx["g_ev"][conn.lo:conn.hi] = g_ev
+                conn.got_eval = True
+        elif kind == frames.K_UPLINK:
+            self._on_uplink(header, body, round_ctx)
+        elif kind == frames.K_ROUND_DONE:
+            conn.done_round = max(conn.done_round, header.origin_round)
+        elif kind == frames.K_EF_DUMP:
+            conn.ef_rows = (frames.unpack_payload(header.sig, body)
+                            if header.sig else None)
+            conn.ef_epoch = self._ef_epoch
+        else:
+            raise frames.FrameError(
+                "coordinator received unexpected "
+                f"{frames.KIND_NAMES.get(kind, hex(kind))} frame "
+                f"(client {header.client_id}, round {header.origin_round})")
+
+    def _on_uplink(self, header, body: bytes,
+                   round_ctx: Optional[dict]) -> None:
+        if header.sig != self.row_sig:
+            # thread the frame's signature through the shared validation
+            # (raises ValueError naming both signatures and the knobs)
+            async_rounds.buffer_from_wire(
+                None, self.params, self.fed, sig=header.sig)
+        payload = frames.unpack_payload(header.sig, body)
+        cid, origin = header.client_id, header.origin_round
+        if (cid, origin) in self.seen:
+            self.stats.totals["dup"] += 1
+            if round_ctx is not None:
+                round_ctx["dup"] += 1
+            return
+        self.seen.add((cid, origin))
+        sent = self._sigma_ts.get(origin)
+        if sent is not None:
+            self.stats.latencies_s.append(time.monotonic() - sent)
+        if origin == self.t and round_ctx is not None:
+            for stack, row in zip(jax.tree_util.tree_leaves(
+                    round_ctx["msgs"]), jax.tree_util.tree_leaves(payload)):
+                stack[cid] = row
+            round_ctx["received"][cid] = True
+        elif origin < self.t:
+            self._park(header, payload, round_ctx)
+        else:
+            raise frames.FrameError(
+                f"uplink from client {cid} claims FUTURE round {origin} "
+                f"(coordinator is at round {self.t}) -- protocol bug")
+
+    def _park(self, header, payload, round_ctx: Optional[dict]) -> None:
+        """A genuinely late frame: into the StaleBuffer mirror with its
+        origin-round metadata, or dropped past ``max_staleness``."""
+        cid, origin = header.client_id, header.origin_round
+        age = self.t - origin
+        if age > self.fed.async_.max_staleness:
+            self.stats.totals["dropped_stale"] += 1
+            self.stats.drop_ages.append(age)
+            if round_ctx is not None:
+                round_ctx["dropped_stale"] += 1
+            return
+        for stack, row in zip(jax.tree_util.tree_leaves(self.buf_msgs),
+                              jax.tree_util.tree_leaves(payload)):
+            stack[cid] = row
+        self.buf_origin[cid] = origin
+        self.buf_sigma[cid] = header.sigma
+        self.buf_weight[cid] = header.weight
+        self.buf_occupied[cid] = 1.0
+        self.stats.totals["parked"] += 1
+        if round_ctx is not None:
+            round_ctx["parked"] += 1
+
+    # -- one round ----------------------------------------------------------
+
+    def round(self) -> None:
+        t = self.t
+        state = self.state
+        fed = self.fed
+        # stage 1 eagerly on the host: threefry splits and the sampler draw
+        # are deterministic, so these bits match the in-jit oracle's
+        key, k_part, k_up, k_down = jax.random.split(state.key, 4)
+        part, samp_state, _ = rounds.sample_round(state, None, k_part, fed)
+        mask = np.asarray(part.mask)
+        w_agg = np.asarray(participation.agg_weights(part))
+        wf = np.asarray(flat.flatten(self.spec, state.w))
+        key_np = np.asarray(k_up)
+
+        ctx = {
+            "f_ev": np.zeros(fed.n_clients, np.float32),
+            "g_ev": np.zeros(fed.n_clients, np.float32),
+            "msgs": tree_map(lambda s: np.zeros(s.shape, s.dtype),
+                             self.msg_struct),
+            "received": np.zeros(fed.n_clients, bool),
+            "dup": 0, "rejected": 0, "parked": 0, "dropped_stale": 0,
+        }
+        frames0 = self.stats.totals["frames"]
+        bytes0 = self.stats.totals["bytes"]
+
+        for conn in self.conns:
+            conn.got_eval = False
+            sig, body = frames.pack_payload(
+                (wf, mask[conn.lo:conn.hi].astype(np.float32),
+                 w_agg[conn.lo:conn.hi].astype(np.float32), key_np))
+            frames.write_frame(conn.sock, frames.encode_frame(
+                frames.K_ACTIVATE, body, origin_round=t, sig=sig))
+        self._collect(lambda: all(c.got_eval for c in self.conns),
+                      what=f"round-{t} evals", round_ctx=ctx)
+
+        f_part, g_hat, g_full, f_full, sigma = self._switch(
+            part.mask, jnp.asarray(w_agg), jnp.asarray(ctx["f_ev"]),
+            jnp.asarray(ctx["g_ev"]))
+        self._sigma_ts[t] = time.monotonic()
+        for conn in self.conns:
+            frames.write_frame(conn.sock, frames.encode_frame(
+                frames.K_SIGMA, origin_round=t, sigma=float(sigma)))
+
+        self._collect(lambda: all(c.done_round >= t for c in self.conns),
+                      what=f"round-{t} uplinks", round_ctx=ctx, hard=False)
+
+        sampled = mask > 0
+        missing = int(np.sum(sampled & ~ctx["received"]))
+        self.stats.totals["missing"] += missing
+        # bitwise-identity fast path: with every frame in, the oracle's
+        # exact weight array feeds the reduce
+        w_fresh = part.weights if part.weights is not None else part.mask
+        if missing:
+            w_fresh = jnp.asarray(
+                w_agg * ctx["received"].astype(np.float32))
+
+        stale_msgs = w_stale = None
+        merged = 0
+        if self.buf_occupied.any():
+            ages = (t - self.buf_origin).astype(np.float32)
+            lam = self.strat.staleness_weight(
+                jnp.asarray(ages), jnp.asarray(self.buf_sigma), g_hat, fed)
+            w_stale = jnp.asarray(self.buf_weight) * lam \
+                * jnp.asarray(self.buf_occupied)
+            stale_msgs = tree_map(jnp.asarray, self.buf_msgs)
+            merged = int(self.buf_occupied.sum())
+            self.stats.totals["merged_stale"] += merged
+            self.stats.merge_ages.extend(
+                ages[self.buf_occupied > 0].tolist())
+            self._clear_buffer()
+
+        msgs = tree_map(jnp.asarray, ctx["msgs"])
+        self.state, mets = self._server(
+            state, part.mask, part.idx, part.weights, samp_state, msgs,
+            w_fresh, key, k_down, f_part, g_hat, g_full, f_full, sigma,
+            stale_msgs, w_stale)
+        self.metrics.append(jax.device_get(mets))
+        self.t = t + 1
+        self._sigma_ts.pop(t - fed.async_.max_staleness - 1, None)
+
+        lat = [s for s in self.stats.latencies_s]
+        rec = {
+            "round": t, "f": float(mets.f), "g_hat": float(mets.g_hat),
+            "sigma": float(mets.sigma),
+            "wire_frames": self.stats.totals["frames"] - frames0,
+            "wire_bytes": self.stats.totals["bytes"] - bytes0,
+            "wire_frame_ms": (1e3 * float(np.mean(lat[-fed.m:]))
+                              if lat else 0.0),
+            "wire_missing": missing, "wire_dup": ctx["dup"],
+            "wire_rejected": ctx["rejected"], "wire_parked": ctx["parked"],
+            "wire_merged_stale": merged,
+            "wire_dropped_stale": ctx["dropped_stale"],
+        }
+        self.stats.rounds.append(rec)
+        if self.sink is not None:
+            self.sink.emit(rec)
+
+        if (self.ckpt_dir and self.ckpt_every
+                and (t + 1) % self.ckpt_every == 0):
+            self.save_checkpoint(t + 1)
+
+    def _clear_buffer(self) -> None:
+        for stack in jax.tree_util.tree_leaves(self.buf_msgs):
+            stack[...] = 0
+        self.buf_origin[...] = 0
+        self.buf_sigma[...] = 0.0
+        self.buf_weight[...] = 0.0
+        self.buf_occupied[...] = 0.0
+
+    def _host_buffer(self) -> StaleBuffer:
+        return StaleBuffer(msgs=self.buf_msgs, origin=self.buf_origin,
+                           sigma=self.buf_sigma, weight=self.buf_weight,
+                           occupied=self.buf_occupied)
+
+    # -- EF residual assembly / checkpointing -------------------------------
+
+    def collect_ef(self):
+        """EF_REQ every worker; assemble their residual rows into the full
+        [n, d] stack (None when the uplink keeps no residual)."""
+        self._ef_epoch += 1
+        for conn in self.conns:
+            frames.write_frame(conn.sock, frames.encode_frame(
+                frames.K_EF_REQ, origin_round=self.t))
+        self._collect(
+            lambda: all(c.ef_epoch == self._ef_epoch for c in self.conns),
+            what="EF residual dumps")
+        if not self.has_residual:
+            return None
+        e_full = np.zeros((self.fed.n_clients, self.spec.d),
+                          jnp.dtype(self.spec.dtype))
+        for conn in self.conns:
+            if conn.ef_rows is not None:
+                e_full[conn.lo:conn.hi] = conn.ef_rows
+        return jnp.asarray(e_full)
+
+    def save_checkpoint(self, done_t: int) -> None:
+        e_full = self.collect_ef()
+        checkpoint.save_round(self.ckpt_dir, done_t,
+                              self.state._replace(e_up=e_full),
+                              metadata={"wire": True,
+                                        "workers": len(self.conns)})
+        checkpoint.save_buffer(self.ckpt_dir, done_t, self._host_buffer(),
+                               metadata={"payload_sig": self.row_sig})
+
+    def resume(self) -> bool:
+        """Restore the newest checkpoint: state + parked-frame buffer
+        (signature-validated), then EF_LOAD each worker's residual rows.
+        Returns True when a checkpoint was found."""
+        like = rounds.init_state(self.params, self.fed)
+        state, t0 = checkpoint.restore_round(self.ckpt_dir, like)
+        if state is None:
+            return False
+        e_up, state = state.e_up, state._replace(e_up=None)
+        self.state, self.t = state, int(t0)
+        for conn in self.conns:
+            if e_up is None:
+                continue
+            rows = np.asarray(e_up[conn.lo:conn.hi])
+            sig, body = frames.pack_payload(rows)
+            frames.write_frame(conn.sock, frames.encode_frame(
+                frames.K_EF_LOAD, body, origin_round=self.t, sig=sig))
+        like_buf = StaleBuffer(
+            msgs=self.msg_struct,
+            origin=jax.ShapeDtypeStruct((self.fed.n_clients,), jnp.int32),
+            sigma=jax.ShapeDtypeStruct((self.fed.n_clients,), jnp.float32),
+            weight=jax.ShapeDtypeStruct((self.fed.n_clients,), jnp.float32),
+            occupied=jax.ShapeDtypeStruct((self.fed.n_clients,),
+                                          jnp.float32))
+        wire = checkpoint.restore_buffer(self.ckpt_dir, t0, like_buf)
+        if wire is not None:
+            meta = checkpoint.read_metadata(
+                os.path.join(self.ckpt_dir, f"round_{t0}_buffer"))
+            wire = async_rounds.buffer_from_wire(
+                wire, self.params, self.fed,
+                sig=meta.get("payload_sig"))
+            self.buf_msgs = tree_map(np.array, wire.msgs)
+            self.buf_origin = np.array(wire.origin)
+            self.buf_sigma = np.array(wire.sigma)
+            self.buf_weight = np.array(wire.weight)
+            self.buf_occupied = np.array(wire.occupied)
+            for cid in np.flatnonzero(self.buf_occupied > 0):
+                self.seen.add((int(cid), int(self.buf_origin[cid])))
+        return True
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def serve(self, T: int, progress: Optional[Callable] = None):
+        """Drive rounds ``[self.t, T)``, then FINISH the workers and
+        assemble the final state (EF rows re-attached).  Returns
+        ``(state, metrics, stats)`` with metrics stacked [T - t0]."""
+        while self.t < T:
+            self.round()
+            if progress is not None:
+                m = self.metrics[-1]
+                progress(self.t, m.f, m.g_hat, m.sigma)
+        self._ef_epoch += 1
+        for conn in self.conns:
+            frames.write_frame(conn.sock, frames.encode_frame(
+                frames.K_FINISH, origin_round=self.t))
+        self._collect(
+            lambda: all(c.ef_epoch == self._ef_epoch for c in self.conns),
+            what="final EF dumps")
+        e_full = None
+        if self.has_residual:
+            e_full = np.zeros((self.fed.n_clients, self.spec.d),
+                              jnp.dtype(self.spec.dtype))
+            for conn in self.conns:
+                if conn.ef_rows is not None:
+                    e_full[conn.lo:conn.hi] = conn.ef_rows
+            e_full = jnp.asarray(e_full)
+        state = self.state._replace(e_up=e_full)
+        mets = None
+        if self.metrics:
+            mets = tree_map(lambda *xs: np.stack(xs), *self.metrics)
+        return state, mets, self.stats
+
+    def close(self) -> None:
+        for conn in self.conns:
+            try:
+                self.sel.unregister(conn.sock)
+            except (KeyError, ValueError):
+                pass
+            conn.sock.close()
+        self.sel.close()
+
+
+# ---------------------------------------------------------------------------
+# Spawn + drive
+# ---------------------------------------------------------------------------
+
+def _spawn_processes(host, port, problem, problem_args, fed, workers,
+                     chaos_list):
+    src_root = os.path.dirname(os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__))))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = src_root + os.pathsep + env.get("PYTHONPATH", "")
+    procs = []
+    for i in range(workers):
+        # -c instead of -m: the package __init__ imports .worker, so runpy
+        # would warn about re-executing an already-imported module
+        argv = [sys.executable, "-c",
+                "import sys; from repro.wire import worker; "
+                "worker.main(sys.argv[1:])",
+                "--connect", f"{host}:{port}",
+                "--problem", problem,
+                "--problem-args", json.dumps(problem_args or {}),
+                "--fed", bootstrap.fed_to_json(fed),
+                "--workers", str(workers), "--worker-id", str(i)]
+        if chaos_list[i]:
+            argv += ["--chaos", json.dumps(chaos_list[i])]
+        procs.append(subprocess.Popen(argv, env=env))
+    return procs
+
+
+def _spawn_threads(host, port, params, batches, loss_pair, fed, workers,
+                   chaos_list, stats: WireStats):
+    threads, errors = [], []
+
+    def run(i, chaos):
+        try:
+            lo, hi = worker_mod.client_range(fed.n_clients, workers, i)
+            rows = tree_map(lambda x: x[lo:hi], batches)
+            wk = worker_mod.Worker(params, fed, rows, loss_pair,
+                                   np.arange(lo, hi), chaos=chaos,
+                                   chaos_seed=i)
+            stats.workers.append(wk)
+            with socket.create_connection((host, port)) as sock:
+                sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+                wk.run(sock)
+        except BaseException as e:        # surfaced by wire_drive
+            errors.append((i, e))
+
+    for i in range(workers):
+        th = threading.Thread(target=run, args=(i, chaos_list[i]),
+                              daemon=True)
+        th.start()
+        threads.append(th)
+    return threads, errors
+
+
+def wire_drive(fed: FedConfig, T: int, workers: int = 2, *,
+               problem: str = "np", problem_args: Optional[dict] = None,
+               spawn: str = "process", chaos=None, deadline: float = 30.0,
+               host: str = "127.0.0.1", port: int = 0, sink=None,
+               ckpt_dir: Optional[str] = None, ckpt_every: int = 0,
+               resume: bool = False, progress: Optional[Callable] = None):
+    """Run T federated rounds over the real wire: spawn K workers
+    (``spawn='process'``: ``python -m repro.wire.worker`` subprocesses;
+    ``spawn='thread'``: in-process threads over real loopback sockets --
+    the fast path for fault-injection tests, sharing one jit cache), serve
+    the rounds, and return ``(state, metrics, stats)``.
+
+    ``chaos`` is a fault spec dict applied to every worker, or a per-worker
+    list of them (None entries = no faults); see
+    :class:`repro.wire.testing.ChaosLink`.  ``resume=True`` restarts from
+    the newest checkpoint in ``ckpt_dir`` (state + parked-frame buffer +
+    worker EF rows via EF_LOAD)."""
+    if spawn not in ("process", "thread"):
+        raise ValueError(f"spawn must be 'process' or 'thread', "
+                         f"got {spawn!r}")
+    chaos_list = chaos if isinstance(chaos, (list, tuple)) \
+        else [chaos] * workers
+    if len(chaos_list) != workers:
+        raise ValueError(f"chaos list has {len(chaos_list)} entries for "
+                         f"{workers} workers")
+    params, batches, loss_pair = bootstrap.build_problem(
+        problem, dict(problem_args or {}, n_clients=fed.n_clients))
+
+    stats = WireStats()
+    listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+    procs, threads, errors = [], [], []
+    coord = None
+    try:
+        listener.bind((host, port))
+        listener.listen(workers)
+        actual_port = listener.getsockname()[1]
+        listener.settimeout(deadline)
+
+        if spawn == "process":
+            procs = _spawn_processes(host, actual_port, problem,
+                                     problem_args, fed, workers, chaos_list)
+        else:
+            threads, errors = _spawn_threads(
+                host, actual_port, params, batches, loss_pair, fed,
+                workers, chaos_list, stats)
+
+        socks = []
+        for _ in range(workers):
+            try:
+                sock, _addr = listener.accept()
+            except socket.timeout:
+                _reap(procs, threads)
+                detail = "; ".join(f"worker {i}: {e!r}" for i, e in errors)
+                raise RuntimeError(
+                    f"only {len(socks)}/{workers} workers connected within "
+                    f"{deadline}s" + (f" ({detail})" if detail else ""))
+            socks.append(sock)
+
+        coord = Coordinator(params, fed, deadline=deadline, sink=sink,
+                            ckpt_dir=ckpt_dir, ckpt_every=ckpt_every,
+                            stats=stats)
+        coord.attach(socks)
+        if resume:
+            if not ckpt_dir:
+                raise ValueError("resume=True needs ckpt_dir")
+            coord.resume()
+        state, mets, stats = coord.serve(T, progress=progress)
+        for th in threads:
+            th.join(timeout=deadline)
+        for p in procs:
+            if p.wait(timeout=deadline) != 0:
+                raise RuntimeError(
+                    f"worker process {p.args[-1]} exited with "
+                    f"status {p.returncode}")
+        if errors:
+            i, e = errors[0]
+            raise RuntimeError(f"worker thread {i} died: {e!r}") from e
+        return state, mets, stats
+    finally:
+        if coord is not None:
+            coord.close()
+        listener.close()
+        _reap(procs, threads)
+
+
+def _reap(procs, threads) -> None:
+    for p in procs:
+        if p.poll() is None:
+            p.kill()
+            p.wait()
+    for th in threads:
+        th.join(timeout=1.0)

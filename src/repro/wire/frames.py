@@ -1,0 +1,347 @@
+"""The framed wire codec: length-prefixed messages over a byte stream.
+
+Layout of one frame on the wire (network byte order throughout)::
+
+    [u32 frame_len] [header 30B] [sig utf-8] [body]
+
+    header = magic u16 | version u8 | kind u8 | client_id u32 |
+             origin_round i32 | sigma f32 | weight f32 |
+             sig_len u16 | body_len u32 | crc u32
+
+* ``client_id`` / ``origin_round``: which client produced the payload and
+  in which round -- the dedup key (client id + origin round) and the
+  staleness age source for late frames (``age = t_now - origin_round``).
+* ``sigma`` / ``weight``: the switching phase and the Horvitz--Thompson
+  participation weight *at the origin round* -- exactly the per-entry
+  metadata :class:`repro.engine.StaleBuffer` keeps, so a parked frame
+  merges under the staleness law with its origin-round semantics.
+* ``sig``: the canonical payload kind/shape signature
+  (:func:`payload_signature`) -- a mismatched worker config fails loudly
+  at decode instead of producing silent garbage at reduce.
+* ``crc``: CRC-32 (zlib) over ``sig + body``.  Truncated or corrupted
+  frames raise :class:`FrameError` with the failing check named; the outer
+  length prefix stays authoritative, so one bad frame never desynchronizes
+  the stream.
+
+The body is the payload's leaves serialized as raw little-endian bytes in
+``tree_leaves`` order -- for the bit-packed formats of
+:mod:`repro.comm.payloads` that is the packed uint32 words (and uint16
+block offsets) exactly as the transport produced them, no re-encoding.
+"""
+from __future__ import annotations
+
+import struct
+import zlib
+from typing import NamedTuple, Optional
+
+import numpy as np
+
+from repro.comm.payloads import FlatPacked, FlatQuant
+
+MAGIC = 0xF5ED                    # "FED" with a twist; rejects non-frames
+VERSION = 1
+MAX_FRAME = 1 << 30               # 1 GiB sanity bound on frame_len
+
+# frame kinds ---------------------------------------------------------------
+K_HELLO = 0x01      # worker -> coord: my contiguous client ids (body: stack)
+K_ACTIVATE = 0x02   # coord -> worker: round start (wf, mask, weights, key)
+K_EVAL = 0x03       # worker -> coord: per-client (f, g) eval rows
+K_SIGMA = 0x04      # coord -> worker: switch weight for this round (header)
+K_UPLINK = 0x05     # worker -> coord: ONE client's encoded payload
+K_ROUND_DONE = 0x06  # worker -> coord: all uplinks for this round sent
+K_EF_REQ = 0x07     # coord -> worker: dump your EF residual rows
+K_EF_DUMP = 0x08    # worker -> coord: EF residual rows (body: stack)
+K_EF_LOAD = 0x09    # coord -> worker: restore EF residual rows (resume)
+K_FINISH = 0x0A     # coord -> worker: run over, dump EF and exit
+
+KIND_NAMES = {
+    K_HELLO: "hello", K_ACTIVATE: "activate", K_EVAL: "eval",
+    K_SIGMA: "sigma", K_UPLINK: "uplink", K_ROUND_DONE: "round_done",
+    K_EF_REQ: "ef_req", K_EF_DUMP: "ef_dump", K_EF_LOAD: "ef_load",
+    K_FINISH: "finish",
+}
+
+_HEADER = struct.Struct("!HBBIiffHII")
+HEADER_BYTES = _HEADER.size
+
+
+class FrameError(ValueError):
+    """A frame failed a structural check (truncation, CRC, bad magic...).
+
+    The message names the failing check and the offending values -- wire
+    faults must be actionable, not "struct.error: unpack requires ...".
+    """
+
+
+class FrameHeader(NamedTuple):
+    kind: int
+    client_id: int
+    origin_round: int
+    sigma: float
+    weight: float
+    sig: str
+
+
+# ---------------------------------------------------------------------------
+# Payload (frame body) serialization
+# ---------------------------------------------------------------------------
+# The signature tags the payload container and each leaf's dtype/shape:
+#   flatquant|uint32:138|float32:18       one client's FlatQuant row
+#   flatpacked|float32:40|uint16:40       one client's FlatPacked row
+#   dense|float32:69                      uncompressed delta row
+#   stack|float32:8|float32:8             generic tuple of arrays (control)
+# Dims are 'x'-joined (float32:4x8); a 0-d scalar has an empty dim string.
+
+_TAGS = ("flatpacked", "flatquant", "dense", "stack")
+
+
+def _leaves_and_tag(payload):
+    if isinstance(payload, FlatPacked):
+        return "flatpacked", list(payload)
+    if isinstance(payload, FlatQuant):
+        return "flatquant", list(payload)
+    if isinstance(payload, (tuple, list)):
+        return "stack", list(payload)
+    return "dense", [payload]
+
+
+def _leaf_sig(leaf) -> str:
+    dt = np.dtype(leaf.dtype)
+    dims = "x".join(str(int(s)) for s in leaf.shape)
+    return f"{dt.name}:{dims}"
+
+
+def payload_signature(payload) -> str:
+    """Canonical kind/shape signature of a payload (or a ShapeDtypeStruct
+    pytree of one) -- the frame header's ``sig`` field."""
+    tag, leaves = _leaves_and_tag(payload)
+    return "|".join([tag] + [_leaf_sig(leaf) for leaf in leaves])
+
+
+def _parse_sig(sig: str):
+    parts = sig.split("|")
+    tag = parts[0]
+    if tag not in _TAGS:
+        raise FrameError(
+            f"unknown payload tag {tag!r} in signature {sig!r} "
+            f"(expected one of {_TAGS})")
+    leaves = []
+    for part in parts[1:]:
+        try:
+            name, dims = part.split(":")
+            dtype = np.dtype(name)
+            shape = tuple(int(d) for d in dims.split("x")) if dims else ()
+        except (ValueError, TypeError) as e:
+            raise FrameError(
+                f"malformed leaf {part!r} in signature {sig!r}: {e}") from e
+        leaves.append((dtype, shape))
+    return tag, leaves
+
+
+def pack_payload(payload) -> tuple[str, bytes]:
+    """Serialize a payload to ``(sig, body)``: leaves as raw bytes in
+    field order, shapes recorded in the signature."""
+    tag, leaves = _leaves_and_tag(payload)
+    sig = "|".join([tag] + [_leaf_sig(leaf) for leaf in leaves])
+    body = b"".join(
+        np.ascontiguousarray(np.asarray(leaf)).tobytes() for leaf in leaves)
+    return sig, body
+
+
+def unpack_payload(sig: str, body: bytes):
+    """Inverse of :func:`pack_payload`: rebuild the payload (numpy leaves)
+    from its signature and body bytes.  Bit-exact: the reconstructed leaves
+    are views over the received buffer, byte-for-byte what was sent."""
+    tag, leaf_sigs = _parse_sig(sig)
+    want = sum(dt.itemsize * int(np.prod(shape, dtype=np.int64))
+               for dt, shape in leaf_sigs)
+    if len(body) != want:
+        raise FrameError(
+            f"payload body length mismatch for signature {sig!r}: "
+            f"expected {want} bytes, got {len(body)} (truncated frame?)")
+    arrays, off = [], 0
+    for dt, shape in leaf_sigs:
+        size = dt.itemsize * int(np.prod(shape, dtype=np.int64))
+        arr = np.frombuffer(body, dtype=dt, count=int(
+            np.prod(shape, dtype=np.int64)), offset=off).reshape(shape)
+        arrays.append(arr)
+        off += size
+    if tag == "flatpacked":
+        if len(arrays) != 2:
+            raise FrameError(f"flatpacked payload needs 2 leaves, "
+                             f"signature {sig!r} has {len(arrays)}")
+        return FlatPacked(*arrays)
+    if tag == "flatquant":
+        if len(arrays) != 2:
+            raise FrameError(f"flatquant payload needs 2 leaves, "
+                             f"signature {sig!r} has {len(arrays)}")
+        return FlatQuant(*arrays)
+    if tag == "dense":
+        if len(arrays) != 1:
+            raise FrameError(f"dense payload needs 1 leaf, "
+                             f"signature {sig!r} has {len(arrays)}")
+        return arrays[0]
+    return tuple(arrays)
+
+
+def row_signature(params, cfg) -> str:
+    """The payload signature of ONE client's uplink message row under this
+    process's transport config -- what every K_UPLINK frame from a
+    correctly-configured worker must carry.
+
+    Computed via ``jax.eval_shape`` over the uplink encode (no FLOPs), then
+    stripped of the leading client axis.  This is the expected side of the
+    `buffer_from_wire` / coordinator decode validation: compare against a
+    frame's header sig and fail loudly on mismatch.
+    """
+    import jax
+
+    from repro.engine import async_rounds
+
+    msgs = async_rounds.wire_msg_struct(params, cfg)
+    row_struct = jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape[1:], s.dtype), msgs)
+    if isinstance(row_struct, (FlatPacked, FlatQuant)):
+        return payload_signature(row_struct)
+    leaves = jax.tree_util.tree_leaves(row_struct)
+    return payload_signature(leaves[0] if len(leaves) == 1
+                             else tuple(leaves))
+
+
+# ---------------------------------------------------------------------------
+# Frame encode / decode
+# ---------------------------------------------------------------------------
+
+def encode_frame(kind: int, body: bytes = b"", *, client_id: int = 0,
+                 origin_round: int = 0, sigma: float = 0.0,
+                 weight: float = 0.0, sig: str = "") -> bytes:
+    """One frame's bytes (header + sig + body), WITHOUT the outer length
+    prefix -- :func:`write_frame` adds it at send time."""
+    sig_b = sig.encode("utf-8")
+    if len(sig_b) > 0xFFFF:
+        raise FrameError(f"payload signature too long ({len(sig_b)} bytes; "
+                         "the sig_len field is uint16)")
+    crc = zlib.crc32(sig_b + body) & 0xFFFFFFFF
+    header = _HEADER.pack(MAGIC, VERSION, kind, client_id & 0xFFFFFFFF,
+                          origin_round, float(sigma), float(weight),
+                          len(sig_b), len(body), crc)
+    return header + sig_b + body
+
+
+def decode_frame(data: bytes) -> tuple[FrameHeader, bytes]:
+    """Parse and validate one frame's bytes.  Raises :class:`FrameError`
+    naming the failing check on truncation, bad magic/version, length
+    mismatch, or CRC failure."""
+    if len(data) < HEADER_BYTES:
+        raise FrameError(
+            f"truncated frame: {len(data)} bytes is shorter than the "
+            f"{HEADER_BYTES}-byte header")
+    (magic, version, kind, client_id, origin_round, sigma, weight,
+     sig_len, body_len, crc) = _HEADER.unpack_from(data)
+    if magic != MAGIC:
+        raise FrameError(f"bad magic 0x{magic:04X} (expected 0x{MAGIC:04X}) "
+                         "-- not a repro.wire frame, or stream desync")
+    if version != VERSION:
+        raise FrameError(f"frame version {version} unsupported "
+                         f"(this process speaks version {VERSION})")
+    want = HEADER_BYTES + sig_len + body_len
+    if len(data) < want:
+        raise FrameError(
+            f"truncated frame: header claims {sig_len}B sig + {body_len}B "
+            f"body ({want}B total), got {len(data)}B on the wire")
+    if len(data) > want:
+        raise FrameError(
+            f"oversized frame: header claims {want}B total, got "
+            f"{len(data)}B on the wire")
+    sig_b = data[HEADER_BYTES:HEADER_BYTES + sig_len]
+    body = data[HEADER_BYTES + sig_len:want]
+    got_crc = zlib.crc32(sig_b + body) & 0xFFFFFFFF
+    if got_crc != crc:
+        raise FrameError(
+            f"CRC mismatch on {KIND_NAMES.get(kind, hex(kind))} frame "
+            f"(client {client_id}, round {origin_round}): header says "
+            f"0x{crc:08X}, payload hashes to 0x{got_crc:08X} -- frame "
+            "corrupted in transit, rejecting")
+    try:
+        sig = sig_b.decode("utf-8")
+    except UnicodeDecodeError as e:
+        raise FrameError(f"payload signature is not valid utf-8: {e}") from e
+    return FrameHeader(kind, client_id, origin_round, sigma, weight,
+                       sig), body
+
+
+# ---------------------------------------------------------------------------
+# Stream I/O
+# ---------------------------------------------------------------------------
+
+_LEN = struct.Struct("!I")
+
+
+def write_frame(sock, frame: bytes) -> int:
+    """Send one encoded frame with its length prefix; returns bytes sent."""
+    data = _LEN.pack(len(frame)) + frame
+    sock.sendall(data)
+    return len(data)
+
+
+def _recv_exact(sock, n: int) -> Optional[bytes]:
+    """Read exactly n bytes; None on clean EOF at a frame boundary."""
+    chunks, got = [], 0
+    while got < n:
+        chunk = sock.recv(min(n - got, 1 << 20))
+        if not chunk:
+            if got == 0:
+                return None
+            raise FrameError(
+                f"connection closed mid-frame ({got}/{n} bytes read)")
+        chunks.append(chunk)
+        got += len(chunk)
+    return b"".join(chunks)
+
+
+def read_frame(sock) -> Optional[tuple[FrameHeader, bytes, int]]:
+    """Blocking read of one frame: ``(header, body, wire_bytes)`` or None on
+    clean EOF.  Raises :class:`FrameError` on a malformed frame."""
+    raw = _recv_exact(sock, _LEN.size)
+    if raw is None:
+        return None
+    (frame_len,) = _LEN.unpack(raw)
+    if frame_len > MAX_FRAME:
+        raise FrameError(f"frame length {frame_len} exceeds the "
+                         f"{MAX_FRAME}-byte bound (stream desync?)")
+    data = _recv_exact(sock, frame_len)
+    if data is None:
+        raise FrameError("connection closed between length prefix and frame")
+    header, body = decode_frame(data)
+    return header, body, _LEN.size + frame_len
+
+
+class FrameReader:
+    """Incremental frame extraction over a non-blocking socket: feed raw
+    bytes in, pull complete ``(header-bytes,)`` frames out.  The coordinator
+    uses one per worker connection so a slow sender never blocks the
+    collection loop; malformed frames surface as :class:`FrameError` from
+    the caller's ``decode_frame`` without desynchronizing the stream."""
+
+    def __init__(self):
+        self._buf = bytearray()
+
+    def feed(self, data: bytes) -> None:
+        self._buf.extend(data)
+
+    def frames(self):
+        """Yield the raw bytes of each complete frame buffered so far."""
+        while True:
+            if len(self._buf) < _LEN.size:
+                return
+            (frame_len,) = _LEN.unpack_from(self._buf)
+            if frame_len > MAX_FRAME:
+                raise FrameError(
+                    f"frame length {frame_len} exceeds the {MAX_FRAME}-byte "
+                    "bound (stream desync?)")
+            total = _LEN.size + frame_len
+            if len(self._buf) < total:
+                return
+            data = bytes(self._buf[_LEN.size:total])
+            del self._buf[:total]
+            yield data

@@ -1,0 +1,254 @@
+"""The wire client worker: one process (or thread) holding a contiguous
+range of clients, speaking the frame protocol to the coordinator.
+
+Per round the worker is driven entirely by coordinator frames:
+
+1. ``ACTIVATE`` (round t): carries the flat model buffer ``wf``, this
+   worker's clients' participation mask bits and HT weights, and the
+   round's uplink PRNG key.  The worker evaluates ALL its clients'
+   ``(f_j, g_j)`` through :func:`repro.engine.rounds.eval_clients` -- the
+   same helper the single-process round runs, over the same rows -- and
+   replies with one ``EVAL`` frame.
+2. ``SIGMA``: the switch weight computed by the coordinator from the
+   global eval.  The worker runs the E local steps for its *sampled*
+   clients (:func:`repro.engine.rounds.local_deltas`), EF14-encodes them
+   through ``FlatTransport._ef_clients`` with per-client PRNG keys derived
+   from the GLOBAL client ids (``jnp.take(split(k_up, n), gids)`` -- the
+   gather path's exact key law, so randk streams match the oracle
+   bit-for-bit), updates its local EF residual rows, and ships one
+   ``UPLINK`` frame per sampled client followed by ``ROUND_DONE``.
+3. ``EF_REQ`` / ``FINISH``: dump the EF residual rows (checkpointing /
+   final parity assertion); ``EF_LOAD`` restores them on coordinator
+   resume.
+
+Bit-parity note: each per-round stage runs as ONE jitted function whose
+body is the same stage-helper composition as the oracle's round program,
+so XLA sees the same per-row subgraphs it pinned equal across the
+mask/gather/flat program variants.
+
+CLI (spawned by the coordinator)::
+
+    python -m repro.wire.worker --connect 127.0.0.1:PORT --problem np \\
+        --fed '<json>' --workers 2 --worker-id 0 [--chaos '<json>']
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import socket
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.comm import flat
+from repro.engine import participation, rounds, strategies
+from repro.sharding import partition
+from repro.wire import bootstrap, frames, testing
+
+tree_map = jax.tree_util.tree_map
+
+
+def client_range(n: int, workers: int, worker_id: int) -> tuple[int, int]:
+    """Contiguous ``[lo, hi)`` client-id range for one worker (remainder
+    clients go to the leading workers)."""
+    if not (0 <= worker_id < workers):
+        raise ValueError(f"worker_id {worker_id} outside [0, {workers})")
+    base, rem = divmod(n, workers)
+    lo = worker_id * base + min(worker_id, rem)
+    hi = lo + base + (1 if worker_id < rem else 0)
+    return lo, hi
+
+
+def _row(tree, i: int):
+    return tree_map(lambda x: np.asarray(x[i]), tree)
+
+
+class Worker:
+    """The per-process worker state machine (see module docstring).
+
+    Built either from in-memory objects (thread spawn, tests) or via
+    :func:`run_worker` from CLI arguments (process spawn)."""
+
+    def __init__(self, params, fed, batch_rows, loss_pair, gids,
+                 chaos: Optional[dict] = None, chaos_seed: int = 0):
+        self.fed = fed
+        self.loss_pair = loss_pair
+        self.gids = np.asarray(gids, np.int64)
+        self.batch_rows = batch_rows
+        self.spec = flat.spec_of(params)
+        self.uplink, _ = flat.flat_transports_for(fed, self.spec)
+        self.strat = strategies.get_strategy(fed.strategy)
+        self.chaos = chaos
+        self.chaos_seed = chaos_seed
+        self.e_rows = None
+        if self.uplink.needs_residual:
+            self.e_rows = jnp.zeros((len(self.gids), self.spec.d),
+                                    self.spec.dtype)
+        self._eval_fn = jax.jit(self._eval_impl)
+        self._delta_fns = {}        # m_local -> jitted delta+encode stage
+
+    # -- jitted stages ------------------------------------------------------
+
+    def _eval_impl(self, wf, batch_rows):
+        w = flat.unflatten(self.spec, wf)
+        return rounds.eval_clients(w, batch_rows, self.loss_pair, self.fed)
+
+    def _delta_impl(self, wf, sigma, local_b, e_part, key, gids_sel):
+        deltas = rounds.local_deltas(wf, self.spec, self.strat, sigma,
+                                     local_b, self.loss_pair, self.fed)
+        deltas = partition.constrain_flat(
+            partition.constrain_leading(deltas, "client"))
+        if self.uplink.is_identity:
+            return deltas, e_part
+        keys = None
+        if self.uplink.needs_key:
+            keys = jnp.take(jax.random.split(key, self.fed.n_clients),
+                            gids_sel, axis=0)
+        msgs, e_stack = self.uplink._ef_clients(e_part, deltas, key,
+                                                keys=keys)
+        if e_stack is not None and e_part is not None:
+            e_stack = partition.constrain_leading(e_stack, "client")
+        return msgs, e_stack
+
+    def _delta_fn(self, m_local: int):
+        if m_local not in self._delta_fns:
+            self._delta_fns[m_local] = jax.jit(self._delta_impl)
+        return self._delta_fns[m_local]
+
+    # -- the protocol loop --------------------------------------------------
+
+    def run(self, sock) -> None:
+        link = testing.make_link(sock, self.chaos, seed=self.chaos_seed)
+        self.link = link        # exposed for fault-injection ground truth
+        sig, body = frames.pack_payload(self.gids.astype(np.int64))
+        frames.write_frame(sock, frames.encode_frame(
+            frames.K_HELLO, body, client_id=int(self.gids[0]), sig=sig))
+        wf = mask_rows = weight_rows = k_up = None
+        t = -1
+        while True:
+            got = frames.read_frame(sock)
+            if got is None:
+                return                      # coordinator went away
+            header, body, _ = got
+            if header.kind == frames.K_FINISH:
+                self._send_ef(sock, t)
+                link.drain()
+                return
+            if header.kind == frames.K_EF_REQ:
+                self._send_ef(sock, t)
+            elif header.kind == frames.K_EF_LOAD:
+                rows = frames.unpack_payload(header.sig, body)
+                self.e_rows = jnp.asarray(rows)
+            elif header.kind == frames.K_ACTIVATE:
+                t = header.origin_round
+                wf_np, mask_rows, weight_rows, key_np = \
+                    frames.unpack_payload(header.sig, body)
+                wf = jnp.asarray(wf_np)
+                k_up = jnp.asarray(key_np)
+                f_ev, g_ev = self._eval_fn(wf, self.batch_rows)
+                sig, ebody = frames.pack_payload(
+                    (np.asarray(f_ev), np.asarray(g_ev)))
+                frames.write_frame(sock, frames.encode_frame(
+                    frames.K_EVAL, ebody, client_id=int(self.gids[0]),
+                    origin_round=t, sig=sig))
+            elif header.kind == frames.K_SIGMA:
+                self._uplink_round(sock, link, t, wf, header.sigma,
+                                   mask_rows, weight_rows, k_up)
+            else:
+                raise frames.FrameError(
+                    f"worker received unexpected "
+                    f"{frames.KIND_NAMES.get(header.kind, hex(header.kind))} "
+                    f"frame (round {header.origin_round})")
+
+    def _uplink_round(self, sock, link, t, wf, sigma, mask_rows,
+                      weight_rows, k_up) -> None:
+        lidx = np.flatnonzero(np.asarray(mask_rows) > 0)
+        if len(lidx):
+            # pad the row batch to exactly m (the oracle's gather batch
+            # shape) by repeating the last sampled row: per-row values in
+            # the delta/EF stage are batch-SIZE dependent on CPU XLA (odd
+            # sizes hit a different vectorization remainder path, last-ulp
+            # reassociation in the feature reductions), but batch-CONTENT
+            # independent -- so computing in the oracle's shape and slicing
+            # the first k rows reproduces its bits exactly.  Bonus: one
+            # compiled delta program per worker, never a per-split retrace.
+            k, m = len(lidx), self.fed.m
+            pidx = np.concatenate(
+                [lidx, np.full(m - k, lidx[-1], lidx.dtype)])
+            local_b = tree_map(lambda x: jnp.asarray(x)[pidx],
+                               self.batch_rows)
+            e_part = None if self.e_rows is None else self.e_rows[pidx]
+            gids_sel = jnp.asarray(self.gids[pidx], jnp.int32)
+            msgs, e_stack = self._delta_fn(m)(
+                wf, jnp.float32(sigma), local_b, e_part, k_up, gids_sel)
+            if self.e_rows is not None and e_stack is not None:
+                self.e_rows = self.e_rows.at[lidx].set(e_stack[:k])
+            for i, li in enumerate(lidx):
+                sig, body = frames.pack_payload(_row(msgs, i))
+                link.send(frames.encode_frame(
+                    frames.K_UPLINK, body, client_id=int(self.gids[li]),
+                    origin_round=t, sigma=float(sigma),
+                    weight=float(np.asarray(weight_rows)[li]), sig=sig),
+                    t, int(self.gids[li]))
+        # flush unconditionally: chaos-held frames from earlier rounds must
+        # release even on rounds where none of this worker's clients sampled
+        link.flush(t)
+        frames.write_frame(sock, frames.encode_frame(
+            frames.K_ROUND_DONE, client_id=int(self.gids[0]),
+            origin_round=t))
+
+    def _send_ef(self, sock, t: int) -> None:
+        if self.e_rows is None:
+            frames.write_frame(sock, frames.encode_frame(
+                frames.K_EF_DUMP, client_id=int(self.gids[0]),
+                origin_round=t))
+            return
+        sig, body = frames.pack_payload(np.asarray(self.e_rows))
+        frames.write_frame(sock, frames.encode_frame(
+            frames.K_EF_DUMP, body, client_id=int(self.gids[0]),
+            origin_round=t, sig=sig))
+
+
+def run_worker(host: str, port: int, problem: str, problem_args: dict,
+               fed, workers: int, worker_id: int,
+               chaos: Optional[dict] = None) -> None:
+    """Bootstrap the shared problem, slice this worker's client rows, and
+    run the protocol loop against ``host:port``."""
+    params, batches, loss_pair = bootstrap.build_problem(
+        problem, dict(problem_args or {}, n_clients=fed.n_clients))
+    lo, hi = client_range(fed.n_clients, workers, worker_id)
+    batch_rows = tree_map(lambda x: x[lo:hi], batches)
+    worker = Worker(params, fed, batch_rows, loss_pair,
+                    np.arange(lo, hi), chaos=chaos,
+                    chaos_seed=worker_id)
+    with socket.create_connection((host, port)) as sock:
+        sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        worker.run(sock)
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description="repro.wire client worker")
+    ap.add_argument("--connect", required=True, metavar="HOST:PORT")
+    ap.add_argument("--problem", default="np",
+                    help=f"bootstrap problem ({bootstrap.problem_names()})")
+    ap.add_argument("--problem-args", default="{}",
+                    help="JSON args for the problem builder")
+    ap.add_argument("--fed", required=True,
+                    help="FedConfig JSON (bootstrap.fed_to_json)")
+    ap.add_argument("--workers", type=int, required=True)
+    ap.add_argument("--worker-id", type=int, required=True)
+    ap.add_argument("--chaos", default=None,
+                    help="JSON fault-injection spec (repro.wire.testing)")
+    args = ap.parse_args(argv)
+    host, port = args.connect.rsplit(":", 1)
+    run_worker(host, int(port), args.problem,
+               json.loads(args.problem_args),
+               bootstrap.fed_from_json(args.fed),
+               args.workers, args.worker_id,
+               chaos=json.loads(args.chaos) if args.chaos else None)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,412 @@
+"""Cross-process wire tests (ISSUE 9, DESIGN.md §Wire).
+
+* frame-codec property tests (hypothesis; the deterministic shim when the
+  real package is absent): payload round-trips for every payload kind over
+  word- and non-word-multiple block geometries, header field extremes, and
+  the loud-failure paths (truncation, corruption, bad magic, oversize),
+* differential parity: 2-worker ``wire_drive`` over real loopback sockets
+  is BIT-identical -- state (w, x, e_up, key) and every metric field -- to
+  the single-process ``rounds.drive`` oracle across the pinned strategy x
+  compressor matrix, with arrival order forced both ways (direct and
+  chaos-reordered),
+* fault injection (``repro.wire.testing.ChaosLink``): duplicated frames
+  are idempotent (dedup by client id + origin round, parity preserved),
+  dropped frames surface as per-round ``missing`` counts, truncated /
+  CRC-corrupted frames are rejected with actionable errors while the run
+  completes, and delayed frames park in the StaleBuffer with their
+  origin-round age and merge under the staleness law,
+* payload-signature validation: a frame or buffer sidecar encoded under a
+  different transport config fails loudly, naming both signatures,
+* coordinator checkpoint/restart: resuming from the sidecar continues the
+  oracle trajectory bit-for-bit.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro import checkpoint
+from repro.comm import flat
+from repro.comm.payloads import FlatPacked, FlatQuant
+from repro.configs.base import (CompressorConfig, FedConfig, ObsConfig,
+                                SwitchConfig)
+from repro.engine import async_rounds, rounds
+from repro.wire import bootstrap, coordinator, frames, testing
+from repro.wire.coordinator import validate_wire_cfg, wire_drive
+from repro.wire.worker import client_range
+
+tree_leaves = jax.tree_util.tree_leaves
+
+N = 8
+T = 3
+
+KINDS = {
+    "quant4": CompressorConfig(kind="quant", bits=4, block=8),
+    "topk": CompressorConfig(kind="topk", ratio=0.25, block=8),
+}
+
+
+def _cfg(strategy="fedsgm", uplink="quant4", **kw):
+    mode = "hard" if strategy == "fedsgm" else "soft"
+    base = dict(n_clients=N, m=4, local_steps=2, lr=0.1, strategy=strategy,
+                switch=SwitchConfig(mode=mode, eps=0.35, beta=2.0),
+                uplink=KINDS[uplink], downlink=CompressorConfig(kind="none"),
+                participation="gather", full_eval=True, lean_metrics=True,
+                comm="packed")
+    base.update(kw)
+    return FedConfig(**base)
+
+
+def _oracle(fed, T):
+    params, batches, loss_pair = bootstrap.build_problem(
+        "np", {"n_clients": fed.n_clients})
+    return rounds.drive(rounds.init_state(params, fed), batches,
+                        loss_pair, fed, T)
+
+
+def _assert_state_equal(st_o, st_w, label):
+    for name in ("w", "x", "e_up"):
+        a, b = getattr(st_o, name), getattr(st_w, name)
+        assert (a is None) == (b is None), f"{label}: state.{name} presence"
+        for x, y in zip(tree_leaves(a), tree_leaves(b)):
+            x, y = np.asarray(x), np.asarray(y)
+            assert np.array_equal(x, y), \
+                f"{label}: state.{name} differs, max|d|={np.abs(x - y).max()}"
+    assert np.array_equal(np.asarray(st_o.key), np.asarray(st_w.key)), \
+        f"{label}: state.key differs"
+
+
+def _assert_metrics_equal(mets_o, mets_w, label, rows=None):
+    for fname in ("f", "g_hat", "g_full", "sigma", "feasible", "f_full"):
+        a = np.asarray(getattr(mets_o, fname))
+        b = np.asarray(getattr(mets_w, fname))
+        if rows is not None:
+            a = a[rows]
+        assert np.array_equal(a, b), \
+            f"{label}: metrics.{fname} {a} vs {b}"
+
+
+# ---------------------------------------------------------------------------
+# Frame codec: property round-trips + loud failures
+# ---------------------------------------------------------------------------
+
+class TestFrameCodec:
+    @settings(max_examples=20, deadline=None)
+    @given(kind=st.sampled_from(["flatpacked", "flatquant", "dense",
+                                 "stack"]),
+           words=st.integers(1, 64), blocks=st.integers(1, 16),
+           seed=st.integers(0, 2**16))
+    def test_payload_roundtrip(self, kind, words, blocks, seed):
+        rng = np.random.default_rng(seed)
+        if kind == "flatpacked":
+            payload = FlatPacked(
+                rng.random(blocks, np.float64).astype(np.float32),
+                rng.integers(0, 2**16, blocks).astype(np.uint16))
+        elif kind == "flatquant":
+            payload = FlatQuant(
+                rng.integers(0, 2**32, words, dtype=np.uint32),
+                rng.random(2 * blocks, np.float64).astype(np.float32))
+        elif kind == "dense":
+            payload = rng.random(words, np.float64).astype(np.float32)
+        else:
+            payload = (rng.integers(0, 2**32, words, dtype=np.uint32),
+                       rng.random((blocks, 3), np.float64).astype(
+                           np.float32))
+        sig, body = frames.pack_payload(payload)
+        out = frames.unpack_payload(sig, body)
+        assert type(out).__name__ == type(payload).__name__ or \
+            kind in ("dense", "stack")
+        for a, b in zip(tree_leaves(payload), tree_leaves(out)):
+            assert np.asarray(a).dtype == np.asarray(b).dtype
+            assert np.array_equal(np.asarray(a), np.asarray(b))
+
+    @settings(max_examples=20, deadline=None)
+    @given(bits=st.sampled_from([2, 4, 8]), d=st.sampled_from([64, 69]),
+           seed=st.integers(0, 2**16))
+    def test_transport_row_roundtrip(self, bits, d, seed):
+        """The real packed transport rows -- every quantizer width over a
+        word-multiple (64) and non-word-multiple (69) buffer -- survive the
+        frame codec byte-for-byte."""
+        cfg = dataclasses.replace(
+            _cfg(), uplink=CompressorConfig(kind="quant", bits=bits,
+                                            block=8))
+        params = {"w": jnp.asarray(
+            np.random.default_rng(seed).standard_normal(d), jnp.float32)}
+        uplink, _ = flat.flat_transports_for(cfg, flat.spec_of(params))
+        delta = jnp.asarray(
+            np.random.default_rng(seed + 1).standard_normal((1, d)),
+            jnp.float32)
+        key = jax.random.PRNGKey(seed)
+        msgs, _ = uplink._ef_clients(jnp.zeros((1, d), jnp.float32), delta,
+                                     key, keys=None)
+        row = jax.tree_util.tree_map(lambda x: np.asarray(x[0]), msgs)
+        sig, body = frames.pack_payload(row)
+        out = frames.unpack_payload(sig, body)
+        for a, b in zip(tree_leaves(row), tree_leaves(out)):
+            assert np.array_equal(np.asarray(a), np.asarray(b))
+
+    @settings(max_examples=20, deadline=None)
+    @given(client_id=st.sampled_from([0, 1, 2**31, 2**32 - 1]),
+           origin_round=st.sampled_from([-2**31, -1, 0, 7, 2**31 - 1]),
+           sigma=st.floats(0.0, 1.0), weight=st.floats(0.0, 8.0),
+           kind=st.sampled_from(sorted(frames.KIND_NAMES)))
+    def test_header_roundtrip(self, client_id, origin_round, sigma, weight,
+                              kind):
+        raw = frames.encode_frame(kind, b"\x01\x02", client_id=client_id,
+                                  origin_round=origin_round, sigma=sigma,
+                                  weight=weight, sig="dense|uint8:2")
+        header, body = frames.decode_frame(raw)
+        assert header.kind == kind
+        assert header.client_id == client_id
+        assert header.origin_round == origin_round
+        assert header.sigma == np.float32(sigma)
+        assert header.weight == np.float32(weight)
+        assert header.sig == "dense|uint8:2"
+        assert body == b"\x01\x02"
+
+    def test_truncated_frame_rejected(self):
+        raw = frames.encode_frame(frames.K_UPLINK, b"\x00" * 16,
+                                  client_id=3, sig="dense|uint8:16")
+        with pytest.raises(frames.FrameError, match="truncated"):
+            frames.decode_frame(testing.truncate_frame(raw, cut=4))
+
+    def test_corrupt_frame_rejected_with_crc_detail(self):
+        raw = frames.encode_frame(frames.K_UPLINK, b"\x00" * 16,
+                                  client_id=3, origin_round=5,
+                                  sig="dense|uint8:16")
+        with pytest.raises(frames.FrameError,
+                           match="CRC mismatch.*client 3.*round 5"):
+            frames.decode_frame(testing.corrupt_frame(raw))
+
+    def test_bad_magic_rejected(self):
+        raw = bytearray(frames.encode_frame(frames.K_HELLO))
+        raw[0] ^= 0xFF
+        with pytest.raises(frames.FrameError, match="magic"):
+            frames.decode_frame(bytes(raw))
+
+    def test_oversized_frame_rejected(self):
+        raw = frames.encode_frame(frames.K_HELLO) + b"trailing-junk"
+        with pytest.raises(frames.FrameError, match="oversized"):
+            frames.decode_frame(raw)
+
+    def test_unknown_payload_tag_rejected(self):
+        with pytest.raises(frames.FrameError, match="unknown payload tag"):
+            frames.unpack_payload("mystery|float32:4", b"\x00" * 16)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 64), workers=st.integers(1, 8))
+def test_client_ranges_tile(n, workers):
+    workers = min(workers, n)
+    ranges = [client_range(n, workers, i) for i in range(workers)]
+    ids = np.concatenate([np.arange(lo, hi) for lo, hi in ranges])
+    assert np.array_equal(ids, np.arange(n))
+
+
+# ---------------------------------------------------------------------------
+# Payload-signature validation (satellite fix pin)
+# ---------------------------------------------------------------------------
+
+class TestSignatureValidation:
+    def test_buffer_from_wire_names_both_signatures(self):
+        fed = _cfg(uplink="quant4")
+        other = dataclasses.replace(
+            fed, uplink=CompressorConfig(kind="quant", bits=8, block=8))
+        params, _, _ = bootstrap.build_problem("np", {"n_clients": N})
+        ours = frames.row_signature(params, fed)
+        theirs = frames.row_signature(params, other)
+        assert ours != theirs
+        with pytest.raises(ValueError) as err:
+            async_rounds.buffer_from_wire(None, params, fed, sig=theirs)
+        msg = str(err.value)
+        assert ours in msg and theirs in msg
+        assert "cfg.uplink" in msg
+
+    def test_coordinator_rejects_mismatched_uplink_sig(self):
+        """A frame whose payload signature disagrees with this process's
+        transport config must fail loudly before any decode/merge."""
+        fed = _cfg(uplink="quant4")
+        params, _, _ = bootstrap.build_problem("np", {"n_clients": N})
+        coord = coordinator.Coordinator(params, fed)
+        bad = frames.FrameHeader(
+            kind=frames.K_UPLINK, client_id=0, origin_round=0, sigma=0.0,
+            weight=1.0, sig="dense|float32:69")
+        with pytest.raises(ValueError, match="signature mismatch"):
+            coord._on_uplink(bad, b"\x00" * (69 * 4), None)
+
+    def test_validate_wire_cfg_lists_every_violation(self):
+        fed = _cfg()
+        bad = dataclasses.replace(fed, participation="mask",
+                                  full_eval=False,
+                                  obs=ObsConfig(enabled=True))
+        with pytest.raises(ValueError) as err:
+            validate_wire_cfg(bad)
+        msg = str(err.value)
+        assert "participation" in msg
+        assert "full_eval" in msg
+        assert "obs.enabled" in msg
+        validate_wire_cfg(fed)        # the pinned surface passes
+
+
+# ---------------------------------------------------------------------------
+# Differential parity: wire == single-process oracle, bit for bit
+# ---------------------------------------------------------------------------
+
+class TestWireParity:
+    @pytest.mark.parametrize("order", ["direct", "reordered"])
+    def test_two_worker_thread_parity(self, order):
+        """The pinned fast case (fedsgm x quant4-packed), with frame
+        arrival order forced both ways: chaos reorder shuffles every
+        round's uplink frames, so parity cannot depend on arrival order."""
+        fed = _cfg()
+        st_o, mets_o = _oracle(fed, T)
+        chaos = {"reorder": True} if order == "reordered" else None
+        st_w, mets_w, stats = wire_drive(fed, T, workers=2, spawn="thread",
+                                         chaos=chaos, deadline=60.0)
+        _assert_state_equal(st_o, st_w, order)
+        _assert_metrics_equal(mets_o, mets_w, order)
+        assert stats.totals["missing"] == 0
+        assert stats.totals["rejected"] == 0
+
+    def test_two_worker_subprocess_parity(self):
+        """Real ``python -c`` worker subprocesses over loopback TCP."""
+        fed = _cfg()
+        st_o, mets_o = _oracle(fed, T)
+        st_w, mets_w, stats = wire_drive(fed, T, workers=2,
+                                         spawn="process", deadline=120.0)
+        _assert_state_equal(st_o, st_w, "subprocess")
+        _assert_metrics_equal(mets_o, mets_w, "subprocess")
+        assert stats.totals["missing"] == 0
+
+    @pytest.mark.parametrize("strategy", ["fedsgm", "fedsgm-soft"])
+    @pytest.mark.parametrize("uplink", ["quant4", "topk"])
+    def test_parity_matrix_threads(self, strategy, uplink):
+        if (strategy, uplink) == ("fedsgm", "quant4"):
+            pytest.skip("covered by test_two_worker_thread_parity")
+        fed = _cfg(strategy=strategy, uplink=uplink)
+        st_o, mets_o = _oracle(fed, T)
+        st_w, mets_w, _ = wire_drive(fed, T, workers=2, spawn="thread",
+                                     deadline=60.0)
+        _assert_state_equal(st_o, st_w, f"{strategy}/{uplink}")
+        _assert_metrics_equal(mets_o, mets_w, f"{strategy}/{uplink}")
+
+    @pytest.mark.slow
+    @pytest.mark.parametrize("order", ["direct", "reordered"])
+    @pytest.mark.parametrize("strategy", ["fedsgm", "fedsgm-soft"])
+    @pytest.mark.parametrize("uplink", ["quant4", "topk"])
+    def test_parity_matrix_subprocess(self, strategy, uplink, order):
+        """The full pinned matrix over real subprocesses, arrival order
+        forced both ways -- the acceptance matrix of ISSUE 9."""
+        fed = _cfg(strategy=strategy, uplink=uplink)
+        st_o, mets_o = _oracle(fed, T)
+        chaos = {"reorder": True} if order == "reordered" else None
+        st_w, mets_w, _ = wire_drive(fed, T, workers=2, spawn="process",
+                                     chaos=chaos, deadline=120.0)
+        _assert_state_equal(st_o, st_w, f"{strategy}/{uplink}/{order}")
+        _assert_metrics_equal(mets_o, mets_w, f"{strategy}/{uplink}/{order}")
+
+
+# ---------------------------------------------------------------------------
+# Fault injection
+# ---------------------------------------------------------------------------
+
+class TestChaos:
+    def test_duplicated_frames_are_idempotent(self):
+        """dup=1.0 retransmits EVERY uplink frame; dedup by (client id,
+        origin round) must keep the run bit-identical to the oracle."""
+        fed = _cfg()
+        st_o, mets_o = _oracle(fed, T)
+        st_w, mets_w, stats = wire_drive(
+            fed, T, workers=2, spawn="thread", chaos={"dup": 1.0},
+            deadline=60.0)
+        _assert_state_equal(st_o, st_w, "dup")
+        _assert_metrics_equal(mets_o, mets_w, "dup")
+        duped = sum(w.link.duped for w in stats.workers)
+        assert duped > 0
+        assert stats.totals["dup"] == duped
+        assert stats.totals["missing"] == 0
+
+    def test_dropped_frames_count_as_missing(self):
+        fed = _cfg()
+        _, _, stats = wire_drive(
+            fed, T, workers=2, spawn="thread", chaos={"drop": 0.5},
+            deadline=60.0)
+        dropped = sum(w.link.dropped for w in stats.workers)
+        assert dropped > 0
+        assert stats.totals["missing"] == dropped
+        assert len(stats.rounds) == T     # the run completed every round
+
+    @pytest.mark.parametrize("fault", ["truncate", "corrupt"])
+    def test_malformed_frames_rejected_run_completes(self, fault):
+        fed = _cfg()
+        _, mets_w, stats = wire_drive(
+            fed, T, workers=2, spawn="thread", chaos={fault: 1.0},
+            deadline=60.0)
+        counter = {"truncate": "truncated", "corrupt": "corrupted"}[fault]
+        injected = sum(getattr(w.link, counter) for w in stats.workers)
+        assert injected > 0
+        assert stats.totals["rejected"] == injected
+        assert len(stats.rounds) == T
+        assert np.all(np.isfinite(np.asarray(mets_w.f)))
+
+    def test_delayed_frames_park_with_origin_age(self):
+        """delay=1.0 holds every uplink frame one round: each arrives
+        during round t+1, parks in the StaleBuffer with age 1, and merges
+        under the staleness law at the next server step."""
+        fed = _cfg()
+        _, _, stats = wire_drive(
+            fed, T + 2, workers=2, spawn="thread",
+            chaos={"delay": 1.0, "delay_rounds": 1}, deadline=60.0)
+        delayed = sum(w.link.delayed for w in stats.workers)
+        assert delayed > 0
+        assert stats.totals["parked"] > 0
+        assert stats.totals["merged_stale"] > 0
+        assert set(stats.merge_ages) == {1.0}
+        assert all(a <= fed.async_.max_staleness for a in stats.merge_ages)
+        # every round's cohort went missing fresh (all frames held)
+        assert stats.totals["missing"] > 0
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint / restart
+# ---------------------------------------------------------------------------
+
+class TestCheckpointRestart:
+    def test_restart_continues_oracle_trajectory(self, tmp_path):
+        fed = _cfg()
+        ckpt = str(tmp_path / "wire_ckpt")
+        st_o, mets_o = _oracle(fed, 2 * T)
+        _, _, _ = wire_drive(fed, T, workers=2, spawn="thread",
+                             ckpt_dir=ckpt, ckpt_every=T, deadline=60.0)
+        assert checkpoint.latest_round(ckpt) == T
+        st_w, mets_w, _ = wire_drive(fed, 2 * T, workers=2, spawn="thread",
+                                     ckpt_dir=ckpt, resume=True,
+                                     deadline=60.0)
+        _assert_state_equal(st_o, st_w, "restart")
+        # the resumed run's metrics cover rounds [T, 2T)
+        _assert_metrics_equal(mets_o, mets_w, "restart",
+                              rows=slice(T, 2 * T))
+
+    def test_buffer_sidecar_signature_pins_transport(self, tmp_path):
+        """The parked-frame sidecar records its payload signature; restore
+        under a different transport config must fail loudly (the satellite
+        fix: kind/shape threads through ``buffer_from_wire``)."""
+        fed = _cfg(uplink="quant4")
+        other = dataclasses.replace(
+            fed, uplink=CompressorConfig(kind="topk", ratio=0.25, block=8))
+        params, _, _ = bootstrap.build_problem("np", {"n_clients": N})
+        coord = coordinator.Coordinator(params, fed)
+        ckpt = str(tmp_path / "buf_ckpt")
+        checkpoint.save_buffer(ckpt, 5, coord._host_buffer(),
+                               metadata={"payload_sig": coord.row_sig})
+        meta = checkpoint.read_metadata(
+            str(tmp_path / "buf_ckpt" / "round_5_buffer"))
+        assert meta["payload_sig"] == coord.row_sig
+        with pytest.raises(ValueError, match="signature mismatch"):
+            async_rounds.buffer_from_wire(
+                coord._host_buffer(), params, other,
+                sig=meta["payload_sig"])
